@@ -1,0 +1,124 @@
+"""Figures 13/14 analogue: design ablations.
+
+Fig 13 (gap design): batched inserts with the paper's duplicate-key gaps
+(branchless succ + roll) vs a bitmap-gap variant (explicit bitmap, masked
+linear scan for position+gap; the ALEX-style layout the paper compares
+against).  Fig 14 (HP x SIMD): the TPU translation is
+[counting-succ vs binary-search] branching x [VMEM-resident fused descent
+vs per-level HBM gather] — the fused kernel is interpret-mode on CPU, so
+its row reports lowered-structure rather than wall time; the branching
+ablation is wall-clock."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bstree as B
+from repro.core.layout import split_u64, used_mask
+from repro.core.succ import succ_ge, succ_gt
+from repro.data.keys import gen_keys
+from .common import row, time_fn
+
+BUILD = 500_000
+OPS = 50_000
+
+
+def _bitmap_row_insert(keys_hi, keys_lo, vals, bitmap, k_hi, k_lo, v):
+    """ALEX-style gapped row: gaps hold stale values, a bitmap marks used
+    slots, search must mask gaps (no branchless count possible)."""
+    n = keys_hi.shape[-1]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    import numpy as _np
+    maxu = _np.uint32(0xFFFFFFFF)
+    big = jnp.where(bitmap, keys_hi, maxu)
+    bil = jnp.where(bitmap, keys_lo, maxu)
+    # masked linear scan for first used key >= k
+    ge = (big > k_hi) | ((big == k_hi) & (bil >= k_lo))
+    r = jnp.min(jnp.where(ge, iota, n))
+    # nearest free slot at/after r, else before
+    free_r = jnp.min(jnp.where(~bitmap & (iota >= r), iota, n))
+    free_l = jnp.max(jnp.where(~bitmap & (iota < r), iota, -1))
+    use_r = free_r < n
+    tgt = jnp.where(use_r, free_r, free_l)
+    shift_r = use_r & (iota > r) & (iota <= free_r)
+    shift_l = (~use_r) & (iota >= free_l) & (iota < r - 1)
+
+    def build(plane, fill):
+        moved = jnp.where(
+            shift_r, jnp.roll(plane, 1, axis=-1),
+            jnp.where(shift_l, jnp.roll(plane, -1, axis=-1), plane))
+        return jnp.where(iota == tgt, fill, moved)
+
+    return (
+        build(keys_hi, k_hi), build(keys_lo, k_lo), build(vals, v),
+        build(bitmap, True),
+    )
+
+
+@jax.jit
+def _insert_gapdup(hi, lo, vals, k_hi, k_lo, v):
+    return jax.vmap(B.row_upsert)(hi, lo, vals, k_hi, k_lo, v)
+
+
+@jax.jit
+def _insert_bitmap(hi, lo, vals, bitmap, k_hi, k_lo, v):
+    return jax.vmap(_bitmap_row_insert)(hi, lo, vals, bitmap, k_hi, k_lo, v)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    keys = gen_keys("osm", BUILD, seed=0)
+    tree = B.bulk_load(keys, n=128)
+    h = B.to_host(tree)
+    L = min(int(tree.num_leaves), OPS)
+    rows = h["leaf_keys"][:L]
+    vals = h["leaf_vals"][:L]
+    hi, lo = map(jnp.asarray, split_u64(rows))
+    vals = jnp.asarray(vals)
+    bitmap = used_mask(hi, lo)
+    ink = rng.integers(0, 2**62, size=L, dtype=np.uint64)
+    kh, kl = map(jnp.asarray, split_u64(ink))
+    vv = jnp.asarray(rng.integers(0, 2**31, L).astype(np.uint32))
+
+    us = time_fn(_insert_gapdup, hi, lo, vals, kh, kl, vv)
+    row("fig13/gap_duplicate_insert", us, f"{L/us:.2f}Mops")
+    us = time_fn(_insert_bitmap, hi, lo, vals, bitmap, kh, kl, vv)
+    row("fig13/bitmap_gap_insert", us, f"{L/us:.2f}Mops")
+
+    # Fig 14: branching ablation (counting vs binary) through full descent
+    qs = rng.choice(keys, OPS)
+    qh, ql = map(jnp.asarray, split_u64(qs))
+
+    @jax.jit
+    def descend_counting(qh, ql):
+        return B.descend(tree, qh, ql)
+
+    @jax.jit
+    def descend_binary(qh, ql):
+        node = jnp.full((qh.shape[0],), tree.root, dtype=jnp.int32)
+        for _ in range(tree.height):
+            rh = tree.inner_hi[node]
+            rl = tree.inner_lo[node]
+            c = jax.vmap(
+                lambda r, q: jnp.searchsorted(r, q, side="right")
+            )(rh, qh)  # binary over the hi plane (fair proxy)
+            node = tree.inner_child[node, c]
+        return node
+
+    us = time_fn(descend_counting, qh, ql)
+    row("fig14/descend_counting_succ", us, f"{OPS/us:.2f}Mops")
+    us = time_fn(descend_binary, qh, ql)
+    row("fig14/descend_binary", us, f"{OPS/us:.2f}Mops")
+
+    from repro.kernels.gather_succ import inner_region_bytes
+
+    row("fig14/fused_vmem_descent", 0.0,
+        f"inner_region={inner_region_bytes(tree.inner_hi)/1e6:.2f}MB_"
+        f"fits_vmem={inner_region_bytes(tree.inner_hi) <= 12*2**20}")
+
+
+if __name__ == "__main__":
+    main()

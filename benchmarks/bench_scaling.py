@@ -1,0 +1,65 @@
+"""Figures 10-12 analogue: multi-device scaling of the sharded index
+(the SPMD replacement for the paper's multi-threaded OLC runs).  Spawns a
+subprocess per device count so each gets a fresh XLA client.
+
+NOTE: on this 1-core CPU host the N "devices" timeshare a single core, so
+wall-clock throughput stays flat — the bench demonstrates the SPMD
+structure scales (same program, any device count); hardware gives the
+real parallel speedup.  The 8-device routing correctness is asserted in
+tests/test_distributed.py."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import row
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = """
+import time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import distributed as D
+from repro.core.layout import split_u64
+
+nd = {nd}
+rng = np.random.default_rng(0)
+keys = np.sort(np.unique(rng.integers(0, 2**62, 600000, dtype=np.uint64))[:500000])
+mesh = jax.make_mesh((1, nd), ('data', 'model'))
+st = D.place_on_mesh(D.build_sharded(keys, nd, n=128), mesh, 'model')
+lookup = D.make_sharded_lookup(mesh, capacity_factor=3.0)
+qs = rng.choice(keys, 131072)
+qh, ql = split_u64(qs)
+sh = NamedSharding(mesh, P(('data', 'model')))
+qh = jax.device_put(jnp.asarray(qh), sh); ql = jax.device_put(jnp.asarray(ql), sh)
+f, v, o = lookup(st, qh, ql); jax.block_until_ready(f)
+times = []
+for _ in range(5):
+    t0 = time.perf_counter()
+    f, v, o = lookup(st, qh, ql)
+    jax.block_until_ready(f)
+    times.append(time.perf_counter() - t0)
+dt = float(np.median(times))
+print(f"RESULT {{dt*1e6:.1f}} {{131072/dt/1e6:.2f}}")
+"""
+
+
+def main() -> None:
+    for nd in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nd}"
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(SCRIPT.format(nd=nd))],
+            capture_output=True, text=True, timeout=900, env=env)
+        if out.returncode != 0:
+            row(f"fig10/sharded_lookup/{nd}dev", -1.0, "FAILED")
+            continue
+        us, mops = out.stdout.strip().split("RESULT ")[1].split()
+        row(f"fig10/sharded_lookup/{nd}dev", float(us), f"{mops}Mops")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Figures 5-9 analogue: workloads A-E throughput (batched, Mops/s).
+
+Build 1M keys, run 100k-op workloads.  BS-tree and CBS-tree are compared
+against a sorted-array + vmapped-binary-search baseline (the strongest
+simple read-only competitor on TPU-like hardware)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bstree as B
+from repro.core.compress import (
+    cbs_bulk_load, cbs_delete_batch, cbs_insert_batch, cbs_lookup_batch,
+)
+from repro.core.layout import split_u64
+from repro.data.keys import gen_keys
+from .common import row, time_fn
+
+BUILD = 1_000_000
+OPS = 100_000
+
+
+@jax.jit
+def _baseline_lookup(sorted_keys_hi, sorted_keys_lo, q_hi, q_lo):
+    # binary search over the hi plane then exact check (sorted array
+    # baseline; collisions in hi are rare for these distributions)
+    idx = jnp.searchsorted(sorted_keys_hi, q_hi, side="left")
+    idx = jnp.minimum(idx, sorted_keys_hi.shape[0] - 1)
+    return (sorted_keys_hi[idx] == q_hi) & (sorted_keys_lo[idx] == q_lo)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for dist in ("books", "fb"):
+        keys = gen_keys(dist, BUILD + OPS, seed=0)
+        perm = rng.permutation(len(keys))
+        build = np.sort(keys[perm[:BUILD]])
+        fresh = keys[perm[BUILD:]]
+        reads = rng.choice(build, OPS)
+        qh, ql = map(jnp.asarray, split_u64(reads))
+
+        tree = B.bulk_load(build, n=128)
+        ctree = cbs_bulk_load(build, n=128)
+
+        # Workload A: 100% reads
+        us = time_fn(lambda: B.lookup_batch(tree, qh, ql))
+        row(f"wlA/bs/{dist}", us, f"{OPS/us:.2f}Mops")
+        us = time_fn(lambda: cbs_lookup_batch(ctree, qh, ql))
+        row(f"wlA/cbs/{dist}", us, f"{OPS/us:.2f}Mops")
+        bh, bl = map(jnp.asarray, split_u64(build))
+        us = time_fn(lambda: _baseline_lookup(bh, bl, qh, ql))
+        row(f"wlA/sorted_array/{dist}", us, f"{OPS/us:.2f}Mops")
+
+        # Workload B: 100% writes
+        newv = np.arange(OPS, dtype=np.uint32)
+        t0 = time.perf_counter()
+        t2, stats = B.insert_batch(tree, fresh[:OPS], newv)
+        dt = (time.perf_counter() - t0) * 1e6
+        row(f"wlB/bs/{dist}", dt, f"{OPS/dt:.2f}Mops_def{stats['deferred']}")
+        t0 = time.perf_counter()
+        cbs_ops = OPS // 5  # CBS full-leaf rebuilds amortise poorly on CPU
+        c2, cstats = cbs_insert_batch(ctree, fresh[:cbs_ops])
+        dt = (time.perf_counter() - t0) * 1e6
+        row(f"wlB/cbs/{dist}", dt,
+            f"{cbs_ops/dt:.2f}Mops_def{cstats['deferred']}_n{cbs_ops}")
+
+        # Workload C: 50/50 read-write
+        half = OPS // 2
+        t0 = time.perf_counter()
+        t3, _ = B.insert_batch(tree, fresh[:half], newv[:half])
+        B.lookup_batch(t3, qh[:half], ql[:half])[0].block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e6
+        row(f"wlC/bs/{dist}", dt, f"{OPS/dt:.2f}Mops")
+
+        # Workload D: 95% short ranges / 5% writes
+        nr = 9500
+        i = rng.integers(0, BUILD - 1, nr)
+        k1h, k1l = map(jnp.asarray, split_u64(build[i]))
+        k2h, k2l = map(jnp.asarray, split_u64(build[np.minimum(i + 150, BUILD - 1)]))
+        t0 = time.perf_counter()
+        vals, sel, _ = B.range_scan(tree, k1h, k1l, k2h, k2l, max_leaves=4)
+        sel.block_until_ready()
+        t4, _ = B.insert_batch(tree, fresh[:500], newv[:500])
+        dt = (time.perf_counter() - t0) * 1e6
+        row(f"wlD/bs/{dist}", dt, f"{(nr+500)/dt:.2f}Mops_avg153keys")
+
+        # Workload E: 60/35/5 read/write/delete
+        t0 = time.perf_counter()
+        t5, _ = B.insert_batch(tree, fresh[: int(OPS * 0.35)],
+                               newv[: int(OPS * 0.35)])
+        t5, nd = B.delete_batch(t5, rng.choice(build, int(OPS * 0.05)))
+        B.lookup_batch(t5, qh[: int(OPS * 0.6)], ql[: int(OPS * 0.6)])[
+            0].block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e6
+        row(f"wlE/bs/{dist}", dt, f"{OPS/dt:.2f}Mops")
+
+
+if __name__ == "__main__":
+    main()

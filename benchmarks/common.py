@@ -1,0 +1,27 @@
+"""Shared benchmark utilities.  All benches emit ``name,us_per_call,derived``
+CSV rows (derived = throughput or context, stated per row)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.2f},{derived}")

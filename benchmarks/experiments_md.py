@@ -1,0 +1,134 @@
+"""Regenerate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+the dry-run JSONs.  §Perf is hand-written (hypothesis log) and preserved.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.experiments_md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+MARK_BEGIN = "<!-- AUTOGEN:BEGIN (benchmarks/experiments_md.py) -->"
+MARK_END = "<!-- AUTOGEN:END -->"
+
+
+def load(mesh: str):
+    out = []
+    for p in sorted(glob.glob(f"runs/dryrun/{mesh}/*.json")):
+        rec = json.load(open(p))
+        if rec.get("tag"):
+            continue  # §Perf variants live in the hand-written log
+        out.append(rec)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    out.sort(key=lambda r: (r["arch"], order[r["shape"]]))
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_section() -> str:
+    lines = ["## Dry-run (§e)", ""]
+    for mesh, label in (("pod_16x16", "single pod (16x16 = 256 chips)"),
+                        ("multipod_2x16x16", "multi-pod (2x16x16 = 512 chips)")):
+        cells = load(mesh)
+        ok = sum(c["status"] == "ok" for c in cells)
+        skip = sum(c["status"] == "skip" for c in cells)
+        fail = len(cells) - ok - skip
+        lines += [f"### {label}: {ok} compiled OK, {skip} documented skips,"
+                  f" {fail} failures", ""]
+        lines += ["| arch | shape | mode | status | mem/dev GiB | compile s |"
+                  " collectives (static ops) |",
+                  "|---|---|---|---|---|---|---|"]
+        for c in cells:
+            if c["status"] == "skip":
+                lines.append(
+                    f"| {c['arch']} | {c['shape']} | {c['mode']} | SKIP "
+                    f"({c['skip_reason'][:48]}) | — | — | — |")
+                continue
+            mem = fmt_bytes(c["memory"].get("total_bytes_per_device", 0))
+            byop = ", ".join(
+                f"{k}:{v['count']}" for k, v in c["collectives"]["by_op"].items())
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mode']} | ok | {mem} | "
+                f"{c.get('compile_s', 0):.1f} | {byop} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    cells = [c for c in load("pod_16x16")]
+    lines = [
+        "## Roofline (§g) — single pod, 256 chips",
+        "",
+        "Terms in seconds/step/device (v5e-like: 197 TF/s bf16, 819 GB/s "
+        "HBM, 3x50 GB/s ICI).  compute/memory use the analytic cost model "
+        "(HLO cost_analysis counts scan bodies once — see "
+        "launch/roofline.py); collective uses execution-weighted HLO "
+        "parsing (validated exact on a controlled case in "
+        "tests/test_roofline.py).  `frac` = compute/dominant = fraction of "
+        "roofline if the dominant term were eliminated down to compute.",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " frac | 6ND/analytic | one-line diagnosis |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] == "skip":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | — | — | — | SKIP | — | — | "
+                f"{c['skip_reason'][:60]} |")
+            continue
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | FAIL |")
+            continue
+        r = c["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom > 0 else 1.0
+        diag = _diagnose(c)
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {frac:.2f} | "
+            f"{c.get('useful_compute_ratio', 0):.2f} | {diag} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def _diagnose(c) -> str:
+    r = c["roofline"]
+    by = c["collectives"]["by_op"]
+    if r["dominant"] == "collective":
+        top = max(by.items(), key=lambda kv: kv[1]["wire_bytes"])[0] if by else "?"
+        return (f"{top} dominates ({c['collectives']['wire_bytes']/2**40:.2f} "
+                "TiB/dev/step): cut FSDP regathers / fix dispatch sharding")
+    if r["dominant"] == "memory":
+        return "weight+state traffic bound: fuse reads, widen batch"
+    return "compute bound: at roofline if overlap hides collectives"
+
+
+def render(path="EXPERIMENTS.md"):
+    auto = dryrun_section() + "\n" + roofline_section()
+    block = f"{MARK_BEGIN}\n{auto}\n{MARK_END}"
+    if os.path.exists(path):
+        text = open(path).read()
+        if MARK_BEGIN in text:
+            pre = text.split(MARK_BEGIN)[0]
+            post = text.split(MARK_END)[-1]
+            text = pre + block + post
+        else:
+            text = text + "\n" + block + "\n"
+    else:
+        text = block + "\n"
+    open(path, "w").write(text)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    render()
+
+
+if __name__ == "__main__":
+    main()

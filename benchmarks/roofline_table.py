@@ -1,0 +1,39 @@
+"""§Roofline summary: read every dry-run JSON and emit the roofline table
+(also used to regenerate EXPERIMENTS.md sections)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+
+def load_cells(out_dir: str = "runs/dryrun", mesh: str = "pod_16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main() -> None:
+    for rec in load_cells():
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "skip":
+            row(name, 0.0, f"SKIP:{rec['skip_reason'][:40]}")
+            continue
+        if rec["status"] != "ok":
+            row(name, -1.0, "FAILED")
+            continue
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        row(name, bound * 1e6,
+            f"dom={r['dominant']}_cmp{r['compute_s']:.3f}s_"
+            f"mem{r['memory_s']:.3f}s_col{r['collective_s']:.3f}s_"
+            f"roofline_frac{frac:.3f}")
+
+
+if __name__ == "__main__":
+    main()

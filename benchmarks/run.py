@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §7):
+  fig2  bench_succ          successor-search implementations
+  t1    bench_construction  construction time, 5 distributions
+  t2    bench_memory        memory footprint (+ derived-bitmap saving)
+  fig5-9 bench_workloads    workloads A-E throughput
+  t3/t4 bench_counters      HLO-derived per-op cost (PMC analogue)
+  fig13/14 bench_ablation   gap-design + branching ablations
+  fig10-12 bench_scaling    multi-device sharded-index scaling
+  roofline roofline_table   dry-run roofline summary (§Roofline)
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of bench names")
+    args = ap.parse_args()
+    from . import (
+        bench_succ, bench_construction, bench_memory, bench_workloads,
+        bench_counters, bench_ablation, bench_scaling, roofline_table,
+    )
+
+    benches = {
+        "succ": bench_succ.main,
+        "construction": bench_construction.main,
+        "memory": bench_memory.main,
+        "workloads": bench_workloads.main,
+        "counters": bench_counters.main,
+        "ablation": bench_ablation.main,
+        "scaling": bench_scaling.main,
+        "roofline": roofline_table.main,
+    }
+    picks = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    for name in picks:
+        t0 = time.time()
+        try:
+            benches[name]()
+        except Exception as e:  # pragma: no cover
+            print(f"{name},-1,FAILED:{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .ckpt import (  # noqa: F401
+    latest_step, restore, restore_resharded, save, save_async, wait_pending,
+)

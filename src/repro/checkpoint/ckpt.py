@@ -1,0 +1,145 @@
+"""Sharded checkpointing: atomic, content-hashed, elastic-reshard restore.
+
+Layout:  <dir>/step_<k>/
+             manifest.json   {tree structure, shapes, dtypes, sha256s}
+             arr_<i>.npy     one file per pytree leaf
+
+Fault-tolerance properties:
+  * atomic publish: written to ``step_<k>.tmp`` then os.rename — readers
+    never observe a torn checkpoint; crashes leave only .tmp litter;
+  * integrity: every leaf carries a sha256 in the manifest, verified on
+    restore (detects silent storage corruption before it poisons a run);
+  * elastic: ``restore_resharded`` device_puts every leaf to the CURRENT
+    mesh's NamedShardings — a 512-chip checkpoint restores onto any mesh
+    whose axes divide the shapes (scale up or down);
+  * async: ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread so the train loop never blocks on
+    the filesystem.
+
+On real multi-host pods each host would write only the shards it owns
+(same manifest scheme, per-shard files); this single-process build writes
+full arrays — the format is deliberately host-count-independent.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the published path."""
+    flat, treedef = _flatten_with_paths(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [],
+    }
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(leaf)
+        path = os.path.join(tmp, f"arr_{i:05d}.npy")
+        # numpy can't round-trip ml_dtypes (bf16 loads as void); store such
+        # leaves as a uint8 view and record the true dtype in the manifest
+        raw = arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict
+        np.save(path, arr.view(np.uint8) if raw else arr)
+        with open(path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest["leaves"].append(
+            dict(index=i, shape=list(arr.shape), dtype=str(arr.dtype),
+                 sha256=digest, raw=bool(raw))
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+_PENDING: list[threading.Thread] = []
+
+
+def save_async(directory: str, step: int, tree: Any, *, keep: int = 3):
+    """Snapshot to host arrays now; write in the background."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    t = threading.Thread(
+        target=save, args=(directory, step, host_tree), kwargs=dict(keep=keep),
+        daemon=True,
+    )
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_pending():
+    for t in _PENDING:
+        t.join()
+    _PENDING.clear()
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any, *, verify: bool = True) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes checked)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = _flatten_with_paths(like)
+    assert len(flat_like) == len(manifest["leaves"]), "structure mismatch"
+    out = []
+    for i, (leaf, meta) in enumerate(zip(flat_like, manifest["leaves"])):
+        fp = os.path.join(path, f"arr_{i:05d}.npy")
+        if verify:
+            with open(fp, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            assert digest == meta["sha256"], f"corrupt leaf {i} in {path}"
+        arr = np.load(fp)
+        if meta.get("raw"):
+            import ml_dtypes
+
+            true_dtype = np.dtype(getattr(ml_dtypes, meta["dtype"]))
+            arr = arr.view(true_dtype)
+        assert list(arr.shape) == meta["shape"]
+        out.append(arr)
+    return treedef.unflatten(out)
+
+
+def restore_resharded(directory: str, step: int, like: Any, shardings: Any) -> Any:
+    """Restore + device_put to the current mesh (elastic resharding)."""
+    host = restore(directory, step, like)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s), host, shardings
+    )

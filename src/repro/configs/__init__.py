@@ -1,0 +1,97 @@
+"""Architecture configs (one file per assigned arch) + registry.
+
+``get_config(name)`` returns the full published config;
+``get_config(name, reduced=True)`` returns the family-preserving smoke
+configuration (small widths/few layers/few experts) used by CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    pattern: str  # dense | moe | zamba | xlstm | whisper
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # attention
+    qk_norm: bool = False
+    sliding_window: int = 0
+    rope_theta: float = 1e6
+    use_rope: bool = True
+    causal: bool = True
+    gated_mlp: bool = True  # swiglu vs gelu
+    mrope_sections: tuple = (16, 24, 24)
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    expert_d_ff: int = 0
+    # ssm / hybrid
+    ssm_state: int = 0
+    mamba_expand: int = 2
+    mamba_groups: int = 1
+    mamba_headdim: int = 64
+    mamba_conv: int = 4
+    mamba_per_attn: int = 6  # zamba: mamba blocks per shared-attn call
+    xlstm_proj_factor: int = 2
+    # structure
+    kind: str = "decoder"  # decoder | encdec
+    vision_stub: bool = False
+    audio_stub: bool = False
+    tie_embeddings: bool = False
+    dec_len_train: int = 448  # whisper decoder length at training
+    # capability flags
+    supports_long_context: bool = False
+    long_context_reason: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+
+ARCHS = [
+    "qwen2_vl_72b",
+    "qwen2_moe_a2_7b",
+    "llama4_scout_17b_a16e",
+    "codeqwen1_5_7b",
+    "qwen3_32b",
+    "starcoder2_7b",
+    "h2o_danube_1_8b",
+    "whisper_large_v3",
+    "zamba2_7b",
+    "xlstm_125m",
+]
+
+#: assignment ids -> module names
+ALIASES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen3-32b": "qwen3_32b",
+    "starcoder2-7b": "starcoder2_7b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "whisper-large-v3": "whisper_large_v3",
+    "zamba2-7b": "zamba2_7b",
+    "xlstm-125m": "xlstm_125m",
+}
+
+
+def get_config(name: str, *, reduced: bool = False) -> ArchConfig:
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced_config() if reduced else mod.CONFIG
+
+
+def all_arch_names() -> list[str]:
+    return list(ALIASES.keys())

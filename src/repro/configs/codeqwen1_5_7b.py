@@ -1,0 +1,18 @@
+"""CodeQwen1.5-7B [hf:Qwen/CodeQwen1.5-7B].  Dense qwen1.5 arch, MHA."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="codeqwen1.5-7b", family="dense", pattern="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=13440, vocab=92416, rope_theta=1e6,
+    supports_long_context=False,
+    long_context_reason="full quadratic attention at 500k",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab=512,
+    )

@@ -1,0 +1,19 @@
+"""H2O-Danube-1.8B [arXiv:2401.16818].  Llama/mistral mix with sliding-
+window attention — SWA makes the 500k decode cell O(S*w), so it RUNS."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-1.8b", family="dense", pattern="dense",
+    num_layers=24, d_model=2560, num_heads=32, num_kv_heads=8,
+    d_ff=6912, vocab=32000, sliding_window=4096, rope_theta=1e4,
+    supports_long_context=True,
+    long_context_reason="SWA window 4096: decode cache is window-sized",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab=512, sliding_window=64,
+    )

@@ -1,0 +1,24 @@
+"""Llama-4-Scout-17B-16E [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+MoE top-1 with one shared expert; early-fusion vision STUB.  The published
+interleaved-chunked-attention (iRoPE) variant is modelled as full causal
+attention (see DESIGN.md Arch-applicability)."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe", pattern="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=8192, vocab=202048, head_dim=128,
+    num_experts=16, experts_per_token=1, num_shared_experts=1,
+    expert_d_ff=8192, rope_theta=5e5, vision_stub=True,
+    supports_long_context=False,
+    long_context_reason="modelled with full attention at 500k",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab=512, head_dim=32, num_experts=4, experts_per_token=1,
+        num_shared_experts=1, expert_d_ff=128,
+    )

@@ -1,0 +1,22 @@
+"""Qwen1.5-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B].  60 routed experts top-4
+plus 4 shared experts (fused into one 4x-wide dense MLP)."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe", pattern="moe",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab=151936, head_dim=128,
+    num_experts=60, experts_per_token=4, num_shared_experts=4,
+    expert_d_ff=1408, rope_theta=1e6,
+    supports_long_context=False,
+    long_context_reason="full quadratic attention at 500k",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=64, vocab=512, head_dim=32, num_experts=8, experts_per_token=2,
+        num_shared_experts=2, expert_d_ff=64,
+    )

@@ -1,0 +1,21 @@
+"""Qwen2-VL-72B backbone [arXiv:2409.12191; hf].  M-RoPE, dynamic-resolution
+vision encoder is a STUB (input_specs provides precomputed patch embeddings
++ 3D M-RoPE position ids)."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b", family="vlm", pattern="dense",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=29568, vocab=152064, head_dim=128,
+    rope_theta=1e6, vision_stub=True, mrope_sections=(16, 24, 24),
+    supports_long_context=False,
+    long_context_reason="full quadratic attention at 500k",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab=512, head_dim=32, mrope_sections=(8, 4, 4),
+    )

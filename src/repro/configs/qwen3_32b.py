@@ -1,0 +1,19 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-8B family].  GQA kv=8, qk_norm."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b", family="dense", pattern="dense",
+    num_layers=64, d_model=5120, num_heads=64, num_kv_heads=8,
+    d_ff=25600, vocab=151936, head_dim=128, qk_norm=True,
+    rope_theta=1e6,
+    supports_long_context=False,
+    long_context_reason="full quadratic attention at 500k",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab=512, head_dim=32,
+    )

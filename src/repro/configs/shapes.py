@@ -1,0 +1,87 @@
+"""Assigned input-shape sets + ShapeDtypeStruct input specs per cell.
+
+Every (arch x shape) pair — 40 cells — is defined here.  ``decode_*`` /
+``long_*`` cells lower ``serve_step`` (one token against a seq_len KV
+cache); ``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers the
+prefill trunk.  ``long_500k`` requires sub-quadratic attention and is a
+documented SKIP for pure full-attention archs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ArchConfig
+
+#: number of stub vision patches fused into VLM sequences
+N_VISION = 64
+
+SHAPES = {
+    "train_4k": dict(seq=4_096, batch=256, mode="train"),
+    "prefill_32k": dict(seq=32_768, batch=32, mode="prefill"),
+    "decode_32k": dict(seq=32_768, batch=128, mode="decode"),
+    "long_500k": dict(seq=524_288, batch=1, mode="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    mode: str
+    seq: int
+    batch: int
+    skipped: bool
+    skip_reason: str = ""
+
+
+def cell(cfg: ArchConfig, shape_name: str) -> Cell:
+    s = SHAPES[shape_name]
+    skipped = s["mode"] == "decode" and s["seq"] > 100_000 and not (
+        cfg.supports_long_context
+    )
+    return Cell(
+        arch=cfg.name, shape=shape_name, mode=s["mode"], seq=s["seq"],
+        batch=s["batch"], skipped=skipped,
+        skip_reason=cfg.long_context_reason if skipped else "",
+    )
+
+
+def all_cells(cfgs) -> list[Cell]:
+    return [cell(c, s) for c in cfgs for s in SHAPES]
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of the cell
+    (weak-type-correct, shardable, no allocation)."""
+    from repro.models.model import abstract_cache
+
+    s = SHAPES[shape_name]
+    b, seq, mode = s["batch"], s["seq"], s["mode"]
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if mode in ("train", "prefill"):
+        if cfg.kind == "encdec":
+            batch = {
+                "frames": sds((b, seq, cfg.d_model), dtype),
+                "dec_tokens": sds((b, cfg.dec_len_train), i32),
+            }
+        else:
+            batch = {"tokens": sds((b, seq), i32)}
+            if cfg.vision_stub:
+                batch["vision_embeds"] = sds((b, N_VISION, cfg.d_model), dtype)
+                batch["vision_pos"] = sds((b, N_VISION), i32)
+                if cfg.name.startswith("qwen2-vl"):
+                    batch["mrope_positions"] = sds((3, b, seq), i32)
+        return {"batch": batch}
+
+    # decode: one new token against a seq-length cache
+    return {
+        "token": sds((b, 1), i32),
+        "pos": sds((), i32),
+        "cache": abstract_cache(cfg, b, seq, dtype),
+    }

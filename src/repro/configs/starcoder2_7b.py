@@ -1,0 +1,18 @@
+"""StarCoder2-7B [arXiv:2402.19173].  GQA kv=4, RoPE, GELU MLP."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense", pattern="dense",
+    num_layers=32, d_model=4608, num_heads=36, num_kv_heads=4,
+    d_ff=18432, vocab=49152, rope_theta=1e5, gated_mlp=False,
+    supports_long_context=False,
+    long_context_reason="full quadratic attention at 500k",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab=512,
+    )

@@ -1,0 +1,21 @@
+"""Whisper-large-v3 backbone [arXiv:2212.04356; unverified].  Encoder-
+decoder; the conv/mel frontend is a STUB (input_specs provides precomputed
+frame embeddings); sinusoidal positions on both sides (DESIGN.md §8)."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3", family="audio", pattern="whisper",
+    num_layers=32, d_model=1280, num_heads=20, num_kv_heads=20,
+    d_ff=5120, vocab=51866, kind="encdec", use_rope=False,
+    gated_mlp=False, audio_stub=True, dec_len_train=448,
+    supports_long_context=False,
+    long_context_reason="enc-dec full attention; decoder context 448 real",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab=512, dec_len_train=32,
+    )

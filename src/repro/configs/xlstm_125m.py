@@ -1,0 +1,20 @@
+"""xLSTM-125M [arXiv:2405.04517; unverified].  Alternating mLSTM / sLSTM
+blocks (1:1 at this scale); d_ff=0 in the assignment means the blocks use
+their own internal projections."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m", family="ssm", pattern="xlstm",
+    num_layers=12, d_model=768, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab=50304, use_rope=False, xlstm_proj_factor=2,
+    supports_long_context=True,
+    long_context_reason="pure recurrent state, O(1) per token",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=4, d_model=64, num_heads=2, num_kv_heads=2,
+        vocab=512,
+    )

@@ -1,0 +1,23 @@
+"""Zamba2-7B [arXiv:2411.15242; unverified].  Mamba2 backbone with a
+SHARED attention+MLP block applied every ``mamba_per_attn`` mamba blocks
+(81 mamba blocks ~ 13 supersteps x 6 + shared block reuse; the per-call
+LoRA adapters of the published model are omitted — DESIGN.md §8)."""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid", pattern="zamba",
+    num_layers=78, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab=32000, ssm_state=64, mamba_per_attn=6,
+    mamba_headdim=64, mamba_expand=2,
+    supports_long_context=True,
+    long_context_reason="SSM state O(1); shared-attn KV sharded over mesh",
+)
+
+
+def reduced_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab=512, ssm_state=16, mamba_per_attn=2,
+        mamba_headdim=32,
+    )

@@ -1,0 +1,48 @@
+"""Core BS-tree library (the paper's contribution, in JAX).
+
+Modules:
+  layout      node layout, MAXKEY, u64<->u32-plane helpers, derived bitmap
+  succ        branchless successor operators (paper Snippet 1/2)
+  reference   host-side scalar oracle (paper Algorithms 3-6)
+  bstree      vectorised functional BS-tree (bulk load, search, updates)
+  compress    FOR-compressed CBS-tree (paper §5-6)
+  distributed range-partitioned sharded index (shard_map + all_to_all)
+  versioning  MVCC snapshots (OLC adaptation, paper §7)
+"""
+from .layout import (  # noqa: F401
+    DEFAULT_ALPHA,
+    DEFAULT_N,
+    MAXKEY,
+    BSTreeArrays,
+    join_u64,
+    split_u64,
+    used_mask,
+)
+from .succ import (  # noqa: F401
+    searchsorted_left,
+    searchsorted_right,
+    succ_ge,
+    succ_ge_plane,
+    succ_gt,
+    succ_gt_plane,
+)
+from .bstree import (  # noqa: F401
+    bulk_load,
+    delete_batch,
+    descend,
+    insert_batch,
+    lookup_batch,
+    lookup_u64,
+    range_scan,
+)
+from .compress import (  # noqa: F401
+    CBSTreeArrays,
+    build_auto,
+    cbs_bulk_load,
+    cbs_delete_batch,
+    cbs_insert_batch,
+    cbs_lookup_batch,
+    cbs_lookup_u64,
+    decide,
+)
+from .reference import ReferenceBSTree  # noqa: F401

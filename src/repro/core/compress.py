@@ -1,0 +1,750 @@
+"""FOR-compressed BS-tree (CBS-tree), paper §5 + the §6 decision mechanism.
+
+Every compressed leaf owns a fixed physical block of ``node_width * 8``
+bytes, stored as ``2 * node_width`` u32 words (the TPU's native lane
+width).  Per leaf a frame-of-reference key ``k0`` (the first key) and a
+*type tag* select how the block is interpreted:
+
+==== ================= ==========================
+tag  delta width       logical capacity
+==== ================= ==========================
+0    u16 (packed 2/u32) 4 * node_width keys
+1    u32                2 * node_width keys
+2    u64 (hi,lo planes) node_width keys (exact)
+==== ================= ==========================
+
+so one tree mixes leaf capacities while every leaf keeps the same byte
+size (paper footnote 3) — *variable logical capacity, fixed physical
+block*.  Inner nodes stay uncompressed (paper §6 finding).
+
+Order-free search trick (TPU adaptation).  Because the gap invariant
+keeps every logical delta array sorted, the successor *rank* equals a pure
+lane count — so we never need the physical position of a slot:
+
+* ``succ_ge`` rank  = count(delta < q')          (any lane order!)
+* membership        = any(delta == q')            (gap copies alias keys)
+
+which means packed u16 halves can be counted without re-interleaving, and
+u64 (hi,lo) planes pair by slicing.  A CPU implementation branches per
+leaf type; the TPU version evaluates all three interpretations on the
+same VMEM-resident block and predicates by tag (compute is free next to
+the block load — see DESIGN.md §2).
+
+Following the paper's evaluated configuration, CBS leaves store keys only:
+a lookup returns ``(found, leaf, rank)`` and the record id is the stable
+``leaf * capacity + rank`` position (the paper's "objective of each index
+is to locate the position of the searched key").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import reference as ref
+from .layout import (
+    DEFAULT_ALPHA,
+    DEFAULT_N,
+    MAXKEY,
+    MAXKEY_HI,
+    MAXKEY_LO,
+    join_u64,
+    split_u64,
+    spread_positions,
+)
+from .succ import cmp_ge_u64, cmp_gt_u64, succ_gt
+
+__all__ = [
+    "CBSTreeArrays",
+    "decide",
+    "cbs_bulk_load",
+    "cbs_lookup_batch",
+    "cbs_lookup_u64",
+    "cbs_insert_batch",
+    "cbs_delete_batch",
+    "build_auto",
+    "cbs_range_scan",
+    "cbs_decode_spans",
+    "TAG_U16",
+    "TAG_U32",
+    "TAG_U64",
+]
+
+TAG_U16, TAG_U32, TAG_U64 = 0, 1, 2
+
+MAXD16 = np.uint32(0xFFFF)
+MAXD32 = np.uint32(0xFFFFFFFF)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CBSTreeArrays:
+    """CBS-tree: FOR-compressed leaves + uncompressed inner nodes."""
+
+    leaf_words: jnp.ndarray  # (Lcap, 2N) uint32 — fixed physical block
+    leaf_k0_hi: jnp.ndarray  # (Lcap,) uint32
+    leaf_k0_lo: jnp.ndarray  # (Lcap,) uint32
+    leaf_tag: jnp.ndarray  # (Lcap,) int32
+    next_leaf: jnp.ndarray  # (Lcap,) int32
+    inner_hi: jnp.ndarray  # (Mcap, N) uint32
+    inner_lo: jnp.ndarray  # (Mcap, N) uint32
+    inner_child: jnp.ndarray  # (Mcap, N) int32
+    root: jnp.ndarray  # () int32
+    num_leaves: jnp.ndarray  # () int32
+    num_inner: jnp.ndarray  # () int32
+    height: int = dataclasses.field(metadata=dict(static=True))
+    node_width: int = dataclasses.field(metadata=dict(static=True))
+
+    def memory_bytes(self) -> int:
+        total = 0
+        for f in dataclasses.fields(self):
+            if f.metadata.get("static"):
+                continue
+            arr = getattr(self, f.name)
+            total += arr.size * arr.dtype.itemsize
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# §6 decision mechanism
+# ---------------------------------------------------------------------------
+
+def decide(keys: np.ndarray, n: int = DEFAULT_N) -> bool:
+    """Build a CBS-tree iff the mean leading-zero count of per-segment key
+    spreads is >= 32 bits (paper §6).  Segment size generalises the paper's
+    13 (= keys-per-leaf at 75% + separator) to arbitrary node widths."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    seg = max(2, int(round(DEFAULT_ALPHA * n)) + 1)
+    if len(keys) < seg:
+        return False
+    m = (len(keys) // seg) * seg
+    segs = keys[:m].reshape(-1, seg)
+    spread = segs[:, -1] - segs[:, 0]
+    # leading zeros of a u64: 64 - bit_length
+    bl = np.zeros(len(spread), dtype=np.int64)
+    nz = spread > 0
+    bl[nz] = np.floor(np.log2(spread[nz].astype(np.float64))).astype(np.int64) + 1
+    lz = 64 - bl
+    return float(lz.mean()) >= 32.0
+
+
+# ---------------------------------------------------------------------------
+# Bulk loading (§5 "Tree construction": greedy narrowest-fit per leaf)
+# ---------------------------------------------------------------------------
+
+def _leaf_caps(n: int) -> dict[int, int]:
+    return {TAG_U16: 4 * n, TAG_U32: 2 * n, TAG_U64: n}
+
+
+def _pack_leaf(keys: np.ndarray, tag: int, n: int, alpha: float) -> np.ndarray:
+    """Scatter ``keys`` (sorted u64, relative deltas already) into one
+    2N-u32-word physical block with interleaved gaps + duplication fill."""
+    cap = _leaf_caps(n)[tag]
+    if tag == TAG_U16:
+        logical = np.full((cap,), 0xFFFF, dtype=np.uint32)
+        maxd = 0xFFFF
+    elif tag == TAG_U32:
+        logical = np.full((cap,), 0xFFFFFFFF, dtype=np.uint64)
+        maxd = 0xFFFFFFFF
+    else:
+        logical = np.full((cap,), MAXKEY, dtype=np.uint64)
+        maxd = int(MAXKEY)
+    pos = spread_positions(len(keys), cap, alpha)
+    logical[pos] = keys
+    # backward fill gaps with next real value
+    nxt = maxd
+    for i in range(cap - 1, -1, -1):
+        if logical[i] == maxd:
+            logical[i] = nxt
+        else:
+            nxt = logical[i]
+    # pack into u32 words
+    if tag == TAG_U16:
+        lo = logical[0::2].astype(np.uint32)
+        hi = logical[1::2].astype(np.uint32)
+        return lo | (hi << np.uint32(16))
+    if tag == TAG_U32:
+        return logical.astype(np.uint32)
+    hi, lo = split_u64(logical)
+    return np.concatenate([hi, lo])
+
+
+def cbs_bulk_load(
+    keys: np.ndarray,
+    *,
+    n: int = DEFAULT_N,
+    alpha: float = DEFAULT_ALPHA,
+    slack: float = 1.5,
+) -> CBSTreeArrays:
+    """One pass over sorted keys; each leaf takes the narrowest delta width
+    that fits 75%-occupancy-many keys (paper §5 Tree construction)."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    caps = _leaf_caps(n)
+    leaves: list[tuple[int, np.ndarray, np.uint64]] = []  # (tag, words, k0)
+
+    i = 0
+    while i < len(keys):
+        placed = False
+        for tag, width_max in ((TAG_U16, 0xFFFF), (TAG_U32, 0xFFFFFFFF), (TAG_U64, None)):
+            take = max(1, int(round(alpha * caps[tag])))
+            chunk = keys[i : i + take]
+            k0 = chunk[0]
+            spread = int(chunk[-1] - k0)
+            if width_max is None or spread < width_max:  # maxd reserved
+                deltas = (chunk - k0).astype(np.uint64)
+                words = _pack_leaf(deltas, tag, n, alpha)
+                leaves.append((tag, words, k0))
+                i += len(chunk)
+                placed = True
+                break
+        assert placed
+    if not leaves:
+        leaves.append(
+            (TAG_U64, _pack_leaf(np.zeros(0, np.uint64), TAG_U64, n, alpha), np.uint64(0))
+        )
+
+    num_leaves = len(leaves)
+    lcap = max(num_leaves + 4, int(num_leaves * slack))
+    leaf_words = np.zeros((lcap, 2 * n), dtype=np.uint32)
+    leaf_words[num_leaves:] = 0xFFFFFFFF
+    leaf_tag = np.full((lcap,), TAG_U64, dtype=np.int32)
+    k0s = np.zeros((lcap,), dtype=np.uint64)
+    for li, (tag, words, k0) in enumerate(leaves):
+        leaf_words[li] = words
+        leaf_tag[li] = tag
+        k0s[li] = k0
+    # empty preallocated u64 leaves: all-MAXKEY blocks
+    for li in range(num_leaves, lcap):
+        leaf_words[li] = _pack_leaf(np.zeros(0, np.uint64), TAG_U64, n, alpha)
+    next_leaf = np.full((lcap,), -1, dtype=np.int32)
+    next_leaf[: num_leaves - 1] = np.arange(1, num_leaves, dtype=np.int32)
+
+    # inner levels over separators (= k0 of each leaf after the first),
+    # same construction as the uncompressed tree.
+    seps = k0s[1:num_leaves]
+    inner = _build_inner_over(seps, num_leaves, n, alpha, slack)
+    k0_hi, k0_lo = split_u64(k0s)
+    return CBSTreeArrays(
+        leaf_words=jnp.asarray(leaf_words),
+        leaf_k0_hi=jnp.asarray(k0_hi),
+        leaf_k0_lo=jnp.asarray(k0_lo),
+        leaf_tag=jnp.asarray(leaf_tag),
+        next_leaf=jnp.asarray(next_leaf),
+        inner_hi=jnp.asarray(inner["hi"]),
+        inner_lo=jnp.asarray(inner["lo"]),
+        inner_child=jnp.asarray(inner["child"]),
+        root=jnp.asarray(inner["root"], jnp.int32),
+        num_leaves=jnp.asarray(num_leaves, jnp.int32),
+        num_inner=jnp.asarray(inner["num_inner"], jnp.int32),
+        height=inner["height"],
+        node_width=n,
+    )
+
+
+def _build_inner_over(
+    sep_keys: np.ndarray, num_children: int, n: int, alpha: float, slack: float
+):
+    """Build the inner levels above ``num_children`` leaves with the given
+    separators (vectorised; same grouping as bstree.bulk_load)."""
+    from .layout import ALPHA_LEVEL_GROWTH
+
+    child_ids = np.arange(num_children, dtype=np.int32)
+    levels = []
+    a = alpha
+    sep_keys = np.asarray(sep_keys, dtype=np.uint64)
+    while len(child_ids) > 1:
+        a = min(1.0, a + ALPHA_LEVEL_GROWTH)
+        per_node = max(2, int(round(a * (n - 1))))
+        m = -(-len(child_ids) // per_node)
+        ik = np.full((m, n), MAXKEY, dtype=np.uint64)
+        ic = np.zeros((m, n), dtype=np.int32)
+        ni = np.arange(len(child_ids)) // per_node
+        nr = np.arange(len(child_ids)) % per_node
+        ic[ni, nr] = child_ids
+        si = np.arange(len(sep_keys))
+        keep = (si + 1) % per_node != 0
+        ik[si[keep] // per_node, si[keep] % per_node] = sep_keys[keep]
+        levels.append((ik, ic))
+        child_ids = np.arange(m, dtype=np.int32)
+        sep_keys = sep_keys[~keep]
+
+    height = len(levels)
+    if height == 0:
+        hi, lo = split_u64(np.full((4, n), MAXKEY, dtype=np.uint64))
+        return dict(
+            hi=hi, lo=lo, child=np.zeros((4, n), np.int32),
+            root=0, num_inner=0, height=0,
+        )
+    offs, total = [], 0
+    for ik, _ in levels:
+        offs.append(total)
+        total += ik.shape[0]
+    icap = max(total + 4, int(total * slack))
+    inner_keys = np.full((icap, n), MAXKEY, dtype=np.uint64)
+    inner_child = np.zeros((icap, n), dtype=np.int32)
+    for lvl, (ik, ic) in enumerate(levels):
+        o = offs[lvl]
+        inner_keys[o : o + ik.shape[0]] = ik
+        if lvl > 0:
+            ic = ic + offs[lvl - 1]
+        inner_child[o : o + ik.shape[0]] = ic
+    hi, lo = split_u64(inner_keys)
+    return dict(
+        hi=hi, lo=lo, child=inner_child,
+        root=offs[-1], num_inner=total, height=height,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Search — all-three-interpretations, predicated by tag (order-free counts)
+# ---------------------------------------------------------------------------
+
+def _block_counts(words, tag, k0_hi, k0_lo, q_hi, q_lo, strict: bool):
+    """(rank, member, in_frame) for a batch of leaf blocks.
+
+    words: (B, 2N) u32; tag/k0/q: (B,).  rank counts deltas < q' (strict
+    lookup order: succ_ge) or <= q' (strict=False -> succ_gt for ranges).
+    """
+    n2 = words.shape[-1]
+    # q' per interpretation with clamping + frame validity
+    ge_k0 = cmp_ge_u64(q_hi, q_lo, k0_hi, k0_lo)
+    dq_hi = q_hi - k0_hi - (q_lo < k0_lo).astype(q_hi.dtype)  # borrow
+    dq_lo = q_lo - k0_lo
+
+    def count_and_member(deltas, dq, maxd):
+        dqc = jnp.minimum(dq, maxd)[..., None]
+        if strict:
+            cnt = jnp.sum((deltas < dqc).astype(jnp.int32), axis=-1)
+        else:
+            cnt = jnp.sum((deltas <= dqc).astype(jnp.int32), axis=-1)
+        mem = jnp.any(deltas == dqc, axis=-1)
+        return cnt, mem
+
+    # ---- u16: unpack halves; lane order is irrelevant for counting ----
+    lo16 = words & 0xFFFF
+    hi16 = words >> 16
+    d16 = jnp.concatenate([lo16, hi16], axis=-1)
+    in16 = ge_k0 & (dq_hi == 0) & (dq_lo < MAXD16)
+    dq16 = jnp.where(in16, dq_lo, MAXD16)
+    c16, m16 = count_and_member(d16, dq16, MAXD16)
+
+    # ---- u32 ----
+    in32 = ge_k0 & (dq_hi == 0) & (dq_lo < MAXD32)
+    dq32 = jnp.where(in32, dq_lo, MAXD32)
+    c32, m32 = count_and_member(words, dq32, MAXD32)
+
+    # ---- u64 planes: words[:, :N] = hi, words[:, N:] = lo ----
+    n = n2 // 2
+    whi, wlo = words[..., :n], words[..., n:]
+    dq_hi_c = jnp.where(ge_k0, dq_hi, 0)
+    dq_lo_c = jnp.where(ge_k0, dq_lo, 0)
+    if strict:
+        m64lane = cmp_gt_u64(dq_hi_c[..., None], dq_lo_c[..., None], whi, wlo)
+    else:
+        m64lane = cmp_ge_u64(dq_hi_c[..., None], dq_lo_c[..., None], whi, wlo)
+    c64 = jnp.sum(m64lane.astype(jnp.int32), axis=-1)
+    m64 = jnp.any((whi == dq_hi_c[..., None]) & (wlo == dq_lo_c[..., None]), axis=-1)
+    is_max64 = (dq_hi_c == MAXKEY_HI) & (dq_lo_c == MAXKEY_LO)
+
+    rank = jnp.where(tag == TAG_U16, c16, jnp.where(tag == TAG_U32, c32, c64))
+    member = jnp.where(
+        tag == TAG_U16, m16 & in16,
+        jnp.where(tag == TAG_U32, m32 & in32, m64 & ge_k0 & ~is_max64),
+    )
+    # u16/u32 counts when out-of-frame high: all deltas < MAXD qualify; for
+    # rank purposes out-of-frame-low gives 0, out-of-frame-high gives cap.
+    oof_low = ~ge_k0
+    rank = jnp.where(oof_low, 0, rank)
+    return rank, member
+
+
+@jax.jit
+def cbs_lookup_batch(tree: CBSTreeArrays, q_hi, q_lo):
+    """Equality search.  Returns (found (B,), leaf (B,), rank (B,))."""
+    b = q_hi.shape[0]
+    node = jnp.full((b,), tree.root, dtype=jnp.int32)
+    for _ in range(tree.height):
+        rows_hi = tree.inner_hi[node]
+        rows_lo = tree.inner_lo[node]
+        c = succ_gt(rows_hi, rows_lo, q_hi, q_lo)
+        node = tree.inner_child[node, c]
+    words = tree.leaf_words[node]
+    rank, member = _block_counts(
+        words, tree.leaf_tag[node],
+        tree.leaf_k0_hi[node], tree.leaf_k0_lo[node],
+        q_hi, q_lo, strict=True,
+    )
+    return member, node, rank
+
+
+def cbs_lookup_u64(tree: CBSTreeArrays, keys_u64: np.ndarray):
+    hi, lo = split_u64(np.asarray(keys_u64, dtype=np.uint64))
+    found, leaf, rank = cbs_lookup_batch(tree, jnp.asarray(hi), jnp.asarray(lo))
+    return np.asarray(found), np.asarray(leaf), np.asarray(rank)
+
+
+@functools.partial(jax.jit, static_argnames=("max_leaves",))
+def cbs_range_scan(tree: CBSTreeArrays, k1_hi, k1_lo, k2_hi, k2_lo, *,
+                   max_leaves: int = 16):
+    """Algorithm 4 over compressed leaves, batched over (B,) queries.
+
+    Returns (leaf_ids (B, L), r1 (B, L), r2 (B, L), truncated (B,)): the
+    keys in [k1, k2] occupy logical ranks [r1, r2) of each listed leaf —
+    rank spans, not materialised keys, because CBS leaves are keys-only
+    and the rank IS the record position (module docstring).  Counting is
+    order-free, so the continuation test "no real key > k2 in this leaf"
+    is  r2 == count(slots < MAXDELTA)  — gap copies alias real keys and
+    sentinels never count.
+    """
+    b = k1_hi.shape[0]
+    node = jnp.full((b,), tree.root, dtype=jnp.int32)
+    for _ in range(tree.height):
+        rows_hi = tree.inner_hi[node]
+        rows_lo = tree.inner_lo[node]
+        c = succ_gt(rows_hi, rows_lo, k1_hi, k1_lo)
+        node = tree.inner_child[node, c]
+
+    def counts(leaf, q_hi, q_lo, strict):
+        words = tree.leaf_words[leaf]
+        rank, _ = _block_counts(
+            words, tree.leaf_tag[leaf], tree.leaf_k0_hi[leaf],
+            tree.leaf_k0_lo[leaf], q_hi, q_lo, strict=strict)
+        return rank
+
+    def n_real(leaf):
+        """count(slots < tag's MAXDELTA): ranks of real keys + gap copies."""
+        words = tree.leaf_words[leaf]
+        tag = tree.leaf_tag[leaf]
+        lo16 = (words & 0xFFFF).astype(jnp.int32)
+        hi16 = (words >> 16).astype(jnp.int32)
+        c16 = jnp.sum((lo16 < 0xFFFF).astype(jnp.int32), axis=-1) + jnp.sum(
+            (hi16 < 0xFFFF).astype(jnp.int32), axis=-1)
+        c32 = jnp.sum((words != MAXD32).astype(jnp.int32), axis=-1)
+        n = words.shape[-1] // 2
+        whi, wlo = words[..., :n], words[..., n:]
+        c64 = jnp.sum(
+            (~((whi == MAXKEY_HI) & (wlo == MAXKEY_LO))).astype(jnp.int32),
+            axis=-1)
+        return jnp.where(tag == TAG_U16, c16,
+                         jnp.where(tag == TAG_U32, c32, c64))
+
+    def step(carry, _):
+        leaf, r1, alive = carry
+        r2 = counts(leaf, k2_hi, k2_lo, strict=False)  # succ_gt rank
+        out = (leaf, jnp.where(alive, r1, 0), jnp.where(alive, r2, 0),
+               alive)
+        more = r2 >= n_real(leaf)  # no real key > k2 here
+        nxt = tree.next_leaf[leaf]
+        alive = alive & more & (nxt >= 0)
+        leaf = jnp.where(alive, nxt, leaf)
+        return (leaf, jnp.zeros_like(r1), alive), out
+
+    r1 = counts(node, k1_hi, k1_lo, strict=True)
+    alive = jnp.ones((b,), bool)
+    (_, _, alive), (leaves, r1s, r2s, lives) = jax.lax.scan(
+        step, (node, r1, alive), None, length=max_leaves)
+    # scan stacks on axis 0 -> (L, B); move B first and mask dead entries
+    leaves = jnp.moveaxis(leaves, 0, 1)
+    r1s = jnp.moveaxis(r1s, 0, 1)
+    r2s = jnp.moveaxis(jnp.where(lives, r2s, 0), 0, 1)
+    r1s = jnp.minimum(r1s, r2s)
+    return leaves, r1s, r2s, alive
+
+
+def cbs_decode_spans(tree: CBSTreeArrays, leaves, r1s, r2s) -> list:
+    """Host helper: materialise the keys of one query's rank spans."""
+    n = tree.node_width
+    words = np.asarray(tree.leaf_words)
+    tags = np.asarray(tree.leaf_tag)
+    k0 = join_u64(np.asarray(tree.leaf_k0_hi), np.asarray(tree.leaf_k0_lo))
+    out = []
+    for leaf, r1, r2 in zip(np.asarray(leaves), np.asarray(r1s),
+                            np.asarray(r2s)):
+        if r2 <= r1:
+            continue
+        # ranks are order statistics over the non-sentinel slot values
+        # (gap copies alias real keys; unique() collapses them)
+        logical = _leaf_logical_host(words[leaf], int(tags[leaf]), k0[leaf], n)
+        span = logical[int(r1):int(r2)]
+        out.extend(np.unique(span).tolist())
+    return sorted(set(out))
+
+
+def _leaf_logical_host(words: np.ndarray, tag: int, k0: np.uint64,
+                       n: int) -> np.ndarray:
+    """All slot values (incl. gap duplicates) as absolute u64 keys;
+    sentinel slots are excluded."""
+    if tag == TAG_U16:
+        logical = np.empty(4 * n, dtype=np.uint64)
+        logical[0::2] = words & 0xFFFF
+        logical[1::2] = words >> 16
+        maxd = 0xFFFF
+    elif tag == TAG_U32:
+        logical = words.astype(np.uint64)
+        maxd = 0xFFFFFFFF
+    else:
+        logical = join_u64(words[:n], words[n:])
+        maxd = int(MAXKEY)
+    real = np.sort(logical[logical != maxd])  # rank = order statistic
+    return (real + k0).astype(np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# Updates — device rounds on logical planes + host retype/split fallback
+# ---------------------------------------------------------------------------
+
+def _unpack_tag(words, tag_const: int, n: int):
+    """Physical block -> logical (hi, lo) planes at the tag's own width,
+    with the tag's MAXDELTA sentinel mapped to the shared u64 MAXKEY so the
+    uncompressed row formulas (row_upsert / row_delete) apply verbatim."""
+    if tag_const == TAG_U16:
+        lo16 = words & 0xFFFF
+        hi16 = words >> 16
+        d = jnp.stack([lo16, hi16], axis=-1).reshape(*words.shape[:-1], 4 * n)
+        is_max = d == MAXD16
+        d_lo = jnp.where(is_max, MAXKEY_LO, d).astype(jnp.uint32)
+        d_hi = jnp.where(is_max, MAXKEY_HI, 0).astype(jnp.uint32)
+        return d_hi, d_lo
+    if tag_const == TAG_U32:
+        is_max = words == MAXD32
+        d_hi = jnp.where(is_max, MAXKEY_HI, 0).astype(jnp.uint32)
+        return d_hi, words
+    return words[..., :n], words[..., n:]  # u64: planes are already exact
+
+
+def _pack_tag(d_hi, d_lo, tag_const: int, n: int):
+    """Inverse of :func:`_unpack_tag`."""
+    if tag_const == TAG_U16:
+        is_max = (d_hi == MAXKEY_HI) & (d_lo == MAXKEY_LO)
+        d = jnp.where(is_max, MAXD16, d_lo & 0xFFFF)
+        ev = d[..., 0::2]
+        od = d[..., 1::2]
+        return (ev | (od << 16)).astype(jnp.uint32)
+    if tag_const == TAG_U32:
+        is_max = (d_hi == MAXKEY_HI) & (d_lo == MAXKEY_LO)
+        return jnp.where(is_max, MAXD32, d_lo).astype(jnp.uint32)
+    return jnp.concatenate([d_hi, d_lo], axis=-1).astype(jnp.uint32)
+
+
+def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
+    """Batched insert into the CBS-tree.  In-frame keys with a free gap are
+    inserted on device (logical-plane row ops); the rest (out-of-frame
+    deltas, full leaves) go through the host rebuild path, which re-splits
+    the affected leaves choosing fresh narrowest tags (paper §5 Insert)."""
+    keys_u64 = np.unique(np.asarray(keys_u64, dtype=np.uint64))
+    hi, lo = split_u64(keys_u64)
+    k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
+    active = jnp.ones((len(keys_u64),), dtype=bool)
+    deferred_total = np.zeros((len(keys_u64),), dtype=bool)
+    stats = {"inserted": 0, "deferred": 0, "rounds": 0}
+
+    found, leaf, _ = cbs_lookup_batch(tree, k_hi, k_lo)
+    active = active & ~found  # keys-only tree: present keys are no-ops
+    stats["present"] = int(jnp.sum(found.astype(jnp.int32)))
+
+    while int(jnp.sum(active.astype(jnp.int32))):
+        tree, active, deferred, n_ins = _cbs_insert_round(
+            tree, k_hi, k_lo, leaf, active
+        )
+        stats["inserted"] += int(n_ins)
+        stats["rounds"] += 1
+        d = np.asarray(deferred)
+        if d.any():
+            deferred_total |= d
+
+    if deferred_total.any():
+        idx = np.nonzero(deferred_total)[0]
+        stats["deferred"] = len(idx)
+        tree = _cbs_host_rebuild(tree, keys_u64[idx])
+        stats["inserted"] += len(idx)
+    return tree, stats
+
+
+def _select_first_active(leaf, active):
+    pos = jnp.arange(leaf.shape[0], dtype=jnp.int32)
+    seg_start = jnp.concatenate([jnp.zeros((1,), bool), leaf[1:] != leaf[:-1]])
+    seg_id = jnp.cumsum(seg_start.astype(jnp.int32))
+    first_act = jax.ops.segment_max(
+        jnp.where(active, -pos, -(leaf.shape[0] + 1)), seg_id,
+        num_segments=leaf.shape[0] + 1, indices_are_sorted=True,
+    )
+    return active & (pos == -first_act[seg_id])
+
+
+@jax.jit
+def _cbs_insert_round(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
+    from .bstree import row_upsert
+
+    n = tree.node_width
+    sel = _select_first_active(leaf, active)
+
+    words = tree.leaf_words[leaf]
+    tag = tree.leaf_tag[leaf]
+    k0_hi, k0_lo = tree.leaf_k0_hi[leaf], tree.leaf_k0_lo[leaf]
+
+    # delta of the new key in the leaf's frame; in-frame check per tag
+    ge_k0 = cmp_ge_u64(k_hi, k_lo, k0_hi, k0_lo)
+    dq_hi = k_hi - k0_hi - (k_lo < k0_lo).astype(k_hi.dtype)
+    dq_lo = k_lo - k0_lo
+    maxd_lo = jnp.where(tag == TAG_U16, MAXD16, MAXD32)
+    in_frame = ge_k0 & jnp.where(
+        tag == TAG_U64,
+        ~((dq_hi == MAXKEY_HI) & (dq_lo == MAXKEY_LO)),
+        (dq_hi == 0) & (dq_lo < maxd_lo),
+    )
+
+    # evaluate every interpretation at its own static width; predicate by
+    # tag (the TPU-idiomatic replacement for the CPU's per-leaf branch)
+    new_words, statuses = [], []
+    dummy_v = jnp.zeros(k_hi.shape, jnp.uint32)
+    for tc in (TAG_U16, TAG_U32, TAG_U64):
+        d_hi, d_lo = _unpack_tag(words, tc, n)
+        ins_hi = (dq_hi if tc == TAG_U64 else jnp.zeros_like(dq_hi)).astype(jnp.uint32)
+        row_v = jnp.zeros(d_lo.shape, jnp.uint32)
+        nh, nl, _, st = jax.vmap(row_upsert)(d_hi, d_lo, row_v, ins_hi, dq_lo, dummy_v)
+        new_words.append(_pack_tag(nh, nl, tc, n))
+        statuses.append(st)
+    t16, t32 = tag[:, None] == TAG_U16, tag[:, None] == TAG_U32
+    merged = jnp.where(t16, new_words[0], jnp.where(t32, new_words[1], new_words[2]))
+    status = jnp.where(
+        tag == TAG_U16, statuses[0], jnp.where(tag == TAG_U32, statuses[1], statuses[2])
+    )
+
+    ok = sel & in_frame & (status == 0)
+    deferred = sel & (~in_frame | (status == 2))
+    tgt = jnp.where(ok, leaf, tree.leaf_words.shape[0] + 1)
+    tree = dataclasses.replace(
+        tree, leaf_words=tree.leaf_words.at[tgt].set(merged, mode="drop")
+    )
+    active = active & ~ok & ~deferred
+    return tree, active, deferred, jnp.sum(ok.astype(jnp.int32))
+
+
+def cbs_delete_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
+    """Batched delete (paper §5 Delete: copy next value / MAXKEY over the
+    dup-run; k0 never changes).  Fully on device — deletes never retype."""
+    keys_u64 = np.unique(np.asarray(keys_u64, dtype=np.uint64))
+    hi, lo = split_u64(keys_u64)
+    k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
+    active = jnp.ones((len(keys_u64),), dtype=bool)
+    _, leaf, _ = cbs_lookup_batch(tree, k_hi, k_lo)
+    n_deleted = 0
+    while int(jnp.sum(active.astype(jnp.int32))):
+        tree, active, n_found = _cbs_delete_round(tree, k_hi, k_lo, leaf, active)
+        n_deleted += int(n_found)
+    return tree, n_deleted
+
+
+@jax.jit
+def _cbs_delete_round(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
+    from .bstree import row_delete
+
+    n = tree.node_width
+    sel = _select_first_active(leaf, active)
+
+    words = tree.leaf_words[leaf]
+    tag = tree.leaf_tag[leaf]
+    k0_hi, k0_lo = tree.leaf_k0_hi[leaf], tree.leaf_k0_lo[leaf]
+    ge_k0 = cmp_ge_u64(k_hi, k_lo, k0_hi, k0_lo)
+    dq_hi_raw = k_hi - k0_hi - (k_lo < k0_lo).astype(k_hi.dtype)
+    dq_lo = jnp.where(ge_k0, k_lo - k0_lo, 0)
+    maxd_lo = jnp.where(tag == TAG_U16, MAXD16, MAXD32)
+    in_frame = ge_k0 & jnp.where(
+        tag == TAG_U64,
+        ~((dq_hi_raw == MAXKEY_HI) & (dq_lo == MAXKEY_LO)),
+        (dq_hi_raw == 0) & (dq_lo < maxd_lo),
+    )
+
+    new_words, founds = [], []
+    for tc in (TAG_U16, TAG_U32, TAG_U64):
+        d_hi, d_lo = _unpack_tag(words, tc, n)
+        del_hi = (dq_hi_raw if tc == TAG_U64 else jnp.zeros_like(dq_hi_raw))
+        del_hi = jnp.where(ge_k0, del_hi, 0).astype(jnp.uint32)
+        row_v = jnp.zeros(d_lo.shape, jnp.uint32)
+        nh, nl, _, fd = jax.vmap(row_delete)(d_hi, d_lo, row_v, del_hi, dq_lo)
+        new_words.append(_pack_tag(nh, nl, tc, n))
+        founds.append(fd)
+    t16, t32 = tag[:, None] == TAG_U16, tag[:, None] == TAG_U32
+    merged = jnp.where(t16, new_words[0], jnp.where(t32, new_words[1], new_words[2]))
+    found = jnp.where(
+        tag == TAG_U16, founds[0], jnp.where(tag == TAG_U32, founds[1], founds[2])
+    )
+
+    ok = sel & found & in_frame
+    tgt = jnp.where(ok, leaf, tree.leaf_words.shape[0] + 1)
+    tree = dataclasses.replace(
+        tree, leaf_words=tree.leaf_words.at[tgt].set(merged, mode="drop")
+    )
+    active = active & ~sel
+    return tree, active, jnp.sum(ok.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Host fallback: rebuild affected leaves with fresh narrowest tags
+# ---------------------------------------------------------------------------
+
+def cbs_items(tree: CBSTreeArrays) -> np.ndarray:
+    """All keys in order (host-side, via the leaf chain)."""
+    n = tree.node_width
+    words = np.asarray(tree.leaf_words)
+    tags = np.asarray(tree.leaf_tag)
+    k0 = join_u64(np.asarray(tree.leaf_k0_hi), np.asarray(tree.leaf_k0_lo))
+    nxt = np.asarray(tree.next_leaf)
+    out = []
+    leaf = 0 if tree.height == 0 else _leftmost_leaf_host(tree)
+    while leaf != -1:
+        out.append(_leaf_keys_host(words[leaf], int(tags[leaf]), k0[leaf], n))
+        leaf = int(nxt[leaf])
+    return np.concatenate(out) if out else np.zeros(0, np.uint64)
+
+
+def _leftmost_leaf_host(tree: CBSTreeArrays) -> int:
+    node = int(tree.root)
+    child = np.asarray(tree.inner_child)
+    for _ in range(tree.height):
+        node = int(child[node, 0])
+    return node
+
+
+def _leaf_keys_host(words: np.ndarray, tag: int, k0: np.uint64, n: int) -> np.ndarray:
+    if tag == TAG_U16:
+        logical = np.empty(4 * n, dtype=np.uint64)
+        logical[0::2] = words & 0xFFFF
+        logical[1::2] = words >> 16
+        maxd = 0xFFFF
+    elif tag == TAG_U32:
+        logical = words.astype(np.uint64)
+        maxd = 0xFFFFFFFF
+    else:
+        logical = join_u64(words[:n], words[n:])
+        maxd = int(MAXKEY)
+    used = np.ones(len(logical), dtype=bool)
+    used[:-1] = logical[:-1] != logical[1:]
+    used &= logical != maxd
+    return (logical[used] + k0).astype(np.uint64)
+
+
+def _cbs_host_rebuild(tree: CBSTreeArrays, new_keys: np.ndarray) -> CBSTreeArrays:
+    """Slow path: merge deferred keys into the full sorted key set and
+    rebuild.  Splitting only the affected leaves and patching parents is
+    the paper's in-place path; a bulk re-pack is the batched equivalent —
+    deferred keys are rare (out-of-frame or full leaf), and rebuild cost
+    amortises exactly like split chains (documented in DESIGN.md §8)."""
+    keys = cbs_items(tree)
+    merged = np.unique(np.concatenate([keys, new_keys.astype(np.uint64)]))
+    return cbs_bulk_load(merged, n=tree.node_width)
+
+
+def build_auto(keys: np.ndarray, *, n: int = DEFAULT_N, alpha: float = DEFAULT_ALPHA):
+    """§6 decision mechanism: returns ('cbs', CBSTreeArrays) or
+    ('bs', BSTreeArrays) based on the key distribution."""
+    from .bstree import bulk_load
+
+    keys = np.asarray(keys, dtype=np.uint64)
+    if decide(keys, n):
+        return "cbs", cbs_bulk_load(keys, n=n, alpha=alpha)
+    return "bs", bulk_load(keys, n=n, alpha=alpha)

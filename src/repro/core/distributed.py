@@ -1,0 +1,399 @@
+"""Range-partitioned BS-tree sharded across a device mesh.
+
+The paper scales the BS-tree across cores with OLC threads (§8.5).  The
+SPMD equivalent is a **range partition across the mesh's ``model`` axis**:
+device *m* owns the key range ``[fence[m], fence[m+1])`` as a complete
+local BS-tree, and a tiny replicated *fence* array (the top of the global
+tree, in effect) routes queries.  Query flow inside one ``shard_map``:
+
+    1. target shard per query  = succ_gt(fences, q) - 1   (branchless!)
+    2. bucket queries per target with a fixed per-peer capacity C
+       (exactly MoE token dispatch — the succ operator doubles as the
+       router, and overflow semantics follow capacity-factor routing)
+    3. ragged-as-dense exchange: ``all_to_all`` over the model axis
+    4. local batched lookup on each shard (the single-tree hot path)
+    5. ``all_to_all`` the results back, unpermute.
+
+The ``pod`` axis composes two ways (DESIGN.md §5):
+  * ``replicate`` — each pod holds the full index; query batches shard
+    over (pod, data): reads scale with pods, writes broadcast.
+  * ``partition`` — the key space splits over (pod × model) jointly
+    (pass ``axis_name=('pod', 'model')``): maximal capacity, writes stay
+    local to one pod.
+
+Updates take the host-orchestrated bulk path per shard (amortised, like
+splits); lookups are the fully-SPMD hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import bstree
+from .layout import BSTreeArrays, MAXKEY, join_u64, split_u64
+from .succ import succ_gt
+
+AxisName = Union[str, tuple[str, ...]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedBSTree:
+    """S stacked local BS-trees + replicated routing fences.
+
+    Every array field of the local trees carries a leading shard dim S;
+    heights are equalised at build time so the traversal is one static
+    program for all shards.
+    """
+
+    trees: BSTreeArrays  # every array has leading dim S
+    fence_hi: jnp.ndarray  # (S,) uint32 — first key of each shard
+    fence_lo: jnp.ndarray  # (S,) uint32
+    num_shards: int = dataclasses.field(metadata=dict(static=True))
+
+    def memory_bytes(self) -> int:
+        return self.trees.memory_bytes() + 8 * self.num_shards
+
+
+def _lift_height(tree: BSTreeArrays, target_height: int) -> BSTreeArrays:
+    """Add single-child root levels until the tree has the target height
+    (keeps traversal static-shape-uniform across shards)."""
+    h = bstree.to_host(tree)
+    n = h["n"]
+    while h["height"] < target_height:
+        # append a root row whose child 0 is the old root
+        if h["num_inner"] >= h["inner_keys"].shape[0]:
+            h["inner_keys"] = np.vstack(
+                [h["inner_keys"], np.full((4, n), MAXKEY, np.uint64)]
+            )
+            h["inner_child"] = np.vstack(
+                [h["inner_child"], np.zeros((4, n), np.int32)]
+            )
+        rid = h["num_inner"]
+        h["inner_keys"][rid] = MAXKEY
+        h["inner_child"][rid] = 0
+        h["inner_child"][rid, 0] = h["root"]
+        h["root"] = rid
+        h["num_inner"] += 1
+        h["height"] += 1
+    return bstree.from_host(
+        leaf_keys=h["leaf_keys"], leaf_vals=h["leaf_vals"],
+        next_leaf=h["next_leaf"], inner_keys=h["inner_keys"],
+        inner_child=h["inner_child"], root=h["root"],
+        num_leaves=h["num_leaves"], num_inner=h["num_inner"],
+        height=h["height"], n=n,
+    )
+
+
+def _pad_rows(a: np.ndarray, rows: int, fill) -> np.ndarray:
+    if a.shape[0] >= rows:
+        return a
+    pad = np.full((rows - a.shape[0],) + a.shape[1:], fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def build_sharded(
+    keys: np.ndarray,
+    num_shards: int,
+    *,
+    vals: Optional[np.ndarray] = None,
+    n: int = 128,
+    alpha: float = 0.75,
+) -> ShardedBSTree:
+    """Equal-count range partition of sorted unique u64 keys into
+    ``num_shards`` local BS-trees with uniform static shapes."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    if vals is None:
+        vals = np.arange(len(keys), dtype=np.uint32)
+    bounds = [len(keys) * s // num_shards for s in range(num_shards + 1)]
+    parts = [
+        bstree.bulk_load(keys[bounds[s] : bounds[s + 1]],
+                         vals[bounds[s] : bounds[s + 1]], n=n, alpha=alpha)
+        for s in range(num_shards)
+    ]
+    target_h = max(p.height for p in parts)
+    parts = [_lift_height(p, target_h) if p.height < target_h else p for p in parts]
+    hosts = [bstree.to_host(p) for p in parts]
+    lcap = max(h["leaf_keys"].shape[0] for h in hosts)
+    icap = max(h["inner_keys"].shape[0] for h in hosts)
+
+    def stack(field, cap, fill):
+        return np.stack([_pad_rows(h[field], cap, fill) for h in hosts])
+
+    leaf_keys = stack("leaf_keys", lcap, MAXKEY)
+    leaf_vals = stack("leaf_vals", lcap, 0)
+    next_leaf = np.stack([_pad_rows(h["next_leaf"], lcap, -1) for h in hosts])
+    inner_keys = stack("inner_keys", icap, MAXKEY)
+    inner_child = stack("inner_child", icap, 0)
+
+    lhi, llo = split_u64(leaf_keys)
+    ihi, ilo = split_u64(inner_keys)
+    trees = BSTreeArrays(
+        leaf_hi=jnp.asarray(lhi), leaf_lo=jnp.asarray(llo),
+        leaf_val=jnp.asarray(leaf_vals), next_leaf=jnp.asarray(next_leaf),
+        inner_hi=jnp.asarray(ihi), inner_lo=jnp.asarray(ilo),
+        inner_child=jnp.asarray(inner_child),
+        root=jnp.asarray([h["root"] for h in hosts], jnp.int32),
+        num_leaves=jnp.asarray([h["num_leaves"] for h in hosts], jnp.int32),
+        num_inner=jnp.asarray([h["num_inner"] for h in hosts], jnp.int32),
+        height=target_h, node_width=n,
+    )
+    fences = np.array(
+        [keys[bounds[s]] if bounds[s] < len(keys) else MAXKEY
+         for s in range(num_shards)],
+        dtype=np.uint64,
+    )
+    if len(keys):
+        fences[0] = 0  # shard 0 catches everything below the first key
+    fhi, flo = split_u64(fences)
+    return ShardedBSTree(
+        trees=trees, fence_hi=jnp.asarray(fhi), fence_lo=jnp.asarray(flo),
+        num_shards=num_shards,
+    )
+
+
+def place_on_mesh(st: ShardedBSTree, mesh: Mesh, axis: AxisName) -> ShardedBSTree:
+    """Shard the stacked tree arrays over ``axis``; replicate the fences."""
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+
+    def shard_leaf(x):
+        if x.ndim == 0:
+            return jax.device_put(x, NamedSharding(mesh, P()))
+        return jax.device_put(x, NamedSharding(mesh, P(axes)))
+
+    trees = jax.tree.map(shard_leaf, st.trees)
+    rep = NamedSharding(mesh, P())
+    return ShardedBSTree(
+        trees=trees,
+        fence_hi=jax.device_put(st.fence_hi, rep),
+        fence_lo=jax.device_put(st.fence_lo, rep),
+        num_shards=st.num_shards,
+    )
+
+
+def _local_tree(trees: BSTreeArrays) -> BSTreeArrays:
+    """Strip the leading (per-device) shard dim inside shard_map."""
+    sq = lambda x: x[0]
+    return BSTreeArrays(
+        leaf_hi=sq(trees.leaf_hi), leaf_lo=sq(trees.leaf_lo),
+        leaf_val=sq(trees.leaf_val), next_leaf=sq(trees.next_leaf),
+        inner_hi=sq(trees.inner_hi), inner_lo=sq(trees.inner_lo),
+        inner_child=sq(trees.inner_child), root=sq(trees.root),
+        num_leaves=sq(trees.num_leaves), num_inner=sq(trees.num_inner),
+        height=trees.height, node_width=trees.node_width,
+    )
+
+
+def _local_lookup(tree: BSTreeArrays, q_hi, q_lo):
+    n = tree.node_width
+    leaf = bstree.descend(tree, q_hi, q_lo)
+    rows_hi = tree.leaf_hi[leaf]
+    rows_lo = tree.leaf_lo[leaf]
+    from .succ import succ_ge
+
+    r = succ_ge(rows_hi, rows_lo, q_hi, q_lo)
+    rc = jnp.minimum(r, n - 1)
+    k_hi = jnp.take_along_axis(rows_hi, rc[:, None], axis=1)[:, 0]
+    k_lo = jnp.take_along_axis(rows_lo, rc[:, None], axis=1)[:, 0]
+    found = (r < n) & (k_hi == q_hi) & (k_lo == q_lo)
+    vals = jnp.take_along_axis(tree.leaf_val[leaf], rc[:, None], axis=1)[:, 0]
+    return found, jnp.where(found, vals, 0)
+
+
+def make_sharded_lookup(
+    mesh: Mesh,
+    *,
+    model_axis: AxisName = "model",
+    data_axes: Sequence[str] = ("data",),
+    capacity_factor: float = 2.0,
+):
+    """Build the jitted SPMD lookup for a mesh.
+
+    Returns ``lookup(st, q_hi, q_lo) -> (found, vals, overflow)`` where the
+    query batch is sharded over (data_axes x model_axis) — every device
+    contributes and receives its own slice, like MoE token dispatch.
+    """
+    model_axes = (model_axis,) if isinstance(model_axis, str) else tuple(model_axis)
+    m_total = int(np.prod([mesh.shape[a] for a in model_axes]))
+    try:
+        from jax import shard_map  # jax >= 0.6
+    except ImportError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map
+
+    def body(trees_stacked, fence_hi, fence_lo, q_hi, q_lo):
+        tree = _local_tree(trees_stacked)
+        bl = q_hi.shape[0]
+        cap = max(1, int(np.ceil(bl / m_total * capacity_factor)))
+
+        # 1. route: target shard per query via the succ operator
+        tgt = succ_gt(fence_hi[None, :], fence_lo[None, :], q_hi, q_lo) - 1
+        tgt = jnp.clip(tgt, 0, m_total - 1)
+
+        # 2. bucket to (m_total, cap) send buffers (stable grouping)
+        order = jnp.argsort(tgt, stable=True)
+        tgt_s = tgt[order]
+        pos = jnp.arange(bl, dtype=jnp.int32)
+        seg_start = jnp.concatenate(
+            [jnp.ones((1,), jnp.int32), (tgt_s[1:] != tgt_s[:-1]).astype(jnp.int32)]
+        )
+        # rank within target = position - first position of its run
+        run_id = jnp.cumsum(seg_start) - 1
+        first_pos = jax.ops.segment_min(
+            pos, run_id, num_segments=bl, indices_are_sorted=True
+        )
+        rank = pos - first_pos[run_id]
+        slot = tgt_s * cap + rank
+        ok = rank < cap
+        slot_safe = jnp.where(ok, slot, m_total * cap)
+
+        def scatter(v):
+            buf = jnp.zeros((m_total * cap,), v.dtype)
+            return buf.at[slot_safe].set(v, mode="drop")
+
+        send_hi = scatter(q_hi[order])
+        send_lo = scatter(q_lo[order])
+        send_valid = jnp.zeros((m_total * cap,), jnp.int32).at[slot_safe].set(
+            1, mode="drop"
+        )
+
+        # 3. exchange -> each device holds m_total chunks of its own keys
+        a2a = lambda x: jax.lax.all_to_all(
+            x, model_axes, split_axis=0, concat_axis=0, tiled=True
+        )
+        recv_hi, recv_lo, recv_valid = a2a(send_hi), a2a(send_lo), a2a(send_valid)
+
+        # 4. local lookup (invalid slots give garbage; masked out)
+        found, vals = _local_lookup(tree, recv_hi, recv_lo)
+        found = found & (recv_valid == 1)
+
+        # 5. return results and unpermute
+        back_f = a2a(found.astype(jnp.int32))
+        back_v = a2a(vals)
+        res_f = back_f[slot_safe.clip(0, m_total * cap - 1)] == 1
+        res_v = back_v[slot_safe.clip(0, m_total * cap - 1)]
+        res_f = jnp.where(ok, res_f, False)
+        res_v = jnp.where(ok, res_v, 0)
+        inv = jnp.argsort(order, stable=True)
+        return res_f[inv], res_v[inv], (~ok)[inv]
+
+    qspec = P((*data_axes, *model_axes))
+    cache: dict = {}
+
+    def lookup(st: ShardedBSTree, q_hi, q_lo):
+        key = (st.trees.height, st.trees.node_width, st.num_shards)
+        if key not in cache:
+            tree_specs = jax.tree.map(lambda _: P(model_axes), st.trees)
+            kwargs = dict(
+                mesh=mesh,
+                in_specs=(tree_specs, P(), P(), qspec, qspec),
+                out_specs=(qspec, qspec, qspec),
+            )
+            try:
+                smapped = shard_map(body, check_vma=False, **kwargs)
+            except TypeError:  # older jax spells it check_rep
+                smapped = shard_map(body, check_rep=False, **kwargs)
+            cache[key] = jax.jit(
+                lambda t, fh, fl, qh, ql: smapped(t, fh, fl, qh, ql)
+            )
+        return cache[key](st.trees, st.fence_hi, st.fence_lo, q_hi, q_lo)
+
+    return lookup
+
+
+# ---------------------------------------------------------------------------
+# Host-orchestrated sharded updates (bulk maintenance path)
+# ---------------------------------------------------------------------------
+
+def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray, vals: np.ndarray):
+    """Route new keys by fence and apply the local bulk insert per shard.
+    Returns (ShardedBSTree, total stats).  Host path — see module docstring."""
+    keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+    vals = np.asarray(vals, dtype=np.uint32)
+    fences = join_u64(np.asarray(st.fence_hi), np.asarray(st.fence_lo))
+    tgt = np.clip(np.searchsorted(fences, keys_u64, side="right") - 1, 0, None)
+    hosts = _unstack_hosts(st)
+    stats = {"inserted": 0, "upserted": 0, "deferred": 0}
+    for s in range(st.num_shards):
+        mask = tgt == s
+        if not mask.any():
+            continue
+        local = bstree.from_host(**hosts[s])
+        local, s_stats = bstree.insert_batch(local, keys_u64[mask], vals[mask])
+        hosts[s] = bstree.to_host(local)
+        for k in ("inserted", "upserted", "deferred"):
+            stats[k] += s_stats[k]
+    return _restack(st, hosts), stats
+
+
+def delete_sharded(st: ShardedBSTree, keys_u64: np.ndarray):
+    keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+    fences = join_u64(np.asarray(st.fence_hi), np.asarray(st.fence_lo))
+    tgt = np.clip(np.searchsorted(fences, keys_u64, side="right") - 1, 0, None)
+    hosts = _unstack_hosts(st)
+    deleted = 0
+    for s in range(st.num_shards):
+        mask = tgt == s
+        if not mask.any():
+            continue
+        local = bstree.from_host(**hosts[s])
+        local, nd = bstree.delete_batch(local, keys_u64[mask])
+        hosts[s] = bstree.to_host(local)
+        deleted += nd
+    return _restack(st, hosts), deleted
+
+
+def _unstack_hosts(st: ShardedBSTree) -> list[dict]:
+    t = st.trees
+    lk = join_u64(np.asarray(t.leaf_hi), np.asarray(t.leaf_lo))
+    ik = join_u64(np.asarray(t.inner_hi), np.asarray(t.inner_lo))
+    lv = np.array(t.leaf_val)
+    nl = np.array(t.next_leaf)
+    ic = np.array(t.inner_child)
+    roots = np.asarray(t.root)
+    n_l = np.asarray(t.num_leaves)
+    n_i = np.asarray(t.num_inner)
+    return [
+        dict(
+            leaf_keys=lk[s].copy(), leaf_vals=lv[s].copy(), next_leaf=nl[s].copy(),
+            inner_keys=ik[s].copy(), inner_child=ic[s].copy(),
+            root=int(roots[s]), num_leaves=int(n_l[s]), num_inner=int(n_i[s]),
+            height=t.height, n=t.node_width,
+        )
+        for s in range(st.num_shards)
+    ]
+
+
+def _restack(st: ShardedBSTree, hosts: list[dict]) -> ShardedBSTree:
+    target_h = max(h["height"] for h in hosts)
+    parts = [bstree.from_host(**h) for h in hosts]
+    parts = [_lift_height(p, target_h) if p.height < target_h else p for p in parts]
+    hosts = [bstree.to_host(p) for p in parts]
+    lcap = max(h["leaf_keys"].shape[0] for h in hosts)
+    icap = max(h["inner_keys"].shape[0] for h in hosts)
+    leaf_keys = np.stack([_pad_rows(h["leaf_keys"], lcap, MAXKEY) for h in hosts])
+    leaf_vals = np.stack([_pad_rows(h["leaf_vals"], lcap, 0) for h in hosts])
+    next_leaf = np.stack([_pad_rows(h["next_leaf"], lcap, -1) for h in hosts])
+    inner_keys = np.stack([_pad_rows(h["inner_keys"], icap, MAXKEY) for h in hosts])
+    inner_child = np.stack([_pad_rows(h["inner_child"], icap, 0) for h in hosts])
+    lhi, llo = split_u64(leaf_keys)
+    ihi, ilo = split_u64(inner_keys)
+    trees = BSTreeArrays(
+        leaf_hi=jnp.asarray(lhi), leaf_lo=jnp.asarray(llo),
+        leaf_val=jnp.asarray(leaf_vals), next_leaf=jnp.asarray(next_leaf),
+        inner_hi=jnp.asarray(ihi), inner_lo=jnp.asarray(ilo),
+        inner_child=jnp.asarray(inner_child),
+        root=jnp.asarray([h["root"] for h in hosts], jnp.int32),
+        num_leaves=jnp.asarray([h["num_leaves"] for h in hosts], jnp.int32),
+        num_inner=jnp.asarray([h["num_inner"] for h in hosts], jnp.int32),
+        height=target_h, node_width=st.trees.node_width,
+    )
+    return ShardedBSTree(
+        trees=trees, fence_hi=st.fence_hi, fence_lo=st.fence_lo,
+        num_shards=st.num_shards,
+    )

@@ -1,0 +1,213 @@
+"""Node layout for the BS-tree, adapted to TPU.
+
+The paper stores each node's keys in a fixed 1024-bit block (16 x u64 on
+AVX-512, two cache lines).  On TPU the native vector shape is an (8, 128)
+tile of 32-bit lanes and there are **no 64-bit lanes**, so:
+
+* u64 keys are stored as two u32 *planes* (hi, lo).  All comparisons are
+  done branchlessly on the planes (see :mod:`repro.core.succ`).
+* the default node width is ``N = 128`` keys — one 128-lane row per plane;
+  eight nodes stack into a full (8, 128) vreg tile.  The physical byte
+  budget of a node's key block is ``128 * 8B = 1 KiB``; FOR compression
+  (:mod:`repro.core.compress`) fits 256 u32 or 512 u16 deltas in the same
+  budget (variable *logical* capacity, fixed *physical* block — paper §5).
+
+Gap invariant (paper §4, the core novelty)
+------------------------------------------
+Every unused slot holds a copy of the first subsequent used key (or MAXKEY
+when no used slot follows).  Hence each node's key row is always sorted and
+the successor operator is a branchless count.  A corollary we exploit
+beyond the paper: the used-slot bitmap is *derivable* from the keys alone
+(slot i is used iff ``keys[i] != keys[i+1]``, last slot iff
+``keys[N-1] != MAXKEY``), so we never materialise it in index memory —
+a footprint saving the paper's explicit per-node bitmap does not have.
+
+Values (record ids) stored in leaves obey the same duplication invariant so
+that a lookup landing on a gap that aliases key ``k`` still returns ``k``'s
+record id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants
+# ---------------------------------------------------------------------------
+
+#: Default node width (keys per node).  One 128-lane VPU row per u32 plane.
+DEFAULT_N = 128
+
+#: MAXKEY sentinel = 2^64 - 1; valid key domain is [0, 2^64 - 2].
+MAXKEY = np.uint64(0xFFFFFFFFFFFFFFFF)
+MAXKEY_HI = np.uint32(0xFFFFFFFF)
+MAXKEY_LO = np.uint32(0xFFFFFFFF)
+
+#: Default bulk-load occupancy for leaves (paper §4.3: alpha = 0.75).
+DEFAULT_ALPHA = 0.75
+
+#: Occupancy growth per level above the leaves (paper: "increase alpha as
+#: we go up").
+ALPHA_LEVEL_GROWTH = 0.125
+
+_U32 = np.uint64(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# u64 <-> dual-u32 plane conversion (host side, numpy)
+# ---------------------------------------------------------------------------
+
+def split_u64(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split u64 keys into (hi, lo) u32 planes (host-side)."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    hi = (keys >> np.uint64(32)).astype(np.uint32)
+    lo = (keys & _U32).astype(np.uint32)
+    return hi, lo
+
+
+def join_u64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """Join (hi, lo) u32 planes back into u64 keys (host-side)."""
+    return (np.asarray(hi, dtype=np.uint64) << np.uint64(32)) | np.asarray(
+        lo, dtype=np.uint64
+    )
+
+
+# ---------------------------------------------------------------------------
+# Derived bitmap / slot accounting (vectorised, works on any trailing axis)
+# ---------------------------------------------------------------------------
+
+def used_mask(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    """Derive the used-slot mask from the gap-duplication invariant.
+
+    Slot i is used iff its key differs from slot i+1's key; the last slot
+    is used iff it is not MAXKEY.  Works for (..., N) planes.
+    """
+    nxt_hi = jnp.concatenate(
+        [hi[..., 1:], jnp.full(hi.shape[:-1] + (1,), MAXKEY_HI, hi.dtype)], axis=-1
+    )
+    nxt_lo = jnp.concatenate(
+        [lo[..., 1:], jnp.full(lo.shape[:-1] + (1,), MAXKEY_LO, lo.dtype)], axis=-1
+    )
+    differs = (hi != nxt_hi) | (lo != nxt_lo)
+    is_max = (hi == MAXKEY_HI) & (lo == MAXKEY_LO)
+    # last slot: used iff != MAXKEY.  differs handles it except the case
+    # keys[N-1] == MAXKEY == pad, which is correctly "unused".
+    return differs & ~is_max
+
+
+def slot_use(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    """Number of used slots per node: (..., N) -> (...,)."""
+    return jnp.sum(used_mask(hi, lo).astype(jnp.int32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Tree container (functional pytree)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BSTreeArrays:
+    """Flat SoA storage of a BS-tree.  All updates are functional.
+
+    Inner nodes of every level live in one flat array; a node's children
+    are int32 offsets either into the inner array (levels > 1) or into the
+    leaf array (level 1).  ``height`` counts inner levels (0 = leaves only,
+    i.e. a single-leaf tree is height 0 with ``root`` indexing leaves).
+
+    Capacity slack: ``num_leaves``/``num_inner`` give the *used* prefix;
+    rows past them are preallocated for splits (MAXKEY-filled).
+    """
+
+    # --- leaves ---
+    leaf_hi: jnp.ndarray  # (Lcap, N) uint32
+    leaf_lo: jnp.ndarray  # (Lcap, N) uint32
+    leaf_val: jnp.ndarray  # (Lcap, N) uint32 record ids (gap-duplicated)
+    next_leaf: jnp.ndarray  # (Lcap,) int32, -1 terminates
+    # --- inner ---
+    inner_hi: jnp.ndarray  # (Mcap, N) uint32
+    inner_lo: jnp.ndarray  # (Mcap, N) uint32
+    inner_child: jnp.ndarray  # (Mcap, N) int32
+    # --- scalars (static for traversal shape purposes) ---
+    root: jnp.ndarray  # () int32: inner id (height>0) or leaf id (height==0)
+    num_leaves: jnp.ndarray  # () int32
+    num_inner: jnp.ndarray  # () int32
+    height: int = dataclasses.field(metadata=dict(static=True))
+    node_width: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def leaf_capacity(self) -> int:
+        return self.leaf_hi.shape[0]
+
+    @property
+    def inner_capacity(self) -> int:
+        return self.inner_hi.shape[0]
+
+    def memory_bytes(self) -> int:
+        """Exact index footprint in bytes (the paper's Table 2 metric)."""
+        total = 0
+        for f in dataclasses.fields(self):
+            if f.metadata.get("static"):
+                continue
+            arr = getattr(self, f.name)
+            total += arr.size * arr.dtype.itemsize
+        return int(total)
+
+
+def empty_leaf_planes(
+    rows: int, n: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """MAXKEY-filled leaf planes + zero values."""
+    hi = jnp.full((rows, n), MAXKEY_HI, dtype=jnp.uint32)
+    lo = jnp.full((rows, n), MAXKEY_LO, dtype=jnp.uint32)
+    val = jnp.zeros((rows, n), dtype=jnp.uint32)
+    return hi, lo, val
+
+
+# ---------------------------------------------------------------------------
+# Gap spreading (paper §4.3): place one gap after every 1/(1-alpha) - 1 keys
+# ---------------------------------------------------------------------------
+
+def spread_positions(num_keys: int, n: int, alpha: float) -> np.ndarray:
+    """Slot positions for ``num_keys`` keys spread over an ``n``-wide node.
+
+    Interleaves gaps uniformly (the paper puts one gap after every
+    ``1/(1-alpha) - 1`` entries).  Host-side helper used by bulk loading;
+    returns an int32 array of strictly increasing slot indices < n.
+    """
+    if num_keys == 0:
+        return np.zeros((0,), dtype=np.int32)
+    if num_keys >= n:
+        return np.arange(n, dtype=np.int32)[:num_keys]
+    # Spread keys evenly across the node: key j -> floor(j * n / num_keys).
+    # This generalises the paper's "one gap after every 1/(1-alpha)-1 keys"
+    # to arbitrary occupancies (identical placement at alpha = 0.75, N=16).
+    del alpha  # occupancy is implied by num_keys / n
+    pos = np.minimum((np.arange(num_keys) * n) // num_keys, n - 1).astype(np.int32)
+    # enforce strictly increasing (degenerate only when num_keys ~ n)
+    for j in range(1, num_keys):
+        if pos[j] <= pos[j - 1]:
+            pos[j] = pos[j - 1] + 1
+    overflow = pos[-1] - (n - 1)
+    if overflow > 0:
+        pos = np.maximum(pos - overflow, np.arange(num_keys, dtype=np.int32))
+    return pos.astype(np.int32)
+
+
+def fill_gaps_forward(keys_u64: np.ndarray) -> np.ndarray:
+    """Given a node row where unused slots hold MAXKEY placeholders *after*
+    scattering real keys, rewrite every gap to the first subsequent real key
+    (the paper's duplication rule).  Host-side numpy helper.
+    """
+    out = keys_u64.copy()
+    nxt = MAXKEY
+    for i in range(len(out) - 1, -1, -1):
+        if out[i] == MAXKEY:
+            out[i] = nxt
+        else:
+            nxt = out[i]
+    return out

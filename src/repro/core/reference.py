@@ -1,0 +1,464 @@
+"""Host-side scalar reference BS-tree — the oracle for all tests.
+
+This is a deliberately loopy, obviously-correct numpy implementation of the
+paper's Algorithms 3 (equality search), 4 (range search), 5 (deletion),
+6 (insertion) and §4.3 (gapped bulk loading), with the same flat-array node
+layout as the JAX implementation so states are directly comparable.
+
+Layout conventions (shared with :mod:`repro.core.bstree`):
+
+* every node row is ``N`` u64 key slots; unused slots duplicate the first
+  subsequent used key, or MAXKEY if none follows (paper §4);
+* inner nodes keep slot ``N-1`` permanently at MAXKEY so the branch count
+  ``succ_gt`` is always a valid child slot; the child pointer followed for
+  count ``c`` lives at child slot ``c``;
+* leaves additionally store a value (record id) per slot, duplicated into
+  gaps exactly like keys, plus a next-leaf chain.
+
+Deviation from the paper (documented in DESIGN.md §8): range scans continue
+through *empty* leaves (the paper lazily leaves emptied nodes in the chain,
+which as written in Alg. 4 would truncate scans at an empty leaf).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .layout import DEFAULT_ALPHA, ALPHA_LEVEL_GROWTH, MAXKEY, spread_positions
+
+U64 = np.uint64
+
+
+def _succ_gt(keys: np.ndarray, k) -> int:
+    """|{x in keys : k >= x}| — Snippet 1 semantics, scalar."""
+    count = 0
+    for x in keys:
+        count += int(U64(k) >= x)
+    return count
+
+
+def _succ_ge(keys: np.ndarray, k) -> int:
+    """|{x in keys : k > x}|."""
+    count = 0
+    for x in keys:
+        count += int(U64(k) > x)
+    return count
+
+
+class ReferenceBSTree:
+    """Scalar oracle.  Keys are unique u64 in [0, 2^64 - 2]."""
+
+    def __init__(self, n: int = 16):
+        self.n = n
+        # leaves
+        self.leaf_keys = np.zeros((0, n), dtype=U64)
+        self.leaf_vals = np.zeros((0, n), dtype=np.uint32)
+        self.next_leaf: list[int] = []
+        # inner (all levels flat; children index inner or leaves at level 1)
+        self.inner_keys = np.zeros((0, n), dtype=U64)
+        self.inner_child = np.zeros((0, n), dtype=np.int32)
+        self.inner_level: list[int] = []  # level of each inner node (1 = above leaves)
+        self.root = 0
+        self.height = 0  # number of inner levels
+
+    # ------------------------------------------------------------------
+    # Bulk loading (paper §4.3)
+    # ------------------------------------------------------------------
+    @classmethod
+    def bulk_load(
+        cls, keys, vals=None, n: int = 16, alpha: float = DEFAULT_ALPHA
+    ) -> "ReferenceBSTree":
+        keys = np.asarray(keys, dtype=U64)
+        assert np.all(keys[:-1] < keys[1:]), "keys must be sorted unique"
+        if vals is None:
+            vals = np.arange(len(keys), dtype=np.uint32)
+        vals = np.asarray(vals, dtype=np.uint32)
+        t = cls(n=n)
+        if len(keys) == 0:
+            t.leaf_keys = np.full((1, n), MAXKEY, dtype=U64)
+            t.leaf_vals = np.zeros((1, n), dtype=np.uint32)
+            t.next_leaf = [-1]
+            return t
+
+        per_leaf = max(1, int(round(alpha * n)))
+        num_leaves = (len(keys) + per_leaf - 1) // per_leaf
+        t.leaf_keys = np.full((num_leaves, n), MAXKEY, dtype=U64)
+        t.leaf_vals = np.zeros((num_leaves, n), dtype=np.uint32)
+        t.next_leaf = [i + 1 for i in range(num_leaves)]
+        t.next_leaf[-1] = -1
+        seps = []  # (first_key_of_leaf, leaf_id) for leaves after the first
+        for li in range(num_leaves):
+            chunk = keys[li * per_leaf : (li + 1) * per_leaf]
+            vchunk = vals[li * per_leaf : (li + 1) * per_leaf]
+            pos = spread_positions(len(chunk), n, alpha)
+            t.leaf_keys[li, pos] = chunk
+            t.leaf_vals[li, pos] = vchunk
+            _refill_gaps(t.leaf_keys[li], t.leaf_vals[li])
+            if li > 0:
+                seps.append((chunk[0], li))
+
+        # build inner levels recursively over separator arrays
+        level = 1
+        child_ids = list(range(num_leaves))
+        sep_keys = [k for k, _ in seps]
+        a = alpha
+        while len(child_ids) > 1:
+            a = min(1.0, a + ALPHA_LEVEL_GROWTH)
+            # each inner node holds up to n-1 separators and n children;
+            # at occupancy a: per_node = max(2, round(a * (n-1))) children
+            per_node = max(2, int(round(a * (n - 1))))
+            new_children, new_seps = [], []
+            i = 0
+            while i < len(child_ids):
+                group = child_ids[i : i + per_node]
+                gseps = sep_keys[i : i + per_node - 1]
+                node_id = t._alloc_inner(level)
+                # children at slots 0..len(group)-1, separators at 0..len-2;
+                # bulk load packs inner nodes (gaps mostly at leaves).
+                for j, c in enumerate(group):
+                    t.inner_child[node_id, j] = c
+                row = t.inner_keys[node_id]
+                for j, s in enumerate(gseps):
+                    row[j] = s
+                new_children.append(node_id)
+                if i > 0:
+                    new_seps.append(sep_keys[i - 1])
+                i += per_node
+            child_ids = new_children
+            sep_keys = new_seps
+            level += 1
+        t.root = child_ids[0]
+        t.height = level - 1 if t.inner_keys.shape[0] else 0
+        if t.height == 0:
+            t.root = 0
+        return t
+
+    def _alloc_inner(self, level: int) -> int:
+        self.inner_keys = np.vstack(
+            [self.inner_keys, np.full((1, self.n), MAXKEY, dtype=U64)]
+        )
+        self.inner_child = np.vstack(
+            [self.inner_child, np.zeros((1, self.n), dtype=np.int32)]
+        )
+        self.inner_level.append(level)
+        return self.inner_keys.shape[0] - 1
+
+    def _alloc_leaf(self) -> int:
+        self.leaf_keys = np.vstack(
+            [self.leaf_keys, np.full((1, self.n), MAXKEY, dtype=U64)]
+        )
+        self.leaf_vals = np.vstack(
+            [self.leaf_vals, np.zeros((1, self.n), dtype=np.uint32)]
+        )
+        self.next_leaf.append(-1)
+        return self.leaf_keys.shape[0] - 1
+
+    # ------------------------------------------------------------------
+    # Search (Algorithms 3 & 4)
+    # ------------------------------------------------------------------
+    def _descend(self, k) -> list[tuple[int, int]]:
+        """Root-to-leaf path: [(inner_id, followed_slot), ...], leaf last."""
+        path = []
+        node = self.root
+        for _ in range(self.height):
+            c = _succ_gt(self.inner_keys[node], k)
+            path.append((node, c))
+            node = int(self.inner_child[node, c])
+        path.append((node, -1))  # leaf id
+        return path
+
+    def lookup(self, k):
+        """Algorithm 3.  Returns record id or None."""
+        leaf = self._descend(k)[-1][0]
+        r = _succ_ge(self.leaf_keys[leaf], k)
+        if r < self.n and self.leaf_keys[leaf][r] == U64(k):
+            return int(self.leaf_vals[leaf][r])
+        return None
+
+    def range_query(self, k1, k2) -> list[int]:
+        """Algorithm 4: record ids of keys in [k1, k2] (with the empty-leaf
+        chain-continuation fix, see module docstring)."""
+        leaf = self._descend(k1)[-1][0]
+        out = []
+        r1 = _succ_ge(self.leaf_keys[leaf], k1)
+        while True:
+            keys = self.leaf_keys[leaf]
+            r2 = _succ_gt(keys, k2)
+            for i in range(r1, r2):
+                if _is_used_slot(keys, i):
+                    out.append(int(self.leaf_vals[leaf][i]))
+            # Continue while this leaf has no *real* key > k2.  The paper's
+            # Alg. 4 tests only r2 == N, which under-scans when a leaf has
+            # trailing MAXKEY gaps (sparse leaves are the design!) — the
+            # gap-aware condition adds keys[r2] == MAXKEY (covers empty
+            # leaves too).  See DESIGN.md §8.
+            if r2 == self.n or keys[r2] == MAXKEY:
+                nxt = self.next_leaf[leaf]
+                if nxt == -1:
+                    break
+                leaf, r1 = nxt, 0
+            else:
+                break
+        return out
+
+    # ------------------------------------------------------------------
+    # Insertion (Algorithm 6 + splits)
+    # ------------------------------------------------------------------
+    def insert(self, k, val) -> bool:
+        k = U64(k)
+        assert k != MAXKEY, "MAXKEY is reserved"
+        path = self._descend(k)
+        leaf = path[-1][0]
+        keys, vals = self.leaf_keys[leaf], self.leaf_vals[leaf]
+        r = _succ_ge(keys, k)
+        if r < self.n and keys[r] == k:
+            # upsert: key exists; rewrite value over its whole dup-run
+            j = r
+            while j < self.n and keys[j] == k:
+                vals[j] = val
+                j += 1
+            return False
+        if _slot_use(keys) < self.n:
+            _node_insert(keys, vals, r, k, np.uint32(val), self.n)
+            return True
+        # leaf full -> split (paper §4.2 last paragraph + §4.3 interleaving)
+        self._split_leaf(path, k, np.uint32(val))
+        return True
+
+    def _split_leaf(self, path, k, val):
+        leaf = path[-1][0]
+        keys, vals = self.leaf_keys[leaf], self.leaf_vals[leaf]
+        used = [(keys[i], vals[i]) for i in range(self.n) if _is_used_slot(keys, i)]
+        merged_k = [x for x, _ in used]
+        merged_v = [v for _, v in used]
+        p = int(np.searchsorted(np.asarray(merged_k, dtype=U64), k))
+        merged_k.insert(p, k)
+        merged_v.insert(p, val)
+        half = (len(merged_k) + 1) // 2
+        right_id = self._alloc_leaf()
+        sep = U64(merged_k[half])
+        for dst, lo, hi in ((leaf, 0, half), (right_id, half, len(merged_k))):
+            dk = self.leaf_keys[dst]
+            dv = self.leaf_vals[dst]
+            dk[:] = MAXKEY
+            dv[:] = 0
+            pos = spread_positions(hi - lo, self.n, 0.5)
+            for j, src in enumerate(range(lo, hi)):
+                dk[pos[j]] = merged_k[src]
+                dv[pos[j]] = merged_v[src]
+            _refill_gaps(dk, dv)
+        self.next_leaf[right_id] = self.next_leaf[leaf]
+        self.next_leaf[leaf] = right_id
+        self._insert_separator(path[:-1], sep, right_id)
+
+    def _insert_separator(self, inner_path, sep, right_child):
+        """Insert (sep, right_child) into the parent chain, splitting upward."""
+        if not inner_path:
+            # root split: new root with one separator
+            new_root = self._alloc_inner(self.height + 1)
+            old_root_is_leaf = self.height == 0
+            left = self.root
+            self.inner_keys[new_root, 0] = sep
+            self.inner_child[new_root, 0] = left
+            self.inner_child[new_root, 1] = right_child
+            self.root = new_root
+            self.height += 1
+            del old_root_is_leaf
+            return
+        parent, _ = inner_path[-1]
+        keys = self.inner_keys[parent]
+        # effective separator capacity: n - 1 (slot n-1 is the MAXKEY pad)
+        if _slot_use(keys[: self.n - 1]) < self.n - 1:
+            r = _succ_gt(keys, sep)
+            _inner_insert(keys, self.inner_child[parent], r, sep, right_child, self.n)
+            return
+        # parent full -> split inner node
+        self._split_inner(inner_path, sep, right_child)
+
+    def _split_inner(self, inner_path, sep, right_child):
+        node, _ = inner_path[-1]
+        keys = self.inner_keys[node]
+        childs = self.inner_child[node]
+        # collect (child, sep-after-child) sequence of used entries
+        seps, kids = [], []
+        for i in range(self.n):
+            if i == 0 or _is_used_slot(keys, i - 1):
+                kids.append(int(childs[i]))
+            if i < self.n - 1 and _is_used_slot(keys, i):
+                seps.append(U64(keys[i]))
+        kids = kids[: len(seps) + 1]
+        p = int(np.searchsorted(np.asarray(seps, dtype=U64), sep))
+        seps.insert(p, U64(sep))
+        kids.insert(p + 1, int(right_child))
+        mid = len(seps) // 2
+        up_sep = seps[mid]
+        left_seps, right_seps = seps[:mid], seps[mid + 1 :]
+        left_kids, right_kids = kids[: mid + 1], kids[mid + 1 :]
+        level = self.inner_level[node] if node < len(self.inner_level) else 0
+        right_id = self._alloc_inner(level)
+        for nid, ss, kk in ((node, left_seps, left_kids), (right_id, right_seps, right_kids)):
+            self.inner_keys[nid, :] = MAXKEY
+            self.inner_child[nid, :] = 0
+            for j, s in enumerate(ss):
+                self.inner_keys[nid, j] = s
+            for j, c in enumerate(kk):
+                self.inner_child[nid, j] = c
+        self._insert_separator(inner_path[:-1], up_sep, right_id)
+
+    # ------------------------------------------------------------------
+    # Deletion (Algorithm 5)
+    # ------------------------------------------------------------------
+    def delete(self, k) -> bool:
+        k = U64(k)
+        leaf = self._descend(k)[-1][0]
+        keys, vals = self.leaf_keys[leaf], self.leaf_vals[leaf]
+        r = _succ_ge(keys, k)
+        if r >= self.n or keys[r] != k:
+            return False
+        # the dup-run of k spans [r, j]; j is the used slot
+        j = r
+        while j + 1 < self.n and keys[j + 1] == k:
+            j += 1
+        nxt_key = keys[j + 1] if j + 1 < self.n else MAXKEY
+        nxt_val = vals[j + 1] if j + 1 < self.n else np.uint32(0)
+        keys[r : j + 1] = nxt_key
+        vals[r : j + 1] = nxt_val
+        # paper: no merging; emptied nodes are handled lazily.
+        return True
+
+    # ------------------------------------------------------------------
+    # Introspection / invariant checks (used by property tests)
+    # ------------------------------------------------------------------
+    def items(self) -> list[tuple[int, int]]:
+        """All (key, val) pairs in order, walking the leaf chain."""
+        out = []
+        # find leftmost leaf by descending with key 0
+        leaf = self._descend(0)[-1][0]
+        while leaf != -1:
+            keys = self.leaf_keys[leaf]
+            for i in range(self.n):
+                if _is_used_slot(keys, i):
+                    out.append((int(keys[i]), int(self.leaf_vals[leaf][i])))
+            leaf = self.next_leaf[leaf]
+        return out
+
+    def check_invariants(self):
+        """Assert the gap-duplication invariant on every reachable node."""
+        for row in self.leaf_keys:
+            _check_row(row, self.n)
+        for row in self.inner_keys:
+            _check_row(row, self.n)
+            assert row[self.n - 1] == MAXKEY, "inner pad slot must stay MAXKEY"
+        items = self.items()
+        ks = [k for k, _ in items]
+        assert ks == sorted(ks), "leaf chain out of order"
+        assert len(set(ks)) == len(ks), "duplicate keys"
+
+
+# ---------------------------------------------------------------------------
+# Row-level helpers (shared semantics with the vectorised implementation)
+# ---------------------------------------------------------------------------
+
+def _is_used_slot(keys: np.ndarray, i: int) -> bool:
+    n = len(keys)
+    if keys[i] == MAXKEY:
+        return False
+    if i == n - 1:
+        return True
+    return keys[i] != keys[i + 1]
+
+
+def _slot_use(keys: np.ndarray) -> int:
+    return sum(_is_used_slot(keys, i) for i in range(len(keys)))
+
+
+def _refill_gaps(keys: np.ndarray, vals: np.ndarray | None):
+    """Rewrite MAXKEY placeholders to the next used key (build-time only)."""
+    nxt_k = MAXKEY
+    nxt_v = np.uint32(0)
+    for i in range(len(keys) - 1, -1, -1):
+        if keys[i] == MAXKEY:
+            keys[i] = nxt_k
+            if vals is not None:
+                vals[i] = nxt_v
+        else:
+            nxt_k = keys[i]
+            if vals is not None:
+                nxt_v = vals[i]
+
+
+def _check_row(keys: np.ndarray, n: int):
+    assert all(keys[i] <= keys[i + 1] for i in range(n - 1)), "row not sorted"
+    # every gap must equal the first subsequent used key (or MAXKEY)
+    for i in range(n):
+        if not _is_used_slot(keys, i) and keys[i] != MAXKEY:
+            j = i + 1
+            while j < n and not _is_used_slot(keys, j):
+                j += 1
+            assert j < n and keys[i] == keys[j], "gap does not duplicate successor"
+
+
+def _node_insert(keys, vals, r, k, val, n):
+    """Algorithm 6 in-node path: place k at r, shifting to the nearest gap.
+
+    ``r == n`` (k greater than every slot value, only mid-gaps free) falls
+    through to the left-shift branch, inserting at slot n-1.
+    """
+    if r < n:
+        nxt = keys[r + 1] if r + 1 < n else MAXKEY
+        if keys[r] == nxt:
+            # r is a gap (duplicate of next slot / trailing MAXKEY): write
+            keys[r] = k
+            vals[r] = val
+            return
+        # occupied: find first gap j > r (right shift) ...
+        for j in range(r + 1, n):
+            if not _is_used_slot(keys, j):
+                keys[r + 1 : j + 1] = keys[r:j]
+                vals[r + 1 : j + 1] = vals[r:j]
+                keys[r] = k
+                vals[r] = val
+                return
+    # ... else last gap g < r (left shift), Alg. 6 lines 13-17
+    r = min(r, n)
+    g = None
+    for cand in range(r - 1, -1, -1):
+        if not _is_used_slot(keys, cand):
+            g = cand
+            break
+    assert g is not None, "caller must guarantee a free slot"
+    keys[g : r - 1] = keys[g + 1 : r]
+    vals[g : r - 1] = vals[g + 1 : r]
+    keys[r - 1] = k
+    vals[r - 1] = val
+
+
+def _inner_insert(keys, childs, r, sep, right_child, n):
+    """Insert separator at slot r (succ_gt position) with its right child at
+    child slot r+1, shifting keys/children toward the nearest gap.  Slot n-1
+    stays MAXKEY (separator capacity n-1).  ``r == n-1`` (sep greater than
+    every separator, only mid-gaps free) uses the left-shift branch.
+    """
+    limit = n - 1  # separators live in [0, n-2]; slot n-1 is the pad
+    if r < limit:
+        if keys[r] == keys[r + 1]:  # gap (slot n-1 pad serves as sentinel)
+            keys[r] = sep
+            childs[r + 1] = right_child
+            return
+        for j in range(r + 1, limit):
+            if not _is_used_slot(keys, j):
+                keys[r + 1 : j + 1] = keys[r:j]
+                childs[r + 2 : j + 2] = childs[r + 1 : j + 1]
+                keys[r] = sep
+                childs[r + 1] = right_child
+                return
+    r = min(r, limit)
+    g = None
+    for cand in range(r - 1, -1, -1):
+        if not _is_used_slot(keys, cand):
+            g = cand
+            break
+    assert g is not None, "caller must guarantee inner free slot"
+    keys[g : r - 1] = keys[g + 1 : r]
+    childs[g + 1 : r] = childs[g + 2 : r + 1]
+    keys[r - 1] = sep
+    childs[r] = right_child

@@ -1,0 +1,96 @@
+"""Branchless successor operators (paper §3.2, Snippets 1 & 2).
+
+``succ_gt(v, k)``  = |{x in v.keys : k >= x}| — position of the smallest key
+*strictly greater* than ``k`` (used for branching in inner nodes).
+
+``succ_ge(v, k)``  = |{x in v.keys : k >  x}| — position of the smallest key
+*greater than or equal to* ``k`` (used in leaves).
+
+Thanks to the gap-duplication invariant every node row is sorted, so these
+counts are exactly ``searchsorted`` positions — but computed as an if-less
+vector compare + reduce, the direct TPU analogue of the paper's AVX-512
+``cmp`` + ``popcnt`` (the VPU has native lane-wise compare and fast
+cross-lane integer reduction; there is no scalar branch anywhere).
+
+u64 keys live as two u32 planes (hi, lo); unsigned 64-bit comparison is the
+branchless plane combination::
+
+    (a_hi, a_lo) >= (b_hi, b_lo)  <=>  a_hi > b_hi | (a_hi == b_hi & a_lo >= b_lo)
+
+All functions broadcast: node planes ``(..., N)`` against queries ``(...,)``
+and return int32 counts ``(...,)``.
+
+These operators double as the framework-wide branchless ``searchsorted``
+primitive — reused by MoE expert dispatch, top-p sampling and length
+bucketing (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "cmp_ge_u64",
+    "cmp_gt_u64",
+    "succ_gt",
+    "succ_ge",
+    "succ_gt_plane",
+    "succ_ge_plane",
+    "searchsorted_left",
+    "searchsorted_right",
+]
+
+
+def cmp_ge_u64(q_hi, q_lo, k_hi, k_lo):
+    """(q >= k) lane-wise for u64 values split into u32 planes."""
+    return (q_hi > k_hi) | ((q_hi == k_hi) & (q_lo >= k_lo))
+
+
+def cmp_gt_u64(q_hi, q_lo, k_hi, k_lo):
+    """(q > k) lane-wise for u64 values split into u32 planes."""
+    return (q_hi > k_hi) | ((q_hi == k_hi) & (q_lo > k_lo))
+
+
+def succ_gt(node_hi, node_lo, q_hi, q_lo):
+    """count(node.keys <= q): position of the first key strictly > q.
+
+    node planes: (..., N) uint32;  query planes: (...,) uint32.
+    """
+    q_hi = jnp.asarray(q_hi, node_hi.dtype)[..., None]
+    q_lo = jnp.asarray(q_lo, node_lo.dtype)[..., None]
+    mask = cmp_ge_u64(q_hi, q_lo, node_hi, node_lo)
+    return jnp.sum(mask.astype(jnp.int32), axis=-1)
+
+
+def succ_ge(node_hi, node_lo, q_hi, q_lo):
+    """count(node.keys < q): position of the first key >= q."""
+    q_hi = jnp.asarray(q_hi, node_hi.dtype)[..., None]
+    q_lo = jnp.asarray(q_lo, node_lo.dtype)[..., None]
+    mask = cmp_gt_u64(q_hi, q_lo, node_hi, node_lo)
+    return jnp.sum(mask.astype(jnp.int32), axis=-1)
+
+
+# --- single-plane variants (FOR-compressed nodes: u32 / u16 deltas, and any
+# natively comparable dtype).  Queries broadcast the same way. -------------
+
+def succ_gt_plane(node_keys, q):
+    """count(node.keys <= q) for single-plane keys of any unsigned dtype."""
+    q = jnp.asarray(q, node_keys.dtype)[..., None]
+    return jnp.sum((q >= node_keys).astype(jnp.int32), axis=-1)
+
+
+def succ_ge_plane(node_keys, q):
+    """count(node.keys < q) for single-plane keys."""
+    q = jnp.asarray(q, node_keys.dtype)[..., None]
+    return jnp.sum((q > node_keys).astype(jnp.int32), axis=-1)
+
+
+# --- searchsorted aliases used by the LM stack (MoE dispatch, top-p) ------
+
+def searchsorted_left(sorted_row, values):
+    """Branchless jnp.searchsorted(side='left') via the succ operator."""
+    return succ_ge_plane(sorted_row, values)
+
+
+def searchsorted_right(sorted_row, values):
+    """Branchless jnp.searchsorted(side='right') via the succ operator."""
+    return succ_gt_plane(sorted_row, values)

@@ -1,0 +1,116 @@
+"""MVCC snapshot versioning — the SPMD adaptation of the paper's OLC (§7).
+
+Optimistic lock coupling lets CPU threads traverse while writers mutate,
+validating version stamps and retrying on conflict.  In SPMD JAX there is
+no shared-memory mutation: updates are *functional* — a writer produces
+index version v+1 while readers keep using the immutable version v.  The
+OLC semantics map as:
+
+  OLC read lock + validate   ->  pin a snapshot (refcount); reads are
+                                 always consistent, never retry
+  OLC write lock + CAS       ->  optimistic commit: writers record the
+                                 base version; commit succeeds only if the
+                                 base is still current, else the batch is
+                                 REBASED (re-applied to the new current) —
+                                 the analogue of OLC's restart-from-root
+  node version stamps        ->  one version counter per index (batched
+                                 updates make per-node stamps moot; a
+                                 shard-level counter gives the same
+                                 granularity as the paper's relaxed
+                                 restart rule, see §7 last paragraph)
+
+Old versions are retired when their last reader unpins (refcount), which
+bounds memory at (#live snapshots + 1) — on-device buffers are donated by
+XLA when no snapshot holds them.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+@dataclass
+class _Version:
+    value: Any
+    version: int
+    refs: int = 0
+
+
+class VersionedIndex:
+    """Thread-safe MVCC wrapper around an immutable index pytree."""
+
+    def __init__(self, initial: Any):
+        self._lock = threading.Lock()
+        self._current = _Version(initial, 0)
+        self._pinned: dict[int, _Version] = {}
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._current.version
+
+    # -- readers ---------------------------------------------------------
+    def pin(self) -> tuple[int, Any]:
+        """Acquire a consistent snapshot; pair with :meth:`unpin`."""
+        with self._lock:
+            v = self._current
+            v.refs += 1
+            self._pinned[v.version] = v
+            return v.version, v.value
+
+    def unpin(self, version: int) -> None:
+        with self._lock:
+            v = self._pinned.get(version)
+            if v is None:
+                return
+            v.refs -= 1
+            if v.refs <= 0 and v is not self._current:
+                del self._pinned[version]  # buffers become collectable
+
+    class _Snapshot:
+        def __init__(self, owner: "VersionedIndex"):
+            self._owner = owner
+
+        def __enter__(self):
+            self.version, self.value = self._owner.pin()
+            return self
+
+        def __exit__(self, *exc):
+            self._owner.unpin(self.version)
+            return False
+
+    def snapshot(self) -> "VersionedIndex._Snapshot":
+        """``with idx.snapshot() as s: use(s.value)``"""
+        return VersionedIndex._Snapshot(self)
+
+    # -- writers ---------------------------------------------------------
+    def commit(self, base_version: int, new_value: Any) -> bool:
+        """Optimistic commit: succeeds iff ``base_version`` is current."""
+        with self._lock:
+            if self._current.version != base_version:
+                return False
+            old = self._current
+            self._current = _Version(new_value, base_version + 1)
+            if old.refs <= 0:
+                self._pinned.pop(old.version, None)
+            return True
+
+    def update(
+        self,
+        fn: Callable[[Any], Any],
+        *,
+        max_retries: int = 8,
+    ) -> tuple[int, Any]:
+        """OLC-style optimistic update loop: apply ``fn`` to the current
+        value; on conflict (concurrent commit) rebase and retry — the
+        functional analogue of 'roll back and retry from the root'."""
+        for _ in range(max_retries):
+            base, value = self.pin()
+            try:
+                new_value = fn(value)
+            finally:
+                self.unpin(base)
+            if self.commit(base, new_value):
+                return base + 1, new_value
+        raise RuntimeError("VersionedIndex.update: too many conflicts")

@@ -1,0 +1,2 @@
+from .pipeline import SyntheticLMDataset, make_batch_iterator  # noqa: F401
+from .keys import KEY_DISTRIBUTIONS, gen_keys  # noqa: F401

@@ -1,0 +1,81 @@
+"""Synthetic u64 key distributions modelling the paper's datasets (§8.1).
+
+The real datasets (BOOKS / OSM / FB / GENOME / PLANET) are benchmark
+downloads; these generators reproduce their *compressibility structure*,
+which is what drives every BS-vs-CBS result in the paper:
+
+  books   — smooth, near-uniform popularity counts (easy for learned
+            indices; low FOR compressibility at scale)        -> BS-tree
+  osm     — integer-encoded geo cells, mid-scale clustering    -> BS-tree
+  fb      — user ids: dense low ranges + sparse high tail      -> CBS
+  genome  — loci pairs: tight clusters per chromosome          -> CBS
+  planet  — planet-wide geo ids, heavy local clustering        -> CBS
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _uniq_sorted(a: np.ndarray, count: int) -> np.ndarray:
+    u = np.unique(a)
+    if len(u) < count:
+        extra = np.arange(count - len(u), dtype=np.uint64) + u[-1] + np.uint64(1)
+        u = np.unique(np.concatenate([u, extra]))
+    return u[:count]
+
+
+def gen_books(count: int, rng) -> np.ndarray:
+    # smooth cumulative popularity: sorted cumsum of ~lognormal gaps.
+    # Gap magnitude ~4e8 keeps node-local spreads above 2^32 (like the
+    # real 150M-key BOOKS), so FOR compression does NOT pay off here.
+    gaps = rng.lognormal(mean=19.7, sigma=0.5, size=count).astype(np.float64)
+    keys = np.cumsum(gaps).astype(np.uint64)
+    return _uniq_sorted(keys, count)
+
+
+def gen_osm(count: int, rng) -> np.ndarray:
+    cells = rng.integers(0, 2**34, size=max(count // 200, 4), dtype=np.uint64)
+    per = count // len(cells) + 1
+    pts = cells[:, None] * np.uint64(2**28) + rng.integers(
+        0, 2**27, size=(len(cells), per), dtype=np.uint64
+    )
+    return _uniq_sorted(pts.ravel(), count)
+
+
+def gen_fb(count: int, rng) -> np.ndarray:
+    dense = rng.integers(0, count * 16, size=int(count * 0.9), dtype=np.uint64)
+    tail = rng.integers(0, 2**60, size=int(count * 0.12), dtype=np.uint64)
+    return _uniq_sorted(np.concatenate([dense, tail]), count)
+
+
+def gen_genome(count: int, rng) -> np.ndarray:
+    n_chrom = 24
+    per = count // n_chrom + 1
+    bases = (np.arange(n_chrom, dtype=np.uint64) + 1) * np.uint64(2**40)
+    loci = rng.integers(0, 2**27, size=(n_chrom, per), dtype=np.uint64)
+    keys = (bases[:, None] + np.sort(loci, axis=1)).ravel()
+    return _uniq_sorted(keys, count)
+
+
+def gen_planet(count: int, rng) -> np.ndarray:
+    n_centres = max(count // 1000, 8)
+    centres = rng.integers(0, 2**44, size=n_centres, dtype=np.uint64) * np.uint64(2**18)
+    per = count // n_centres + 1
+    pts = centres[:, None] + rng.integers(
+        0, 2**16, size=(n_centres, per), dtype=np.uint64
+    )
+    return _uniq_sorted(pts.ravel(), count)
+
+
+KEY_DISTRIBUTIONS = {
+    "books": gen_books,
+    "osm": gen_osm,
+    "fb": gen_fb,
+    "genome": gen_genome,
+    "planet": gen_planet,
+}
+
+
+def gen_keys(name: str, count: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return KEY_DISTRIBUTIONS[name](count, rng)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the BS-tree hot paths.
+
+Each kernel module pairs a ``pl.pallas_call`` implementation (explicit
+BlockSpec VMEM tiling, branchless bodies) with a pure-jnp oracle in
+``ref.py``; ``ops.py`` is the public jit'd wrapper layer (interpret=True
+off-TPU).
+
+  succ_kernel   batched in-node successor counts (paper Snippet 2)
+  gather_succ   fused multi-level descent, VMEM-resident inner nodes
+  leaf_insert   branchless gapped insert / delete (paper Algs. 5/6)
+  for_succ      FOR-compressed block search (paper §5)
+"""
+from . import ops  # noqa: F401

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: FOR-compressed block search (paper §5).
+
+One fixed physical block (2N u32 words) per leaf; the tag selects the
+delta width.  All three interpretations are evaluated on the same
+VMEM-resident block and the result is predicated by tag — compute next to
+a loaded block is nearly free on the VPU, and predication replaces the
+CPU's per-leaf-type branch (DESIGN.md §2).
+
+The only "decompression" is the query rebase ``q' = q - k0`` (one u64
+subtract realised as u32 sub + borrow), exactly the paper's claim of
+minimal decompression overhead.  Counting is order-free (see
+compress.py), so packed u16 halves are counted without re-interleaving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .succ_kernel import _as_signed
+
+MAXU = 0xFFFFFFFF  # python ints: kernels cannot capture traced constants
+MAXD16 = 0xFFFF
+TAG_U16, TAG_U32, TAG_U64 = 0, 1, 2
+
+
+def _for_block_kernel(
+    words_ref, tag_ref, k0hi_ref, k0lo_ref, qhi_ref, qlo_ref,
+    rank_ref, member_ref, *, strict,
+):
+    words = words_ref[...]  # (TB, 2N)
+    tag = tag_ref[...]  # (TB, 1) int32
+    k0h, k0l = k0hi_ref[...], k0lo_ref[...]
+    qh, ql = qhi_ref[...], qlo_ref[...]
+    n2 = words.shape[1]
+    n = n2 // 2
+
+    # q' = q - k0 (u64 via u32 borrow); out-of-frame-low -> clamp to 0
+    ge_k0 = (_as_signed(qh) > _as_signed(k0h)) | (
+        (qh == k0h) & (_as_signed(ql) >= _as_signed(k0l))
+    )
+    borrow = (_as_signed(ql) < _as_signed(k0l)).astype(jnp.uint32)
+    dq_hi = qh - k0h - borrow
+    dq_lo = ql - k0l
+
+    def cnt(mask):
+        return jnp.sum(mask.astype(jnp.int32), axis=1, keepdims=True)
+
+    # ---- u16 halves (no sign trick needed: u16 fits i32 exactly) ----
+    lo16 = (words & 0xFFFF).astype(jnp.int32)
+    hi16 = (words >> 16).astype(jnp.int32)
+    # flip(MAXD16) as a plain i32-representable constant: v + (-2^31)
+    in16 = ge_k0 & (dq_hi == 0) & (_as_signed(dq_lo) < (MAXD16 - 0x80000000))
+    q16 = jnp.where(in16, dq_lo, MAXD16).astype(jnp.int32)
+    if strict:
+        c16 = cnt(q16 > lo16) + cnt(q16 > hi16)
+    else:
+        c16 = cnt(q16 >= lo16) + cnt(q16 >= hi16)
+    m16 = jnp.any(lo16 == q16, axis=1, keepdims=True) | jnp.any(
+        hi16 == q16, axis=1, keepdims=True
+    )
+
+    # ---- u32 ----
+    in32 = ge_k0 & (dq_hi == 0) & (~dq_lo != 0)  # MAXD32 reserved sentinel
+    q32 = _as_signed(jnp.where(in32, dq_lo, ~(dq_lo ^ dq_lo)))
+    w32 = _as_signed(words)
+    c32 = cnt(q32 > w32) if strict else cnt(q32 >= w32)
+    m32 = jnp.any(w32 == q32, axis=1, keepdims=True)
+
+    # ---- u64 planes: words[:, :N] hi | words[:, N:] lo ----
+    whi, wlo = _as_signed(words[:, :n]), _as_signed(words[:, n:])
+    dqh_c = jnp.where(ge_k0, dq_hi, 0)
+    dql_c = jnp.where(ge_k0, dq_lo, 0)
+    sqh, sql = _as_signed(dqh_c), _as_signed(dql_c)
+    if strict:
+        m64lane = (sqh > whi) | ((sqh == whi) & (sql > wlo))
+    else:
+        m64lane = (sqh > whi) | ((sqh == whi) & (sql >= wlo))
+    c64 = cnt(m64lane)
+    m64 = jnp.any((whi == sqh) & (wlo == sql), axis=1, keepdims=True)
+    is_max64 = (~dqh_c == 0) & (~dql_c == 0)
+
+    rank = jnp.where(tag == TAG_U16, c16, jnp.where(tag == TAG_U32, c32, c64))
+    rank = jnp.where(ge_k0, rank, 0)
+    member = jnp.where(
+        tag == TAG_U16, m16 & in16,
+        jnp.where(tag == TAG_U32, m32 & in32, m64 & ge_k0 & ~is_max64),
+    )
+    rank_ref[...] = rank
+    member_ref[...] = member.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("strict", "block_rows", "interpret"))
+def for_block_search(
+    words,  # (B, 2N) uint32 physical blocks (gathered per query)
+    tag,  # (B,) int32
+    k0_hi, k0_lo,  # (B,) uint32 frames
+    q_hi, q_lo,  # (B,) uint32 queries
+    *,
+    strict: bool = True,
+    block_rows: int = 256,
+    interpret: bool = True,
+):
+    """(rank (B,), member (B,)) for FOR-compressed leaf blocks."""
+    b, n2 = words.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)), constant_values=np.uint32(0xFFFFFFFF))
+        tag = jnp.pad(tag, (0, pad), constant_values=TAG_U64)
+        k0_hi, k0_lo, q_hi, q_lo = (
+            jnp.pad(x, (0, pad)) for x in (k0_hi, k0_lo, q_hi, q_lo)
+        )
+    bp = words.shape[0]
+    spec_w = pl.BlockSpec((tb, n2), lambda i: (i, 0))
+    spec_1 = pl.BlockSpec((tb, 1), lambda i: (i, 0))
+    rank, member = pl.pallas_call(
+        functools.partial(_for_block_kernel, strict=strict),
+        grid=(bp // tb,),
+        in_specs=[spec_w, spec_1, spec_1, spec_1, spec_1, spec_1],
+        out_specs=[spec_1, spec_1],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        words, tag[:, None].astype(jnp.int32),
+        k0_hi[:, None], k0_lo[:, None], q_hi[:, None], q_lo[:, None],
+    )
+    return rank[:b, 0], member[:b, 0].astype(bool)

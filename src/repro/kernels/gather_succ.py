@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused multi-level tree descent (gather + succ).
+
+The CPU BS-tree chases one pointer per level per query.  The TPU version
+exploits two structural facts:
+
+1. the *inner* levels of a BS-tree are tiny relative to the leaves
+   (fanout ~N per level), so for realistic trees the whole inner-node
+   region fits in VMEM (e.g. 10^8 keys, N=128: ~8k inner rows ~ 8 MB);
+2. branching is the branchless ``succ`` count, so a descent is a fixed
+   ``height``-step chain of (dynamic row load -> vector compare -> count).
+
+The kernel pins the inner arrays in VMEM as whole-array blocks and walks
+every query of the tile to its leaf id in one program — the HBM round
+trips per level of the level-synchronous XLA path collapse into on-chip
+loads ("keep the hot levels on-chip", the TPU analogue of the paper's
+cache-line/TLB engineering in §6).
+
+The per-query inner loop is driven by the scalar unit (dynamic row
+offsets), while each row comparison is a full-width VPU op — the same
+split the paper uses between scalar branching code and SIMD compares.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .succ_kernel import _as_signed
+
+#: conservative VMEM budget for the resident inner region (bytes)
+VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _tree_search_kernel(
+    root_ref, ihi_ref, ilo_ref, child_ref, qhi_ref, qlo_ref, out_ref, *, height
+):
+    tb = out_ref.shape[0]
+
+    def per_query(t, carry):
+        qh = _as_signed(pl.load(qhi_ref, (pl.dslice(t, 1), slice(None))))  # (1,1)
+        ql = _as_signed(pl.load(qlo_ref, (pl.dslice(t, 1), slice(None))))
+
+        def level(_, node):
+            rh = _as_signed(pl.load(ihi_ref, (pl.dslice(node, 1), slice(None))))
+            rl = _as_signed(pl.load(ilo_ref, (pl.dslice(node, 1), slice(None))))
+            # succ_gt: count(keys <= q) <=> q >= key, on (1, N) row
+            mask = (qh > rh) | ((qh == rh) & (ql >= rl))
+            c = jnp.sum(mask.astype(jnp.int32))
+            ch = pl.load(child_ref, (pl.dslice(node, 1), pl.dslice(c, 1)))
+            return ch[0, 0]
+
+        node = jax.lax.fori_loop(0, height, level, root_ref[0, 0])
+        pl.store(out_ref, (pl.dslice(t, 1), slice(None)), node[None, None])
+        return carry
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("height", "block_rows", "interpret"))
+def tree_search(
+    root: jnp.ndarray,  # () int32
+    inner_hi: jnp.ndarray,  # (M, N) uint32 — must fit VMEM (see wrapper)
+    inner_lo: jnp.ndarray,  # (M, N) uint32
+    inner_child: jnp.ndarray,  # (M, N) int32
+    q_hi: jnp.ndarray,  # (B,) uint32
+    q_lo: jnp.ndarray,  # (B,) uint32
+    *,
+    height: int,
+    block_rows: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Leaf id per query via the fused VMEM-resident descent."""
+    b = q_hi.shape[0]
+    if height == 0:
+        return jnp.broadcast_to(root.astype(jnp.int32), (b,))
+    m, n = inner_hi.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        q_hi = jnp.pad(q_hi, (0, pad))
+        q_lo = jnp.pad(q_lo, (0, pad))
+    bp = q_hi.shape[0]
+    root2d = jnp.reshape(root.astype(jnp.int32), (1, 1))
+    out = pl.pallas_call(
+        functools.partial(_tree_search_kernel, height=height),
+        grid=(bp // tb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # root (replicated)
+            pl.BlockSpec((m, n), lambda i: (0, 0)),  # inner planes: resident
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        interpret=interpret,
+    )(root2d, inner_hi, inner_lo, inner_child, q_hi[:, None], q_lo[:, None])
+    return out[:b, 0]
+
+
+def inner_region_bytes(inner_hi: jnp.ndarray) -> int:
+    """Bytes the resident inner region occupies in VMEM (3 planes)."""
+    return int(inner_hi.size) * 4 * 3
+
+
+def fits_vmem(inner_hi: jnp.ndarray, budget: int = VMEM_BUDGET) -> bool:
+    return inner_region_bytes(inner_hi) <= budget

@@ -1,0 +1,189 @@
+"""Pallas TPU kernels: branchless gapped leaf insert / delete (Algs. 5/6).
+
+The paper's insert uses ``_lzcnt/_tzcnt`` bit tricks over an explicit
+bitmap plus a memmove toward the nearest gap.  On the TPU VPU there is no
+cross-lane shuffle-by-variable, but all shifts in Algorithm 6 are by
+exactly ONE slot — so the whole update becomes three lane-static rotates
+(`roll`) predicated by masks, with the gap located by an iota reduce:
+
+    used   = keys[i] != keys[i+1]  (& != MAXKEY)      # derived bitmap
+    r      = succ_ge(row, k)                          # count, branchless
+    j      = min({i >= r : gap})   g = max({i < r : gap})
+    right  = j < N
+    new    = select(masks, roll(row, +-1), row);  new[tgt] = k
+
+Deletion writes the successor value over the dup-run of ``k`` — a one-hot
+extraction + masked broadcast.  No branch, no scatter, no bitmap storage.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .succ_kernel import _as_signed
+
+MAXU = 0xFFFFFFFF  # python int: kernels cannot capture traced constants
+
+
+def _row_aux(hi, lo):
+    """(used, gap, iota) for a (TB, N) tile, from the duplication invariant.
+
+    MAXKEY (all-ones) is spelled ``~(x ^ x)`` — a computed all-ones vector —
+    because 0xFFFFFFFF literals overflow the weak i32 type inside kernels.
+    """
+    n = hi.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, hi.shape, 1)
+    ones = ~(hi ^ hi)
+    nxt_hi = jnp.where(iota == n - 1, ones, jnp.roll(hi, -1, axis=1))
+    nxt_lo = jnp.where(iota == n - 1, ones, jnp.roll(lo, -1, axis=1))
+    differs = (hi != nxt_hi) | (lo != nxt_lo)
+    is_max = (~hi == 0) & (~lo == 0)
+    used = differs & ~is_max
+    return used, ~used, iota
+
+
+def _leaf_insert_kernel(
+    hi_ref, lo_ref, val_ref, khi_ref, klo_ref, v_ref,
+    ohi_ref, olo_ref, oval_ref, ost_ref,
+):
+    hi, lo, vals = hi_ref[...], lo_ref[...], val_ref[...]
+    kh, kl, vv = khi_ref[...], klo_ref[...], v_ref[...]  # (TB, 1)
+    n = hi.shape[1]
+    used, gap, iota = _row_aux(hi, lo)
+
+    shi, slo = _as_signed(hi), _as_signed(lo)
+    sqh, sql = _as_signed(kh), _as_signed(kl)
+    lt = (sqh > shi) | ((sqh == shi) & (sql > slo))  # keys < k
+    r = jnp.sum(lt.astype(jnp.int32), axis=1, keepdims=True)  # succ_ge
+
+    run = (hi == kh) & (lo == kl)
+    exists = jnp.any(run, axis=1, keepdims=True)
+    full = jnp.sum(used.astype(jnp.int32), axis=1, keepdims=True) >= n
+
+    j = jnp.min(jnp.where(gap & (iota >= r), iota, n), axis=1, keepdims=True)
+    g = jnp.max(jnp.where(gap & (iota < r), iota, -1), axis=1, keepdims=True)
+    right_ok = j < n
+    tgt = jnp.where(right_ok, jnp.minimum(r, n - 1), r - 1)
+    shift_r = right_ok & (iota > r) & (iota <= j)
+    shift_l = (~right_ok) & (iota >= g) & (iota < r - 1)
+
+    def build(plane, fill):
+        moved = jnp.where(
+            shift_r, jnp.roll(plane, 1, axis=1),
+            jnp.where(shift_l, jnp.roll(plane, -1, axis=1), plane),
+        )
+        return jnp.where(iota == tgt, fill, moved)
+
+    ins_hi = build(hi, kh)
+    ins_lo = build(lo, kl)
+    ins_v = build(vals, vv)
+    ups_v = jnp.where(run, vv, vals)
+
+    sel_ins = (~exists) & (~full)
+    ohi_ref[...] = jnp.where(sel_ins, ins_hi, hi)
+    olo_ref[...] = jnp.where(sel_ins, ins_lo, lo)
+    oval_ref[...] = jnp.where(exists, ups_v, jnp.where(sel_ins, ins_v, vals))
+    ost_ref[...] = jnp.where(exists, 1, jnp.where(full, 2, 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def leaf_insert(
+    hi, lo, vals,  # (B, N) uint32 row tiles
+    k_hi, k_lo, v,  # (B,) uint32 one key per row
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+):
+    """Batched branchless upsert; returns (hi', lo', vals', status (B,))."""
+    b, n = hi.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        padk = ((0, pad), (0, 0))
+        hi = jnp.pad(hi, padk, constant_values=np.uint32(0xFFFFFFFF))
+        lo = jnp.pad(lo, padk, constant_values=np.uint32(0xFFFFFFFF))
+        vals = jnp.pad(vals, padk)
+        k_hi, k_lo, v = (jnp.pad(x, (0, pad)) for x in (k_hi, k_lo, v))
+    bp = hi.shape[0]
+    specs2d = pl.BlockSpec((tb, n), lambda i: (i, 0))
+    specs1d = pl.BlockSpec((tb, 1), lambda i: (i, 0))
+    nh, nl, nv, st = pl.pallas_call(
+        _leaf_insert_kernel,
+        grid=(bp // tb,),
+        in_specs=[specs2d, specs2d, specs2d, specs1d, specs1d, specs1d],
+        out_specs=[specs2d, specs2d, specs2d, specs1d],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi, lo, vals, k_hi[:, None], k_lo[:, None], v[:, None])
+    return nh[:b], nl[:b], nv[:b], st[:b, 0]
+
+
+def _leaf_delete_kernel(
+    hi_ref, lo_ref, val_ref, khi_ref, klo_ref,
+    ohi_ref, olo_ref, oval_ref, ofound_ref,
+):
+    hi, lo, vals = hi_ref[...], lo_ref[...], val_ref[...]
+    kh, kl = khi_ref[...], klo_ref[...]
+    n = hi.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, hi.shape, 1)
+
+    run = (hi == kh) & (lo == kl)
+    found = jnp.any(run, axis=1, keepdims=True)
+    jj = jnp.max(jnp.where(run, iota, -1), axis=1, keepdims=True)
+    # one-hot extract slot jj+1 (exact: at most one lane matches)
+    pick = iota == jj + 1
+    nk_hi = jnp.max(jnp.where(pick, hi, 0), axis=1, keepdims=True)
+    nk_lo = jnp.max(jnp.where(pick, lo, 0), axis=1, keepdims=True)
+    nv = jnp.max(jnp.where(pick, vals, 0), axis=1, keepdims=True)
+    in_row = jj + 1 < n
+    ones1 = ~(nk_hi ^ nk_hi)
+    nk_hi = jnp.where(in_row, nk_hi, ones1)
+    nk_lo = jnp.where(in_row, nk_lo, ones1)
+    nv = jnp.where(in_row, nv, 0)
+
+    ohi_ref[...] = jnp.where(run, nk_hi, hi)
+    olo_ref[...] = jnp.where(run, nk_lo, lo)
+    oval_ref[...] = jnp.where(run, nv, vals)
+    ofound_ref[...] = found.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def leaf_delete(
+    hi, lo, vals, k_hi, k_lo, *, block_rows: int = 256, interpret: bool = True
+):
+    """Batched branchless delete; returns (hi', lo', vals', found (B,))."""
+    b, n = hi.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        padk = ((0, pad), (0, 0))
+        hi = jnp.pad(hi, padk, constant_values=np.uint32(0xFFFFFFFF))
+        lo = jnp.pad(lo, padk, constant_values=np.uint32(0xFFFFFFFF))
+        vals = jnp.pad(vals, padk)
+        k_hi, k_lo = (jnp.pad(x, (0, pad)) for x in (k_hi, k_lo))
+    bp = hi.shape[0]
+    specs2d = pl.BlockSpec((tb, n), lambda i: (i, 0))
+    specs1d = pl.BlockSpec((tb, 1), lambda i: (i, 0))
+    nh, nl, nv, fd = pl.pallas_call(
+        _leaf_delete_kernel,
+        grid=(bp // tb,),
+        in_specs=[specs2d, specs2d, specs2d, specs1d, specs1d],
+        out_specs=[specs2d, specs2d, specs2d, specs1d],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi, lo, vals, k_hi[:, None], k_lo[:, None])
+    return nh[:b], nl[:b], nv[:b], fd[:b, 0].astype(bool)

@@ -1,0 +1,85 @@
+"""Public jit'd wrappers for the BS-tree Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute their bodies
+in Python/XLA for correctness validation); on a TPU backend they compile
+to Mosaic.  All wrappers accept/return plain arrays and hide the padding
+and plane bookkeeping.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import BSTreeArrays, split_u64
+from . import for_succ, gather_succ, leaf_insert, succ_kernel
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def succ_gt(node_hi, node_lo, q_hi, q_lo, **kw):
+    """Kernel-backed succ_> (paper Snippet 2)."""
+    kw.setdefault("interpret", _interp())
+    return succ_kernel.succ_u64(node_hi, node_lo, q_hi, q_lo, strict=False, **kw)
+
+
+def succ_ge(node_hi, node_lo, q_hi, q_lo, **kw):
+    kw.setdefault("interpret", _interp())
+    return succ_kernel.succ_u64(node_hi, node_lo, q_hi, q_lo, strict=True, **kw)
+
+
+def succ_u32(node, q, *, strict=False, **kw):
+    kw.setdefault("interpret", _interp())
+    return succ_kernel.succ_u32(node, q, strict=strict, **kw)
+
+
+def succ_u16_packed(words, q, *, strict=False, **kw):
+    kw.setdefault("interpret", _interp())
+    return succ_kernel.succ_u16_packed(words, q, strict=strict, **kw)
+
+
+def tree_search(tree: BSTreeArrays, q_hi, q_lo, **kw):
+    """Fused VMEM-resident descent over a BSTreeArrays (leaf ids)."""
+    kw.setdefault("interpret", _interp())
+    assert gather_succ.fits_vmem(tree.inner_hi), (
+        "inner region exceeds the VMEM budget; fall back to bstree.descend"
+    )
+    return gather_succ.tree_search(
+        tree.root, tree.inner_hi, tree.inner_lo, tree.inner_child,
+        q_hi, q_lo, height=tree.height, **kw,
+    )
+
+
+def leaf_upsert_rows(hi, lo, vals, k_hi, k_lo, v, **kw):
+    kw.setdefault("interpret", _interp())
+    return leaf_insert.leaf_insert(hi, lo, vals, k_hi, k_lo, v, **kw)
+
+
+def leaf_delete_rows(hi, lo, vals, k_hi, k_lo, **kw):
+    kw.setdefault("interpret", _interp())
+    return leaf_insert.leaf_delete(hi, lo, vals, k_hi, k_lo, **kw)
+
+
+def for_block_search(words, tag, k0_hi, k0_lo, q_hi, q_lo, **kw):
+    kw.setdefault("interpret", _interp())
+    return for_succ.for_block_search(words, tag, k0_hi, k0_lo, q_hi, q_lo, **kw)
+
+
+def lookup_batch_kernel(tree: BSTreeArrays, keys_u64: np.ndarray):
+    """End-to-end kernel-path lookup: fused descent + leaf succ kernel.
+    Host convenience API mirroring bstree.lookup_u64."""
+    hi, lo = split_u64(np.asarray(keys_u64, dtype=np.uint64))
+    q_hi, q_lo = jnp.asarray(hi), jnp.asarray(lo)
+    leaf = tree_search(tree, q_hi, q_lo)
+    rows_hi = tree.leaf_hi[leaf]
+    rows_lo = tree.leaf_lo[leaf]
+    r = succ_ge(rows_hi, rows_lo, q_hi, q_lo)
+    n = tree.node_width
+    rc = jnp.minimum(r, n - 1)
+    k_hi = jnp.take_along_axis(rows_hi, rc[:, None], axis=1)[:, 0]
+    k_lo = jnp.take_along_axis(rows_lo, rc[:, None], axis=1)[:, 0]
+    found = (r < n) & (k_hi == q_hi) & (k_lo == q_lo)
+    vals = jnp.take_along_axis(tree.leaf_val[leaf], rc[:, None], axis=1)[:, 0]
+    return np.asarray(found), np.asarray(jnp.where(found, vals, 0))

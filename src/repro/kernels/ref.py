@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+Each oracle is the straightforward jnp formulation of the same math,
+sharing code with :mod:`repro.core` where the semantics already live
+there — kernels must match these bit-exactly (integer outputs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import succ as core_succ
+from repro.core.bstree import row_delete, row_upsert
+from repro.core.compress import _block_counts
+
+
+def succ_u64_ref(node_hi, node_lo, q_hi, q_lo, *, strict=False):
+    if strict:
+        return core_succ.succ_ge(node_hi, node_lo, q_hi, q_lo)
+    return core_succ.succ_gt(node_hi, node_lo, q_hi, q_lo)
+
+
+def succ_u32_ref(node, q, *, strict=False):
+    if strict:
+        return core_succ.succ_ge_plane(node, q)
+    return core_succ.succ_gt_plane(node, q)
+
+
+def succ_u16_packed_ref(words, q, *, strict=False):
+    lo = words & 0xFFFF
+    hi = words >> 16
+    both = jnp.concatenate([lo, hi], axis=-1)
+    return succ_u32_ref(both, q, strict=strict)
+
+
+def tree_search_ref(root, inner_hi, inner_lo, inner_child, q_hi, q_lo, *, height):
+    b = q_hi.shape[0]
+    node = jnp.full((b,), root, dtype=jnp.int32)
+    for _ in range(height):
+        rows_hi = inner_hi[node]
+        rows_lo = inner_lo[node]
+        c = core_succ.succ_gt(rows_hi, rows_lo, q_hi, q_lo)
+        node = inner_child[node, c]
+    return node
+
+
+def leaf_insert_ref(hi, lo, vals, k_hi, k_lo, v):
+    return jax.vmap(row_upsert)(hi, lo, vals, k_hi, k_lo, v)
+
+
+def leaf_delete_ref(hi, lo, vals, k_hi, k_lo):
+    return jax.vmap(row_delete)(hi, lo, vals, k_hi, k_lo)
+
+
+def for_block_search_ref(words, tag, k0_hi, k0_lo, q_hi, q_lo, *, strict=True):
+    return _block_counts(words, tag, k0_hi, k0_lo, q_hi, q_lo, strict=strict)

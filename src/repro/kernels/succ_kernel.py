@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: batched branchless successor search (paper Snippet 2).
+
+The AVX-512 original loads a node's 1024-bit key block into two 512-bit
+vregs, compares against the broadcast search key and popcounts the mask.
+The TPU translation:
+
+* a tile of ``TB`` node rows (each ``N`` u32 lanes per plane) sits in VMEM
+  as a ``(TB, N)`` block — the (8, 128) vreg tiling is the cache-line
+  analogue;
+* unsigned comparison has no native TPU lane op for u32, so planes are
+  XORed with the sign bit and compared as i32 (the classic sign-flip
+  trick; this *is* the translation of ``_mm512_cmpge_epu64_mask`` — the
+  u64 order comes from the (hi, lo) plane combination);
+* ``popcnt`` becomes a lane-wise sum of the 0/1 mask (VPU cross-lane
+  reduce along the minor axis).
+
+Grid: one program per TB-row tile of the query batch.  All shapes are
+static; there are no data-dependent branches — the kernel body is exactly
+the paper's "count of comparisons" with no ifs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+SIGN_I32 = -0x80000000  # int32-representable python int (no captured arrays)
+
+
+def _as_signed(x):
+    """Sign-flip so that signed i32 compare realises unsigned u32 order.
+
+    Implemented as wrap-cast to i32 then XOR with the sign bit — both
+    bit-pattern-preserving, and the constant stays a weak python int that
+    fits int32 (Pallas kernels cannot capture traced array constants).
+    """
+    return x.astype(jnp.int32) ^ SIGN_I32
+
+
+def _succ_u64_kernel(node_hi_ref, node_lo_ref, q_hi_ref, q_lo_ref, out_ref, *, strict):
+    nh = _as_signed(node_hi_ref[...])  # (TB, N)
+    nl = _as_signed(node_lo_ref[...])
+    qh = _as_signed(q_hi_ref[...])  # (TB, 1)
+    ql = _as_signed(q_lo_ref[...])
+    if strict:  # succ_ge: count(keys < q)  <=>  q > key
+        mask = (qh > nh) | ((qh == nh) & (ql > nl))
+    else:  # succ_gt: count(keys <= q)  <=>  q >= key
+        mask = (qh > nh) | ((qh == nh) & (ql >= nl))
+    out_ref[...] = jnp.sum(mask.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("strict", "block_rows", "interpret")
+)
+def succ_u64(
+    node_hi: jnp.ndarray,  # (B, N) uint32
+    node_lo: jnp.ndarray,  # (B, N) uint32
+    q_hi: jnp.ndarray,  # (B,) uint32
+    q_lo: jnp.ndarray,  # (B,) uint32
+    *,
+    strict: bool = False,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Counts per row: ``strict=False`` -> succ_gt, ``strict=True`` -> succ_ge."""
+    b, n = node_hi.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        node_hi = jnp.pad(node_hi, ((0, pad), (0, 0)))
+        node_lo = jnp.pad(node_lo, ((0, pad), (0, 0)))
+        q_hi = jnp.pad(q_hi, (0, pad))
+        q_lo = jnp.pad(q_lo, (0, pad))
+    bp = node_hi.shape[0]
+    grid = (bp // tb,)
+    out = pl.pallas_call(
+        functools.partial(_succ_u64_kernel, strict=strict),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        interpret=interpret,
+    )(node_hi, node_lo, q_hi[:, None], q_lo[:, None])
+    return out[:b, 0]
+
+
+def _succ_u32_kernel(node_ref, q_ref, out_ref, *, strict):
+    nk = _as_signed(node_ref[...])
+    q = _as_signed(q_ref[...])
+    mask = (q > nk) if strict else (q >= nk)
+    out_ref[...] = jnp.sum(mask.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("strict", "block_rows", "interpret"))
+def succ_u32(
+    node: jnp.ndarray,  # (B, N) uint32 (FOR deltas or any single plane)
+    q: jnp.ndarray,  # (B,) uint32
+    *,
+    strict: bool = False,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, n = node.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        node = jnp.pad(node, ((0, pad), (0, 0)))
+        q = jnp.pad(q, (0, pad))
+    bp = node.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_succ_u32_kernel, strict=strict),
+        grid=(bp // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        interpret=interpret,
+    )(node, q[:, None])
+    return out[:b, 0]
+
+
+def _succ_u16_kernel(words_ref, q_ref, out_ref, *, strict):
+    """Packed u16 deltas: count both 16-bit halves of each u32 word.  The
+    gap invariant makes counting order-free, so no re-interleave is needed
+    (DESIGN.md §2 / compress.py docstring)."""
+    w = words_ref[...]
+    lo = (w & 0xFFFF).astype(jnp.int32)  # u16 fits i32: no sign trick needed
+    hi = (w >> 16).astype(jnp.int32)
+    q = q_ref[...].astype(jnp.int32)
+    if strict:
+        m = (q > lo).astype(jnp.int32) + (q > hi).astype(jnp.int32)
+    else:
+        m = (q >= lo).astype(jnp.int32) + (q >= hi).astype(jnp.int32)
+    out_ref[...] = jnp.sum(m, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("strict", "block_rows", "interpret"))
+def succ_u16_packed(
+    words: jnp.ndarray,  # (B, W) uint32, each holding two u16 deltas
+    q: jnp.ndarray,  # (B,) uint32 (< 2^16)
+    *,
+    strict: bool = False,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, w = words.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)), constant_values=np.uint32(0xFFFFFFFF))
+        q = jnp.pad(q, (0, pad))
+    bp = words.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_succ_u16_kernel, strict=strict),
+        grid=(bp // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, w), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        interpret=interpret,
+    )(words, q[:, None])
+    return out[:b, 0]

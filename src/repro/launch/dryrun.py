@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements — jax locks the device
+count on first init, and the production meshes need 512 host devices.
+
+Per cell this script:
+  1. builds the production mesh (single-pod (16,16) or multi-pod
+     (2,16,16)) from launch/mesh.py,
+  2. constructs the step function (train / prefill / serve) with the
+     sharding rules of models/sharding_rules.py,
+  3. ``.lower()``s it on ShapeDtypeStruct inputs (no allocation),
+  4. ``.compile()``s — proving the distribution config is coherent,
+  5. records memory_analysis / cost_analysis / collective wire bytes into
+     ``runs/dryrun/<mesh>/<arch>__<shape>.json`` for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out runs/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_names, get_config
+from repro.configs.shapes import SHAPES, cell, input_specs
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.models import common as MC
+from repro.models.model import abstract_params
+from repro.optim.adamw import abstract_opt_state
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+
+def _mem_fields(compiled) -> dict:
+    out = {}
+    try:
+        m = compiled.memory_analysis()
+        for f in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(m, f, None)
+            if v is not None:
+                out[f] = int(v)
+        out["total_bytes_per_device"] = sum(
+            out.get(k, 0) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes")
+        ) - out.get("alias_size_in_bytes", 0)
+    except Exception as e:  # pragma: no cover
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_fields(compiled) -> dict:
+    out = {}
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        for k, v in dict(c).items():
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals") or k.startswith("bytes")
+            ):
+                out[k.replace(" ", "_")] = float(v)
+    except Exception as e:  # pragma: no cover
+        out["error"] = repr(e)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             skip_existing: bool = False, tag: str = "") -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape_name}{suffix}.json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if prev.get("status") in ("ok", "skip"):
+            return prev
+
+    cfg = get_config(arch)
+    c = cell(cfg, shape_name)
+    rec = dict(
+        arch=arch, shape=shape_name, mesh=mesh_name, mode=c.mode,
+        seq=c.seq, batch=c.batch, status="skip" if c.skipped else "pending",
+        skip_reason=c.skip_reason, strategy=dict(MC.STRATEGY), tag=tag,
+    )
+    if c.skipped:
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        MC.set_mesh_axes(mesh.axis_names, dict(mesh.shape))
+        specs = input_specs(cfg, shape_name)
+        with mesh:
+            if c.mode == "train":
+                step, _ = make_train_step(cfg, mesh, batch_shape=specs["batch"])
+                args = (
+                    abstract_params(cfg),
+                    abstract_opt_state(abstract_params(cfg)),
+                    specs["batch"],
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                )
+            elif c.mode == "prefill":
+                step, _ = make_prefill_step(
+                    cfg, mesh, batch_shape=specs["batch"], ctx=c.seq)
+                args = (abstract_params(cfg), specs["batch"])
+            else:  # decode
+                step, _ = make_serve_step(cfg, mesh, cache_shape=specs["cache"])
+                args = (
+                    abstract_params(cfg), specs["token"], specs["cache"],
+                    specs["pos"],
+                )
+            lowered = step.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            rec["memory"] = _mem_fields(compiled)
+            rec["cost_hlo"] = _cost_fields(compiled)
+            print("memory_analysis:", rec["memory"])
+            print("cost_analysis:", rec["cost_hlo"])
+            hlo = compiled.as_text()
+            coll = RL.parse_collectives(hlo, mesh.size)
+            rec["collectives"] = dict(
+                wire_bytes=coll.wire_bytes, count=coll.count, by_op=coll.by_op
+            )
+            rec["num_devices"] = int(mesh.size)
+
+            # analytic model (cost_analysis counts scan bodies once — see
+            # roofline.py): roofline terms use analytic flops/bytes per
+            # device + execution-weighted collective wire bytes.
+            ana = RL.analytic_costs(cfg, c.mode, c.batch, c.seq)
+            rec["cost_analytic_global"] = ana
+            flops_dev = ana["flops"] / mesh.size
+            bytes_dev = ana["hbm_bytes"] / mesh.size
+            rec["roofline"] = RL.roofline_terms(
+                flops_dev, bytes_dev, coll.wire_bytes
+            )
+            rec["roofline_hlo_raw"] = RL.roofline_terms(
+                rec["cost_hlo"].get("flops", 0.0),
+                rec["cost_hlo"].get("bytes_accessed", 0.0),
+                coll.wire_bytes,
+            )
+            mf = RL.model_flops(cfg, ana["tokens"])
+            rec["model_flops_global"] = mf
+            rec["useful_compute_ratio"] = mf / max(ana["flops"], 1.0)
+            rec["lower_s"] = t_lower
+            rec["compile_s"] = t_compile
+            rec["status"] = "ok"
+    except Exception:
+        rec["status"] = "fail"
+        rec["error"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = time.time() - t0
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    marker = "OK " if rec["status"] == "ok" else rec["status"].upper()
+    print(f"[{marker}] {mesh_name} {arch} {shape_name} ({rec['wall_s']:.1f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for output json")
+    ap.add_argument("--set", action="append", default=[],
+                    help="strategy knob key=value (repeatable)")
+    args = ap.parse_args()
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        MC.set_strategy(**{k: v})
+
+    archs = [args.arch] if args.arch else all_arch_names()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(
+                    arch, shape, multi_pod=mp, out_dir=args.out,
+                    skip_existing=args.skip_existing, tag=args.tag,
+                )
+                n_ok += rec["status"] == "ok"
+                n_fail += rec["status"] == "fail"
+                n_skip += rec["status"] == "skip"
+    print(f"dry-run summary: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

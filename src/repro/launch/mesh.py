@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any
+device query.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single pod = 256 chips; (2, 16, 16) = 2 pods, 512 chips.
+
+    Axes: ``data`` carries DP/FSDP, ``model`` carries TP/EP/sequence
+    sharding, ``pod`` carries cross-pod data parallelism (the slow links).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh for tests/examples (e.g. (2, 4) on 8 host devices)."""
+    return jax.make_mesh(shape, axes)

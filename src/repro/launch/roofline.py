@@ -1,0 +1,390 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (v5e-like constants):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / (LINKS * LINK_BW)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device: the SPMD
+module is the per-device program — verified by tests/test_roofline.py).
+Collective wire bytes are parsed from ``compiled.as_text()`` with
+ring-algorithm conventions per op (result bytes R, group size n):
+
+  all-gather          R * (n-1)/n        (each device receives ~R)
+  reduce-scatter      R * (n-1)           (operand = R*n moves in ring)
+  all-reduce          2R * (n-1)/n        (reduce-scatter + all-gather)
+  all-to-all          R * (n-1)/n
+  collective-permute  R
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+LINKS = 3  # usable links per chip on a 2D-torus-ish v5e (conservative)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `bf16[128,1024]{1,0}` or tuple `(f32[8], bf16[2,4])`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0  # static op count (not execution count)
+
+
+def _line_wire_bytes(ls: str, num_devices: int):
+    """(base_op, wire_bytes) for a collective HLO line, else None."""
+    m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[\w\[\]\{\},]+)\s+([\w\-]+)", ls)
+    if not m:
+        return None
+    op = m.group(2)
+    base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+    if base is None or op.endswith("-done"):
+        return None  # -done pairs counted at -start
+    r = _shape_bytes(m.group(1))
+    n = max(_group_size(ls, num_devices), 1)
+    if base == "all-gather":
+        wire = r * (n - 1) / n
+    elif base == "reduce-scatter":
+        wire = r * (n - 1)
+    elif base == "all-reduce":
+        wire = 2 * r * (n - 1) / n
+    elif base == "all-to-all":
+        wire = r * (n - 1) / n
+    else:  # collective-permute
+        wire = r
+    return base, wire
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """{computation name: body lines} from post-optimisation HLO text."""
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    body: list[str] = []
+    head = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\([^)]*.*\{\s*$")
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = head.match(line)
+            if m:
+                cur = m.group(2).lstrip("%")
+                body = []
+        else:
+            if line.rstrip() == "}":
+                comps[cur] = body
+                cur = None
+            else:
+                body.append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Trip count of a while loop from its condition computation: jax scans
+    compare the induction variable against a constant."""
+    best = 1
+    for l in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", l):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    """Execution-weighted collective wire bytes.
+
+    cost_analysis (and a naive text scan) counts while-loop bodies ONCE;
+    jax scans over layers/KV blocks/chunks put most collectives inside
+    loop bodies, executed trip_count times.  This parser rebuilds the
+    computation call graph (calls= / to_apply= / while condition+body),
+    extracts trip counts from condition constants, propagates execution
+    multiplicities from ENTRY, and weights each collective accordingly.
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if name.startswith("main") or entry is None:
+            if name.startswith("main"):
+                entry = name
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    # call edges: (caller -> callee, factor)
+    edges: dict[str, list[tuple[str, float]]] = {n: [] for n in comps}
+    for name, lines in comps.items():
+        for l in lines:
+            wm = re.search(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)", l)
+            if wm:
+                cond, bod = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                edges[name].append((bod, float(trips)))
+                edges[name].append((cond, float(trips + 1)))
+                continue
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", l):
+                edges[name].append((cm.group(1), 1.0))
+
+    # propagate multiplicities from ENTRY through the DAG (memoised DFS)
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for child, f in edges.get(name, []):
+            visit(child, m * f, depth + 1)
+
+    if entry is not None:
+        visit(entry, 1.0)
+
+    stats = CollectiveStats(by_op={})
+    for name, lines in comps.items():
+        w = mult.get(name, 0.0)
+        if w <= 0:
+            continue
+        for l in lines:
+            res = _line_wire_bytes(l.strip(), num_devices)
+            if res is None:
+                continue
+            base, wire = res
+            d = stats.by_op.setdefault(base, dict(wire_bytes=0.0, count=0))
+            d["wire_bytes"] += wire * w
+            d["count"] += 1
+            stats.wire_bytes += wire * w
+            stats.count += 1
+    return stats
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float) -> dict:
+    compute = flops_per_device / PEAK_FLOPS
+    memory = bytes_per_device / HBM_BW
+    collective = wire_bytes_per_device / (LINKS * LINK_BW)
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    total = max(compute, memory, collective)
+    return dict(
+        compute_s=compute, memory_s=memory, collective_s=collective,
+        dominant=dominant,
+        bound_fraction=(max(compute, memory, collective) / max(total, 1e-30)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6*N*D), with MoE active-parameter accounting
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg) -> dict:
+    """Analytic parameter counts (total and active-per-token)."""
+    import jax
+    from repro.models.model import abstract_params
+
+    tree = abstract_params(cfg)
+    total = sum(int(l.size) for l in jax.tree.leaves(tree))
+    active = total
+    if cfg.num_experts:
+        # routed expert weights: blocks/.../w_up|w_gate|w_down with E dim
+        expert = 3 * cfg.num_experts * cfg.d_model * cfg.expert_d_ff \
+            * (cfg.num_layers)
+        used = expert * cfg.experts_per_token / cfg.num_experts
+        active = total - expert + used
+    return dict(total=total, active=active)
+
+
+def model_flops(cfg, tokens: int) -> float:
+    """6 * N_active * D."""
+    return 6.0 * param_counts(cfg)["active"] * tokens
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model (global FLOPs / HBM bytes per step)
+#
+# cost_analysis() on scanned programs counts while bodies once, so the HLO
+# numbers undercount by the trip counts (layers x KV blocks x chunks).  The
+# roofline compute/memory terms therefore use this analytic model (standard
+# MFU accounting); the raw HLO values are recorded alongside for reference.
+# ---------------------------------------------------------------------------
+
+def _attn_ctx(mode: str, seq: int, window: int) -> float:
+    """Average attended context length per query token."""
+    full = seq / 2 if mode in ("train", "prefill") else seq
+    if window:
+        return min(full, window)
+    return full
+
+
+def analytic_costs(cfg, mode: str, batch: int, seq: int) -> dict:
+    """Global per-step FLOPs and HBM bytes (documented formulas).
+
+    FLOPs: 2*m*n*k per matmul; train multiplies matmul flops by 4
+    (fwd + 2x bwd + 1x remat recompute); prefill/decode by 1.
+    Bytes: params traffic + activation/state traffic + cache traffic.
+    """
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV, ff, V = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff, cfg.vocab
+    tokens = batch * (seq if mode in ("train", "prefill") else 1)
+    ctx = _attn_ctx(mode, seq, cfg.sliding_window)
+
+    def attn_flops_tok():
+        proj = 2 * d * hd * (2 * H + 2 * KV)
+        scores = 4 * ctx * H * hd
+        return proj + scores
+
+    def mlp_flops_tok():
+        return (6 if cfg.gated_mlp else 4) * d * ff
+
+    def moe_flops_tok():
+        router = 2 * d * cfg.num_experts
+        routed = 6 * d * cfg.expert_d_ff * cfg.experts_per_token
+        sharedx = 6 * d * cfg.expert_d_ff * cfg.num_shared_experts
+        return router + routed + sharedx
+
+    def mamba_flops_tok():
+        di = cfg.mamba_expand * d
+        n = cfg.ssm_state
+        h = di // cfg.mamba_headdim
+        p = cfg.mamba_headdim
+        q = 256 if mode in ("train", "prefill") else 1
+        proj = 2 * d * (2 * di + 2 * cfg.mamba_groups * n + h) + 2 * di * d
+        ssd = 2 * h * (q * (n + p) + 2 * p * n)
+        return proj + ssd
+
+    def mlstm_flops_tok():
+        di = cfg.xlstm_proj_factor * d
+        h, p = cfg.num_heads, (cfg.xlstm_proj_factor * d) // cfg.num_heads
+        q = 256 if mode in ("train", "prefill") else 1
+        proj = 2 * d * 2 * di + 2 * di * 3 * di + 2 * di * d
+        mix = 2 * h * (q * 2 * p + 2 * p * p)
+        return proj + mix
+
+    def slstm_flops_tok():
+        h, p = cfg.num_heads, d // cfg.num_heads
+        ffs = int(d * 4 / 3)
+        return 2 * d * 4 * d + 2 * h * p * 4 * p + 2 * (d * ffs + ffs * d)
+
+    per_tok = 0.0
+    L = cfg.num_layers
+    if cfg.pattern == "dense":
+        per_tok = L * (attn_flops_tok() + mlp_flops_tok())
+    elif cfg.pattern == "moe":
+        per_tok = L * (attn_flops_tok() + moe_flops_tok())
+    elif cfg.pattern == "zamba":
+        ns = max(1, L // cfg.mamba_per_attn)
+        per_tok = L * mamba_flops_tok() + ns * (attn_flops_tok() + mlp_flops_tok())
+    elif cfg.pattern == "xlstm":
+        ns = max(1, L // 2)
+        per_tok = ns * (mlstm_flops_tok() + slstm_flops_tok())
+    elif cfg.pattern == "whisper":
+        # encoder tokens = seq; decoder tokens = dec_len (train) or 1
+        enc_tok = batch * seq if mode in ("train", "prefill") else 0
+        dec_tok = batch * (cfg.dec_len_train if mode == "train" else
+                           (0 if mode == "prefill" else 1))
+        enc = L * (attn_flops_tok() + mlp_flops_tok())
+        cross_ctx = seq if mode == "train" else 1500
+        dec = L * (2 * attn_flops_tok() + mlp_flops_tok()
+                   + 4 * cross_ctx * H * hd)
+        head = 2 * d * V
+        mult = 4.0 if mode == "train" else 1.0
+        flops = mult * (enc * enc_tok + (dec + head) * dec_tok)
+        return _finish_costs(cfg, mode, batch, seq, flops, tokens)
+    head_toks = tokens if mode == "train" else batch  # prefill: last only
+    flops = per_tok * tokens + 2 * d * V * head_toks
+    flops *= 4.0 if mode == "train" else 1.0
+    return _finish_costs(cfg, mode, batch, seq, flops, tokens)
+
+
+def _finish_costs(cfg, mode, batch, seq, flops, tokens) -> dict:
+    pc = param_counts(cfg)
+    pbytes = pc["total"] * 2  # bf16
+    d = cfg.d_model
+    if mode == "train":
+        # params: fwd read + bwd read + update write; moments: 2 x (r+w) fp32
+        weight_traffic = 3 * pbytes + 4 * pc["total"] * 4
+        act_traffic = 6 * cfg.num_layers * tokens * d * 2
+        cache_traffic = 0
+    elif mode == "prefill":
+        weight_traffic = pbytes
+        act_traffic = 4 * cfg.num_layers * tokens * d * 2
+        cache_traffic = 0
+    else:  # decode: read weights once, read/write the whole cache
+        weight_traffic = pbytes
+        act_traffic = 4 * cfg.num_layers * batch * d * 2
+        cache_traffic = _cache_bytes(cfg, batch, seq)
+    return dict(
+        flops=float(flops),
+        hbm_bytes=float(weight_traffic + act_traffic + cache_traffic),
+        tokens=tokens,
+        params_total=pc["total"],
+        params_active=pc["active"],
+    )
+
+
+def _cache_bytes(cfg, batch: int, seq: int) -> float:
+    """Decode-step cache traffic (read the attended context + write 1)."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    w = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    att_layers = {
+        "dense": cfg.num_layers,
+        "moe": cfg.num_layers,
+        "zamba": max(1, cfg.num_layers // cfg.mamba_per_attn),
+        "whisper": cfg.num_layers,
+        "xlstm": 0,
+    }[cfg.pattern]
+    kv_bytes = att_layers * batch * w * kv * hd * 2 * 2  # K and V, bf16
+    state_bytes = 0.0
+    if cfg.pattern == "zamba":
+        di = cfg.mamba_expand * cfg.d_model
+        h = di // cfg.mamba_headdim
+        state_bytes = (
+            cfg.num_layers * batch * h * cfg.mamba_headdim * cfg.ssm_state * 4 * 2
+        )
+    if cfg.pattern == "xlstm":
+        di = cfg.xlstm_proj_factor * cfg.d_model
+        h, p = cfg.num_heads, di // cfg.num_heads
+        ns = max(1, cfg.num_layers // 2)
+        state_bytes = ns * batch * (h * p * p + 4 * h * p) * 4 * 2
+    if cfg.pattern == "whisper":
+        kv_bytes += cfg.num_layers * batch * 1500 * kv * hd * 2 * 2
+    return kv_bytes + state_bytes

@@ -1,0 +1,63 @@
+"""Training launcher: fault-tolerant loop on an explicit device mesh.
+
+    # single device (CPU dev box)
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --reduced \
+        --steps 50
+
+    # 8 fake host devices, (2,4) mesh — same command scales to real pods
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --reduced \
+        --mesh 2x4 --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import all_arch_names, get_config
+from repro.models import common as MC
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=all_arch_names())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mesh", default=None, help="e.g. 2x4 (data x model)")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--set", action="append", default=[],
+                    help="strategy knob key=value")
+    args = ap.parse_args()
+
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        MC.set_strategy(**{k: v})
+
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[: len(shape)] if len(shape) <= 2 else (
+            "pod", "data", "model")
+        mesh = jax.make_mesh(shape, axes)
+        MC.set_mesh_axes(mesh.axis_names, dict(mesh.shape))
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    tcfg = TrainConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        global_batch=args.global_batch, seq_len=args.seq_len,
+        base_lr=args.lr, warmup=max(2, args.steps // 20),
+    )
+    out = Trainer(cfg, tcfg, mesh=mesh).run()
+    h = out["history"]
+    print(f"{args.arch}: {out['steps_run']} steps, "
+          f"loss {h[0]['loss']:.4f} -> {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Attention: GQA with flash-style chunked softmax, SWA, qk_norm, decode.
+
+Training/prefill use a pure-JAX flash attention (lax.scan over KV blocks
+with online softmax) so the 32k/500k shapes never materialise an (S, S)
+score matrix and the scanned HLO stays small for the 512-device dry-run.
+Decode attends one query step against the KV cache.  Sliding-window
+attention masks per block (SWA archs keep only a window-sized cache at
+decode — this is what makes long_500k lowerable for h2o-danube).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ACT_DTYPE, apply_mrope, apply_rope, rms_norm, shard
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(k, num_heads):
+    """(B, S, KV, hd) -> (B, S, H, hd) by head-group broadcast."""
+    b, s, kv, hd = k.shape
+    rep = num_heads // kv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, hd)).reshape(
+        b, s, num_heads, hd
+    )
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int = 0,  # 0 = full; else sliding window size
+    q_offset: int = 0,  # absolute position of q[0] (cross/kv-extended)
+    block_kv: int = 512,
+):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, H, hd) (already GQA-expanded).
+    Online-softmax scan over KV blocks; O(Sq * block) memory."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd**-0.5
+    nblk = -(-sk // block_kv)
+    pad = nblk * block_kv - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block_kv, h, hd)
+    vb = v.reshape(b, nblk, block_kv, h, hd)
+    qf = (q * scale).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, bi = blk
+        k_pos = bi * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32))
+        mask = jnp.ones((sq, block_kv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= (k_pos < sk)[None, :]  # padding
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)  # (nblk, B, blk, H, hd) for scan
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kb_t, vb_t, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, hd)
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray  # (d, H*hd)
+    wk: jnp.ndarray  # (d, KV*hd)
+    wv: jnp.ndarray  # (d, KV*hd)
+    wo: jnp.ndarray  # (H*hd, d)
+    q_norm: Optional[jnp.ndarray]  # (hd,) when qk_norm
+    k_norm: Optional[jnp.ndarray]
+
+
+def init_attn(kg, cfg, dtype):
+    from .common import dense_init
+
+    hd = cfg.head_dim
+    p = AttnParams(
+        wq=dense_init(kg(), (cfg.d_model, cfg.num_heads * hd), dtype),
+        wk=dense_init(kg(), (cfg.d_model, cfg.num_kv_heads * hd), dtype),
+        wv=dense_init(kg(), (cfg.d_model, cfg.num_kv_heads * hd), dtype),
+        wo=dense_init(kg(), (cfg.num_heads * hd, cfg.d_model), dtype),
+        q_norm=jnp.ones((hd,), dtype) if cfg.qk_norm else None,
+        k_norm=jnp.ones((hd,), dtype) if cfg.qk_norm else None,
+    )
+    return p
+
+
+def attn_forward(
+    p: AttnParams, cfg, x, positions, *,
+    kv_cache=None,  # (k, v) each (B, S_ctx, KV, hd) for decode
+    cache_index=None,  # () int32 write position
+    mrope_positions=None,  # (3, B, S) for the VLM backbone
+    cross_kv=None,  # (k, v) for encoder-decoder cross attention
+):
+    """Returns (out, new_kv_cache_or_None).  x: (B, S, d)."""
+    from .common import use_weight
+
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ use_weight(p.wq, "col")).reshape(b, s, h, hd)
+    if cross_kv is None:
+        k = (x @ use_weight(p.wk, "col")).reshape(b, s, kv, hd)
+        v = (x @ use_weight(p.wv, "col")).reshape(b, s, kv, hd)
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rms_norm(q, p.q_norm)
+        if cross_kv is None:
+            k = rms_norm(k, p.k_norm)
+
+    if cross_kv is None:
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        elif cfg.use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and cross_kv is None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck, cv
+
+    k = _gqa_expand(k, h)
+    v = _gqa_expand(v, h)
+    from .common import STRATEGY
+    if STRATEGY["attn_shard"] != "none":
+        q = shard(q, "dp", None, "tp", None)
+        k = shard(k, "dp", None, "tp", None)
+
+    if kv_cache is not None and s == 1:
+        # decode: single-step attention against the cache
+        scale = hd**-0.5
+        scores = jnp.einsum("bqhd,bkhd->bhqk", (q * scale).astype(jnp.float32),
+                            k.astype(jnp.float32))
+        k_pos = jnp.arange(k.shape[1])
+        mask = k_pos[None, :] <= cache_index
+        if cfg.sliding_window:
+            mask &= k_pos[None, :] > cache_index - cfg.sliding_window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        out = flash_attention(
+            q, k, v,
+            causal=cross_kv is None and cfg.causal,
+            window=cfg.sliding_window,
+        )
+    out = out.reshape(b, s, h * hd)
+    out = out @ use_weight(p.wo, "row")
+    return shard(out, "dp", None, None), new_cache

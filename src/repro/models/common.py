@@ -1,0 +1,216 @@
+"""Shared model components: norms, RoPE/M-RoPE, init, sharding helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Dtype policy: bf16 params/activations, fp32 norms-statistics & softmax
+# ---------------------------------------------------------------------------
+
+ACT_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    if STRATEGY.get("norm_mult", "f32") == "bf16":
+        # keep only the variance reduction in f32; the (B,S,d)-sized
+        # elementwise path stays bf16 so no f32 activation tensors (or
+        # their cotangents) ever exist (§Perf: f32 collective halving)
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * scale.astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (incl. M-RoPE for the VLM backbone)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 1e6):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 1e6, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: three position streams (t, h, w) rotate
+    disjoint frequency sections.  x: (B, S, H, hd); positions3: (3, B, S).
+
+    ``sections`` are per-stream counts of frequency PAIRS, summing to
+    hd/2 (default matches head_dim=128: 16+24+24 = 64).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (half,)
+    # stream id per frequency pair; positions3 (3,B,S) -> (B,S,half)
+    sid = jnp.asarray(
+        np.repeat(np.arange(3), np.asarray(sections)), dtype=jnp.int32
+    )  # (half,)
+    p = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # (B, S, 3)
+    pos = jnp.take(p, sid, axis=-1)  # (B, S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype=PARAM_DTYPE, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic key splitter: kg() returns a fresh key each call."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers — logical axes resolved against the active mesh
+# ---------------------------------------------------------------------------
+
+#: set by the launcher; smoke tests leave it empty (no constraints)
+_MESH_AXES: tuple[str, ...] = ()
+_MESH_SIZES: dict = {}
+
+#: perf-iteration strategy knobs (read at trace time; §Perf in
+#: EXPERIMENTS.md logs every setting with its measured effect)
+STRATEGY: dict = {
+    "attn_shard": "baseline",  # baseline | none
+    "moe_shard": "baseline",  # baseline | dp_cap | ep | blocked | blocked_ep
+    "logits_shard": "baseline",  # baseline | none
+    "moe_bucket_constraint": "on",  # on | off (blocked dispatch)
+    "fsdp_mode": "baseline",  # baseline | megatron (directional TP + weight-gather-at-use)
+    "norm_mult": "f32",  # f32 | bf16 (elementwise path of rms_norm)
+}
+
+
+def use_weight(w, kind: str):
+    """Under fsdp_mode=megatron, constrain a weight AT USE so the FSDP
+    ('data') axis is gathered once per layer (a small weight all-gather)
+    instead of XLA resharding the activations around it (§Perf).
+    kind: 'col' (TP on out dim) or 'row' (TP on in dim)."""
+    if STRATEGY.get("fsdp_mode") != "megatron" or not _MESH_AXES:
+        return w
+    if w.ndim < 2:
+        return w
+    spec: list = [None] * w.ndim
+    tp = tp_axis()
+    dim = w.ndim - 1 if kind == "col" else w.ndim - 2
+    if tp and w.shape[dim] % max(_axsize(tp), 1) == 0 and _axsize(tp) > 1:
+        spec[dim] = tp
+    return jax.lax.with_sharding_constraint(w, P(*spec))
+
+
+def set_strategy(**kw) -> dict:
+    for k, v in kw.items():
+        assert k in STRATEGY, f"unknown strategy knob {k}"
+        STRATEGY[k] = v
+    return dict(STRATEGY)
+
+
+def set_mesh_axes(axes: Sequence[str], sizes: Optional[dict] = None) -> None:
+    global _MESH_AXES, _MESH_SIZES
+    _MESH_AXES = tuple(axes)
+    _MESH_SIZES = dict(sizes or {})
+
+
+def axes() -> tuple[str, ...]:
+    return _MESH_AXES
+
+
+def dp_axes() -> tuple[str, ...]:
+    """Data-parallel axes: ('pod', 'data') when multi-pod, else ('data',)."""
+    return tuple(a for a in _MESH_AXES if a in ("pod", "data"))
+
+
+def tp_axis() -> Optional[str]:
+    return "model" if "model" in _MESH_AXES else None
+
+
+def _axsize(ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        out = 1
+        for a in ax:
+            out *= _MESH_SIZES.get(a, 1)
+        return out
+    return _MESH_SIZES.get(ax, 1)
+
+
+def shard(x, *spec):
+    """with_sharding_constraint if a mesh is configured, else identity.
+
+    spec entries: None, 'dp', 'tp', or explicit axis names/tuples.  The
+    constraint is applied to the TRAILING dims when the value has lower
+    rank than the spec (e.g. flattened (tokens, d) vs (B, S, d)), and any
+    axis that does not divide its dim is dropped rather than erroring.
+    """
+    if not _MESH_AXES:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "dp":
+            resolved.append(dp_axes() or None)
+        elif s == "tp":
+            resolved.append(tp_axis())
+        else:
+            resolved.append(s)
+    if len(resolved) > x.ndim:
+        resolved = resolved[len(resolved) - x.ndim:]
+    elif len(resolved) < x.ndim:
+        resolved = [None] * (x.ndim - len(resolved)) + resolved
+    final = []
+    for dim, ax in zip(x.shape, resolved):
+        size = _axsize(ax)
+        final.append(ax if (ax and size > 1 and dim % size == 0) else None)
+    if not any(final):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*final))

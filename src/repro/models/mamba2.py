@@ -1,0 +1,162 @@
+"""Mamba2 block (SSD — state space duality, chunked parallel form).
+
+Training/prefill use the chunked SSD algorithm: within-chunk "diagonal"
+term (attention-like, Q x Q per chunk) + inter-chunk recurrence over the
+(B, H, P, N) state — a lax.scan over chunks, so memory is O(S*Q) and the
+HLO stays small.  Decode is the exact one-step recurrence on the carried
+state (O(1) per token — this is why zamba2/xlstm run the long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, shard
+
+
+class Mamba2Params(NamedTuple):
+    in_proj: jnp.ndarray  # (d, 2*di + 2*G*N + H)
+    conv_w: jnp.ndarray  # (w, conv_ch)
+    conv_b: jnp.ndarray  # (conv_ch,)
+    a_log: jnp.ndarray  # (H,)
+    dt_bias: jnp.ndarray  # (H,)
+    d_skip: jnp.ndarray  # (H,)
+    norm: jnp.ndarray  # (di,)
+    out_proj: jnp.ndarray  # (di, d)
+
+
+def dims(cfg):
+    di = cfg.mamba_expand * cfg.d_model
+    n = cfg.ssm_state
+    g = cfg.mamba_groups
+    p = cfg.mamba_headdim
+    h = di // p
+    conv_ch = di + 2 * g * n
+    return di, n, g, p, h, conv_ch
+
+
+def init_mamba2(kg, cfg, dtype):
+    d = cfg.d_model
+    di, n, g, p, h, conv_ch = dims(cfg)
+    return Mamba2Params(
+        in_proj=dense_init(kg(), (d, 2 * di + 2 * g * n + h), dtype),
+        conv_w=dense_init(kg(), (cfg.mamba_conv, conv_ch), dtype, scale=0.1),
+        conv_b=jnp.zeros((conv_ch,), dtype),
+        a_log=jnp.zeros((h,), jnp.float32),
+        dt_bias=jnp.zeros((h,), jnp.float32),
+        d_skip=jnp.ones((h,), jnp.float32),
+        norm=jnp.ones((di,), dtype),
+        out_proj=dense_init(kg(), (di, d), dtype),
+    )
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (k, C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def mamba2_forward(p: Mamba2Params, cfg, x, *, chunk: int = 256):
+    """x: (B, S, d) -> (B, S, d) via chunked SSD."""
+    from .common import use_weight
+
+    b, s, d = x.shape
+    di, n, g, ph, h, conv_ch = dims(cfg)
+    zxbcdt = x @ use_weight(p.in_proj, "col")
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p.conv_w, p.conv_b))
+    xs, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xs = xs.reshape(b, s, h, ph)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+    # broadcast groups to heads
+    rep = h // g
+    bmat = jnp.repeat(bmat, rep, axis=2)  # (B,S,H,N)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)  # (B,S,H)
+    a = -jnp.exp(p.a_log)  # (H,) negative
+    da = dt * a  # (B,S,H) log-decay per step
+
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_chunks(t):
+        return jnp.moveaxis(
+            t.reshape(b, nchunks, chunk, *t.shape[2:]), 1, 0
+        )  # (nc, B, Q, ...)
+
+    xs_c, b_c, c_c, da_c, dt_c = map(reshape_chunks, (xs, bmat, cmat, da, dt))
+
+    def chunk_step(state, inp):
+        xq, bq, cq, daq, dtq = inp  # (B,Q,H,P) (B,Q,H,N) ... (B,Q,H)
+        cum = jnp.cumsum(daq, axis=1)  # (B,Q,H)
+        # diagonal (within-chunk) term: attention-like with decay kernel
+        li = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Qi,Qj,H)
+        iota = jnp.arange(chunk)
+        causal = iota[:, None] >= iota[None, :]
+        kern = jnp.where(causal[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bihn,bjhn->bijh", cq, bq)  # (B,Qi,Qj,H)
+        w = cb * kern * dtq[:, None, :, :]  # dt at source j
+        diag = jnp.einsum("bijh,bjhp->bihp", w, xq.astype(jnp.float32))
+        # inter-chunk: contribution of carried state to each position
+        inter = jnp.einsum(
+            "bihn,bhpn->bihp", cq * jnp.exp(cum)[..., None], state
+        )
+        # state update: decay whole chunk + new outer products
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        dstate = jnp.einsum(
+            "bjhn,bjhp->bhpn",
+            bq * (decay_tail * dtq)[..., None],
+            xq.astype(jnp.float32),
+        )
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + dstate
+        return state, diag + inter
+
+    state0 = jnp.zeros((b, h, ph, n), jnp.float32)
+    state, ys = jax.lax.scan(chunk_step, state0, (xs_c, b_c, c_c, da_c, dt_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunks * chunk, h, ph)[:, :s]
+    y = y + xs[:, :s] * p.d_skip[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.norm)
+    return shard(y @ use_weight(p.out_proj, "row"), "dp", None, None)
+
+
+def mamba2_decode_step(p: Mamba2Params, cfg, x, state):
+    """One-token step.  x: (B, 1, d); state = (conv_state (B, w-1, C),
+    ssm_state (B, H, P, N)).  Returns (y, new_state)."""
+    b, _, d = x.shape
+    di, n, g, ph, h, conv_ch = dims(cfg)
+    conv_state, ssm_state = state
+    zxbcdt = x[:, 0] @ p.in_proj
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    # conv: append new column, take window
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,w,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p.conv_w) + p.conv_b
+    xbc = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:]
+    xs, bvec, cvec = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xs = xs.reshape(b, h, ph)
+    rep = h // g
+    bvec = jnp.repeat(bvec.reshape(b, g, n), rep, axis=1)
+    cvec = jnp.repeat(cvec.reshape(b, g, n), rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)  # (B,H)
+    a = -jnp.exp(p.a_log)
+    decay = jnp.exp(dt * a)  # (B,H)
+    ssm_state = ssm_state * decay[:, :, None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", bvec.astype(jnp.float32), xs.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, cvec.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p.d_skip[None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.norm)
+    return (y @ p.out_proj)[:, None], (new_conv_state, ssm_state)

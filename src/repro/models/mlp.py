@@ -1,0 +1,36 @@
+"""Dense feed-forward blocks: SwiGLU (llama/qwen family) and GELU (starcoder,
+whisper)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard
+
+
+class MLPParams(NamedTuple):
+    w_up: jnp.ndarray  # (d, ff)
+    w_gate: Optional[jnp.ndarray]  # (d, ff) for swiglu
+    w_down: jnp.ndarray  # (ff, d)
+
+
+def init_mlp(kg, d_model: int, d_ff: int, dtype, *, gated: bool = True):
+    return MLPParams(
+        w_up=dense_init(kg(), (d_model, d_ff), dtype),
+        w_gate=dense_init(kg(), (d_model, d_ff), dtype) if gated else None,
+        w_down=dense_init(kg(), (d_ff, d_model), dtype),
+    )
+
+
+def mlp_forward(p: MLPParams, x):
+    from .common import use_weight
+
+    h = x @ use_weight(p.w_up, "col")
+    if p.w_gate is not None:
+        h = jax.nn.silu(x @ use_weight(p.w_gate, "col")) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "dp", None, "tp")
+    return shard(h @ use_weight(p.w_down, "row"), "dp", None, None)

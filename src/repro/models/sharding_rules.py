@@ -1,0 +1,172 @@
+"""Sharding rules: map parameter / state / batch pytrees to PartitionSpecs.
+
+Scheme (baseline; §Perf iterates on the chosen hillclimb cells):
+
+* parameters: tensor-parallel on the last dim over ``model``; FSDP on the
+  second-to-last dim over ``data`` (+ ``pod`` only stays data-parallel —
+  cross-pod FSDP would put the all-gather on the slow inter-pod links).
+  Divisibility guards drop an axis rather than emit invalid shardings
+  (e.g. whisper's vocab 51866 is not 16-divisible -> replicated head dim).
+* decode caches: batch over data axes; the *context* dim over ``model``
+  (sequence-sharding: at 500k the KV is the dominant buffer, and the
+  softmax reductions over a sharded context are XLA-native collectives).
+* batches: leading batch dim over all data axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh_shape: dict, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh_shape[a] for a in ax]))
+    return mesh_shape[ax]
+
+
+def param_pspec(shape: tuple, mesh_shape: dict, *, dp, tp) -> P:
+    """Generic weight rule with divisibility guards."""
+    rank = len(shape)
+    if rank <= 1:
+        return P()
+    spec: list = [None] * rank
+    # TP on the last dim (prefer), else second-to-last
+    tp_size = _axsize(mesh_shape, tp)
+    if tp is not None and tp_size > 1:
+        if shape[-1] % tp_size == 0 and shape[-1] >= 2 * tp_size:
+            spec[-1] = tp
+        elif shape[-2] % tp_size == 0 and shape[-2] >= 2 * tp_size:
+            spec[-2] = tp
+    # FSDP on the second-to-last dim (or last if TP took second-to-last)
+    dp_size = _axsize(mesh_shape, dp)
+    if dp is not None and dp_size > 1:
+        for d in (rank - 2, rank - 1, rank - 3):
+            if d < 0 or spec[d] is not None:
+                continue
+            if shape[d] % dp_size == 0 and shape[d] >= 2 * dp_size:
+                spec[d] = dp
+                break
+    return P(*spec)
+
+
+def params_pspecs(params_shape: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree for an LMParams shape tree.
+
+    Special case (measured in §Perf): stacked EXPERT weights (L, E, d, f)
+    must NOT FSDP-shard the contraction dim d — the einsum against
+    data-sharded token buckets then partial-sums over 'data', which GSPMD
+    realises as giant bucket all-reduces.  Experts FSDP over the E dim
+    when it divides, else they replicate across 'data' (TP still splits
+    f); dense weights keep the generic rule.
+    """
+    mesh_shape = dict(mesh.shape)
+    tp = "model" if "model" in mesh_shape else None
+    dp = "data" if (fsdp and "data" in mesh_shape) else None
+    dp_size = _axsize(mesh_shape, dp)
+
+    from .common import STRATEGY
+
+    tp_size = _axsize(mesh_shape, tp)
+    megatron = STRATEGY.get("fsdp_mode", "baseline") == "megatron"
+
+    def rule(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                        for k in path)
+        moe_mode = STRATEGY.get("moe_shard", "baseline")
+        if "mlp" in name and leaf.ndim == 4 and moe_mode != "baseline":
+            # (L, E, d, f) expert stack; the baseline keeps the generic
+            # rule (the paper-faithful record in EXPERIMENTS.md §Dry-run)
+            if moe_mode == "blocked_ep" and tp and \
+                    tp_size > 1 and leaf.shape[1] % tp_size == 0:
+                # expert parallelism: E over the model axis, f unsharded;
+                # storage keeps FSDP on d over data (opt states!) — the
+                # forward gathers the data axis at use (use_weight-style)
+                spec = [None, tp, None, None]
+                if dp and dp_size > 1 and leaf.shape[2] % dp_size == 0:
+                    spec[2] = dp
+                return P(*spec)
+            if dp and dp_size > 1 and leaf.shape[1] % dp_size == 0:
+                spec = [None, dp, None, None]
+                if tp and tp_size > 1 and leaf.shape[-1] % tp_size == 0:
+                    spec[-1] = tp
+                return P(*spec)
+        if megatron and leaf.ndim >= 2 and _is_row_parallel(name):
+            # row-parallel (w_down, wo): TP on the contraction (in) dim,
+            # FSDP on the out dim — §Perf: the last-dim-TP default forced
+            # XLA to all-gather the ff-wide hidden activations instead.
+            spec = [None] * leaf.ndim
+            if tp and tp_size > 1 and leaf.shape[-2] % tp_size == 0:
+                spec[-2] = tp
+            if dp and dp_size > 1 and leaf.shape[-1] % dp_size == 0 \
+                    and spec[-1] is None:
+                spec[-1] = dp
+            return P(*spec)
+        return param_pspec(leaf.shape, mesh_shape, dp=dp, tp=tp)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def _is_row_parallel(name: str) -> bool:
+    """Row-parallel = contraction dim is the wide/TP'd one: attention wo,
+    MLP w_down, mamba out_proj, xlstm block down/ff2 projections."""
+    return any(tok in name for tok in ("wo", "w_down", "out_proj", "w_ff2"))
+
+
+def cache_pspecs(cache_shape: Any, mesh: Mesh) -> Any:
+    """Decode-state rule: batch -> data axes, context/heads -> model."""
+    mesh_shape = dict(mesh.shape)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh_shape)
+    tp = "model" if "model" in mesh_shape else None
+    dp_size = _axsize(mesh_shape, dp_axes) if dp_axes else 1
+    tp_size = _axsize(mesh_shape, tp)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        rank = len(shape)
+        spec: list = [None] * rank
+        # find the batch dim: caches are (L, B, ...) or (L, M, B, ...);
+        # pick the first dim whose size matches none of the head patterns —
+        # structurally we know: dim 1 for (L,B,...), dim 2 for (L,M,B,...)
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        bdim = 2 if "/conv" in "/" + name or "/ssm" in "/" + name else 1
+        if (rank > bdim and dp_axes and dp_size > 1
+                and shape[bdim] % dp_size == 0 and shape[bdim] >= dp_size):
+            spec[bdim] = dp_axes
+        # context dim for kv/cross caches: (L, B, W, KV, hd) -> dim 2
+        if tp is not None and tp_size > 1:
+            if ("kv" in name or "cross" in name) and rank == 5:
+                if shape[2] % tp_size == 0 and shape[2] >= 2 * tp_size:
+                    spec[2] = tp
+            elif rank >= 3 and shape[2] % tp_size == 0 and shape[2] >= 2 * tp_size \
+                    and spec[2] is None and bdim != 2:
+                spec[2] = tp  # heads dim of recurrent states
+            elif rank >= 4 and shape[3] % tp_size == 0 and shape[3] >= 2 * tp_size:
+                spec[3] = tp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def batch_pspecs(batch_shape: Any, mesh: Mesh) -> Any:
+    mesh_shape = dict(mesh.shape)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh_shape)
+
+    dp_size = _axsize(mesh_shape, dp_axes) if dp_axes else 1
+
+    def rule(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if leaf.ndim == 0:
+            return P()
+        bdim = 1 if "mrope" in name else 0  # mrope is (3, B, S)
+        spec = [None] * leaf.ndim
+        if dp_axes and dp_size > 1 and leaf.shape[bdim] % dp_size == 0:
+            spec[bdim] = dp_axes
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)

@@ -1,0 +1,270 @@
+"""Block assembly: per-family layer definitions + scan-over-layers stacks.
+
+Every architecture is a sequence of identical *superlayers* scanned with
+``lax.scan`` (stacked parameters, tiny HLO even at 80 layers — essential
+for the 512-device dry-run compile):
+
+  dense   superlayer = [attn + mlp]                       x L
+  moe     superlayer = [attn + moe]                       x L
+  zamba   superlayer = [M x mamba2 + SHARED attn/mlp]     x L/M
+  xlstm   superlayer = [mLSTM + sLSTM]                    x L/2
+  whisper encoder [attn + mlp] x L  /  decoder [self + cross + mlp] x L
+
+Decode variants scan the same stacks while threading per-layer state
+(KV caches / SSM states / xLSTM memories) as stacked pytrees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttnParams, attn_forward, init_attn
+from .common import KeyGen, rms_norm, shard
+from .mamba2 import (
+    Mamba2Params, dims as mamba_dims, init_mamba2, mamba2_decode_step,
+    mamba2_forward,
+)
+from .mlp import MLPParams, init_mlp, mlp_forward
+from .moe import MoEParams, init_moe, moe_forward
+from .xlstm import (
+    MLSTMParams, SLSTMParams, init_mlstm, init_slstm,
+    mlstm_decode_step, mlstm_forward, slstm_decode_step, slstm_forward,
+    _mdims, _sdims,
+)
+
+NEG_INF = -1e30
+
+
+def stack_init(init_one, key, count: int):
+    """vmap-stack ``count`` independent inits: params get leading dim L."""
+    keys = jax.random.split(key, count)
+    return jax.vmap(lambda k: init_one(KeyGen(k)))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (pre-norm attn + pre-norm ff), shared by families
+# ---------------------------------------------------------------------------
+
+class AttnBlockParams(NamedTuple):
+    attn_norm: jnp.ndarray
+    attn: AttnParams
+    ff_norm: jnp.ndarray
+    mlp: Any  # MLPParams | MoEParams
+
+
+def init_attn_block(kg, cfg, dtype, *, moe: bool):
+    return AttnBlockParams(
+        attn_norm=jnp.ones((cfg.d_model,), dtype),
+        attn=init_attn(kg, cfg, dtype),
+        ff_norm=jnp.ones((cfg.d_model,), dtype),
+        mlp=init_moe(kg, cfg, dtype) if moe
+        else init_mlp(kg, cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp),
+    )
+
+
+def attn_block_forward(p: AttnBlockParams, cfg, x, positions, *, moe: bool,
+                       mrope_positions=None, cross_kv=None):
+    h, _ = attn_forward(p.attn, cfg, rms_norm(x, p.attn_norm), positions,
+                        mrope_positions=mrope_positions, cross_kv=cross_kv)
+    x = x + h
+    ffin = rms_norm(x, p.ff_norm)
+    ff = moe_forward(p.mlp, cfg, ffin) if moe else mlp_forward(p.mlp, ffin)
+    return x + ff
+
+
+def attn_block_decode(p: AttnBlockParams, cfg, x, cache, pos, *, moe: bool):
+    """cache = (k, v) each (B, W, KV, hd); pos: () int32 absolute position.
+    Ring-buffer semantics when W < needed context (SWA)."""
+    h, new_cache = _attn_decode(p.attn, cfg, rms_norm(x, p.attn_norm), cache, pos)
+    x = x + h
+    ffin = rms_norm(x, p.ff_norm)
+    ff = moe_forward(p.mlp, cfg, ffin) if moe else mlp_forward(p.mlp, ffin)
+    return x + ff, new_cache
+
+
+def _attn_decode(p: AttnParams, cfg, x, cache, pos, *, mrope=False):
+    from .common import apply_mrope, apply_rope
+
+    b, s, d = x.shape  # s == 1
+    hn, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p.wq).reshape(b, s, hn, hd)
+    k = (x @ p.wk).reshape(b, s, kv, hd)
+    v = (x @ p.wv).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p.q_norm)
+        k = rms_norm(k, p.k_norm)
+    positions = jnp.full((b, s), pos, jnp.int32)
+    if cfg.use_rope:
+        if mrope:
+            p3 = jnp.broadcast_to(positions[None], (3, b, s))
+            q = apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    ck, cv = cache
+    w = ck.shape[1]
+    ring = bool(cfg.sliding_window) and w <= cfg.sliding_window
+    idx = jnp.mod(pos, w) if ring else pos
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
+
+    from .attention import _gqa_expand
+
+    kk = _gqa_expand(ck, hn)
+    vv = _gqa_expand(cv, hn)
+    scale = hd**-0.5
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", (q * scale).astype(jnp.float32), kk.astype(jnp.float32)
+    )
+    k_pos = jnp.arange(w)
+    if ring:
+        valid = k_pos[None, :] < jnp.minimum(pos + 1, w)
+    else:
+        valid = k_pos[None, :] <= pos
+        if cfg.sliding_window:
+            valid &= k_pos[None, :] > pos - cfg.sliding_window
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, s, hn * hd)
+    return out @ p.wo, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# zamba superlayer: M mamba blocks + shared attention block
+# ---------------------------------------------------------------------------
+
+class ZambaSuperParams(NamedTuple):
+    mamba: Any  # stacked Mamba2Params, leading dim M
+    mamba_norms: jnp.ndarray  # (M, d)
+
+
+def init_zamba_super(kg, cfg, dtype):
+    m = cfg.mamba_per_attn
+    return ZambaSuperParams(
+        mamba=stack_init(lambda g: init_mamba2(g, cfg, dtype), kg(), m),
+        mamba_norms=jnp.ones((m, cfg.d_model), dtype),
+    )
+
+
+def zamba_super_forward(p: ZambaSuperParams, shared: AttnBlockParams, cfg, x,
+                        positions):
+    def body(x, lp):
+        mp, nrm = lp
+        return x + mamba2_forward(mp, cfg, rms_norm(x, nrm)), None
+
+    x, _ = jax.lax.scan(body, x, (p.mamba, p.mamba_norms))
+    return attn_block_forward(shared, cfg, x, positions, moe=False)
+
+
+def zamba_super_decode(p: ZambaSuperParams, shared, cfg, x, state, pos):
+    """state = ((conv (M,B,w-1,C), ssm (M,B,H,P,N)), attn (k,v))."""
+    (conv, ssm), attn_cache = state
+
+    def body(x, lp):
+        mp, nrm, cs, ss = lp
+        y, (cs2, ss2) = mamba2_decode_step(mp, cfg, rms_norm(x, nrm), (cs, ss))
+        return x + y, (cs2, ss2)
+
+    x, (conv2, ssm2) = jax.lax.scan(body, x, (p.mamba, p.mamba_norms, conv, ssm))
+    x, attn_cache = attn_block_decode(shared, cfg, x, attn_cache, pos, moe=False)
+    return x, ((conv2, ssm2), attn_cache)
+
+
+# ---------------------------------------------------------------------------
+# xlstm superlayer
+# ---------------------------------------------------------------------------
+
+class XLSTMSuperParams(NamedTuple):
+    m_norm: jnp.ndarray
+    mlstm: MLSTMParams
+    s_norm: jnp.ndarray
+    slstm: SLSTMParams
+
+
+def init_xlstm_super(kg, cfg, dtype):
+    return XLSTMSuperParams(
+        m_norm=jnp.ones((cfg.d_model,), dtype),
+        mlstm=init_mlstm(kg, cfg, dtype),
+        s_norm=jnp.ones((cfg.d_model,), dtype),
+        slstm=init_slstm(kg, cfg, dtype),
+    )
+
+
+def xlstm_super_forward(p: XLSTMSuperParams, cfg, x):
+    x = x + mlstm_forward(p.mlstm, cfg, rms_norm(x, p.m_norm))
+    x = x + slstm_forward(p.slstm, cfg, rms_norm(x, p.s_norm))
+    return x
+
+
+def xlstm_super_decode(p: XLSTMSuperParams, cfg, x, state, pos):
+    (cmat, nvec), (sc, sn, sh) = state
+    y, (cmat, nvec) = mlstm_decode_step(p.mlstm, cfg, rms_norm(x, p.m_norm),
+                                        (cmat, nvec))
+    x = x + y
+    y, (sc, sn, sh) = slstm_decode_step(p.slstm, cfg, rms_norm(x, p.s_norm),
+                                        (sc, sn, sh))
+    x = x + y
+    return x, ((cmat, nvec), (sc, sn, sh))
+
+
+# ---------------------------------------------------------------------------
+# Whisper decoder layer (self + cross + mlp)
+# ---------------------------------------------------------------------------
+
+class DecLayerParams(NamedTuple):
+    self_norm: jnp.ndarray
+    self_attn: AttnParams
+    cross_norm: jnp.ndarray
+    cross_attn: AttnParams
+    ff_norm: jnp.ndarray
+    mlp: MLPParams
+
+
+def init_dec_layer(kg, cfg, dtype):
+    return DecLayerParams(
+        self_norm=jnp.ones((cfg.d_model,), dtype),
+        self_attn=init_attn(kg, cfg, dtype),
+        cross_norm=jnp.ones((cfg.d_model,), dtype),
+        cross_attn=init_attn(kg, cfg, dtype),
+        ff_norm=jnp.ones((cfg.d_model,), dtype),
+        mlp=init_mlp(kg, cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp),
+    )
+
+
+def dec_layer_forward(p: DecLayerParams, cfg, x, positions, enc_kv):
+    h, _ = attn_forward(p.self_attn, cfg, rms_norm(x, p.self_norm), positions)
+    x = x + h
+    h, _ = attn_forward(
+        p.cross_attn, cfg, rms_norm(x, p.cross_norm), positions, cross_kv=enc_kv
+    )
+    x = x + h
+    return x + mlp_forward(p.mlp, rms_norm(x, p.ff_norm))
+
+
+def dec_layer_decode(p: DecLayerParams, cfg, x, cache, pos):
+    """cache = (self_k, self_v, cross_k, cross_v)."""
+    sk, sv, xk, xv = cache
+    h, (sk, sv) = _attn_decode(p.self_attn, cfg, rms_norm(x, p.self_norm),
+                               (sk, sv), pos)
+    x = x + h
+    # cross attention against the (precomputed) encoder KV — full softmax
+    b, s, d = x.shape
+    hn, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (rms_norm(x, p.cross_norm) @ p.cross_attn.wq).reshape(b, s, hn, hd)
+    from .attention import _gqa_expand
+
+    kk = _gqa_expand(xk, hn)
+    vv = _gqa_expand(xv, hn)
+    scores = jnp.einsum("bqhd,bkhd->bhqk",
+                        (q * hd**-0.5).astype(jnp.float32), kk.astype(jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    x = x + (out.astype(x.dtype).reshape(b, s, hn * hd) @ p.cross_attn.wo)
+    x = x + mlp_forward(p.mlp, rms_norm(x, p.ff_norm))
+    return x, (sk, sv, xk, xv)

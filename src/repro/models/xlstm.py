@@ -1,0 +1,227 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, genuinely recurrent -> lax.scan over time).
+
+Gate parameterisation note (DESIGN.md §8): we use sigmoid input gates and
+exp(-softplus) forget gates, which keep every factor in (0, 1] so the
+chunked-parallel mLSTM needs no running-max stabiliser; the published
+formulation allows exp input gates with an m-state.  Decode carries
+(C (B,H,p,p), n (B,H,p)) for mLSTM and (c,n,h) scalars for sLSTM.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, shard
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMParams(NamedTuple):
+    w_up: jnp.ndarray  # (d, 2*di) -> (x_inner, z gate path)
+    w_qkv: jnp.ndarray  # (di, 3*di)
+    w_gates: jnp.ndarray  # (di, 2*H)  (input, forget)
+    b_gates: jnp.ndarray  # (2*H,)
+    norm: jnp.ndarray  # (di,)
+    w_down: jnp.ndarray  # (di, d)
+
+
+def _mdims(cfg):
+    di = cfg.xlstm_proj_factor * cfg.d_model
+    h = cfg.num_heads
+    p = di // h
+    return di, h, p
+
+
+def init_mlstm(kg, cfg, dtype):
+    d = cfg.d_model
+    di, h, p = _mdims(cfg)
+    return MLSTMParams(
+        w_up=dense_init(kg(), (d, 2 * di), dtype),
+        w_qkv=dense_init(kg(), (di, 3 * di), dtype),
+        w_gates=dense_init(kg(), (di, 2 * h), jnp.float32, scale=0.02),
+        b_gates=jnp.concatenate(
+            [jnp.full((h,), -2.0), jnp.full((h,), 2.0)]
+        ).astype(jnp.float32),
+        norm=jnp.ones((di,), dtype),
+        w_down=dense_init(kg(), (di, d), dtype),
+    )
+
+
+def mlstm_forward(p: MLSTMParams, cfg, x, *, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: same scan skeleton as SSD (mamba2)."""
+    from .common import use_weight
+
+    b, s, d = x.shape
+    di, h, ph = _mdims(cfg)
+    up = x @ use_weight(p.w_up, "col")
+    xi, z = jnp.split(up, 2, axis=-1)
+    qkv = xi @ p.w_qkv
+    q, k, v = (t.reshape(b, s, h, ph) for t in jnp.split(qkv, 3, axis=-1))
+    gates = xi @ p.w_gates + p.b_gates
+    ig, fg = jnp.split(gates, 2, axis=-1)  # (B,S,H)
+    i = jax.nn.sigmoid(ig.astype(jnp.float32))
+    logf = -jax.nn.softplus(-fg.astype(jnp.float32))  # log sigmoid(fg) <= 0
+    k = k / (ph**0.5)
+
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i = jnp.pad(i, ((0, 0), (0, pad), (0, 0)))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+    def rc(t):
+        return jnp.moveaxis(t.reshape(b, nchunks, chunk, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc, ic, fc = map(rc, (q, k, v, i, logf))
+
+    def chunk_step(carry, inp):
+        cmat, nvec = carry  # (B,H,p,p), (B,H,p)
+        qq, kk, vv, ii, lf = inp
+        cum = jnp.cumsum(lf, axis=1)  # (B,Q,H)
+        dkern = cum[:, :, None, :] - cum[:, None, :, :]
+        iota = jnp.arange(chunk)
+        causal = iota[:, None] >= iota[None, :]
+        kern = jnp.where(causal[None, :, :, None], jnp.exp(dkern), 0.0)
+        qk = jnp.einsum("biha,bjha->bijh", qq.astype(jnp.float32),
+                        kk.astype(jnp.float32))
+        w = qk * kern * ii[:, None, :, :]
+        diag = jnp.einsum("bijh,bjhp->bihp", w, vv.astype(jnp.float32))
+        inter = jnp.einsum(
+            "biha,bhap->bihp", qq.astype(jnp.float32) * jnp.exp(cum)[..., None],
+            cmat,
+        )
+        # normaliser stream (denominator): same recurrences on k-sums
+        ndiag = jnp.einsum("bijh,bjh->bih", w, jnp.ones_like(ii))
+        ninter = jnp.einsum(
+            "biha,bha->bih", qq.astype(jnp.float32) * jnp.exp(cum)[..., None],
+            nvec,
+        )
+        denom = jnp.abs(ndiag + ninter) + 1.0
+        out = (diag + inter) / denom[..., None]
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)
+        dC = jnp.einsum(
+            "bjha,bjhp->bhap", kk.astype(jnp.float32) * (decay_tail * ii)[..., None],
+            vv.astype(jnp.float32),
+        )
+        dn = jnp.einsum("bjha,bjh->bha", kk.astype(jnp.float32), decay_tail * ii)
+        tail = jnp.exp(cum[:, -1])
+        cmat = cmat * tail[:, :, None, None] + dC
+        nvec = nvec * tail[:, :, None] + dn
+        return (cmat, nvec), out
+
+    c0 = jnp.zeros((b, h, ph, ph), jnp.float32)
+    n0 = jnp.zeros((b, h, ph), jnp.float32)
+    (_, _), ys = jax.lax.scan(chunk_step, (c0, n0), (qc, kc, vc, ic, fc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunks * chunk, h, ph)[:, :s]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y, p.norm) * jax.nn.silu(z)
+    return shard(y @ use_weight(p.w_down, "row"), "dp", None, None)
+
+
+def mlstm_decode_step(p: MLSTMParams, cfg, x, state):
+    b, _, d = x.shape
+    di, h, ph = _mdims(cfg)
+    cmat, nvec = state
+    up = x[:, 0] @ p.w_up
+    xi, z = jnp.split(up, 2, axis=-1)
+    qkv = xi @ p.w_qkv
+    q, k, v = (t.reshape(b, h, ph) for t in jnp.split(qkv, 3, axis=-1))
+    gates = xi @ p.w_gates + p.b_gates
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    i = jax.nn.sigmoid(ig.astype(jnp.float32))  # (B,H)
+    f = jax.nn.sigmoid(fg.astype(jnp.float32))
+    k = (k / (ph**0.5)).astype(jnp.float32)
+    cmat = cmat * f[:, :, None, None] + jnp.einsum(
+        "bha,bhp,bh->bhap", k, v.astype(jnp.float32), i
+    )
+    nvec = nvec * f[:, :, None] + k * i[..., None]
+    num = jnp.einsum("bha,bhap->bhp", q.astype(jnp.float32), cmat)
+    den = jnp.abs(jnp.einsum("bha,bha->bh", q.astype(jnp.float32), nvec)) + 1.0
+    y = (num / den[..., None]).reshape(b, di).astype(x.dtype)
+    y = rms_norm(y, p.norm) * jax.nn.silu(z)
+    return (y @ p.w_down)[:, None], (cmat, nvec)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMParams(NamedTuple):
+    w_in: jnp.ndarray  # (d, 4*di)  z,i,f,o pre-activations
+    r_rec: jnp.ndarray  # (H, p, 4*p) block-diagonal recurrent weights
+    norm: jnp.ndarray  # (di,)
+    w_ff: jnp.ndarray  # (di, ff_in) post ffn up
+    w_ff2: jnp.ndarray  # (ff_in, d)
+
+
+def _sdims(cfg):
+    di = cfg.d_model
+    h = cfg.num_heads
+    p = di // h
+    ff = int(cfg.d_model * 4 / 3)
+    return di, h, p, ff
+
+
+def init_slstm(kg, cfg, dtype):
+    d = cfg.d_model
+    di, h, p, ff = _sdims(cfg)
+    return SLSTMParams(
+        w_in=dense_init(kg(), (d, 4 * di), dtype),
+        r_rec=dense_init(kg(), (h, p, 4 * p), jnp.float32, scale=p**-0.5),
+        norm=jnp.ones((di,), dtype),
+        w_ff=dense_init(kg(), (di, ff), dtype),
+        w_ff2=dense_init(kg(), (ff, d), dtype),
+    )
+
+
+def _slstm_cell(p, cfg, pre, state):
+    """pre: (B, H, 4p) input pre-activations; state=(c,n,h) each (B,H,p)."""
+    c, n, hidden = state
+    rec = jnp.einsum("bhp,hpq->bhq", hidden, p.r_rec)  # (B,H,4p)
+    zifo = (pre + rec).astype(jnp.float32)
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c = f * c + i * z
+    n = f * n + i
+    hidden = o * c / jnp.maximum(n, 1.0)
+    return (c, n, hidden)
+
+
+def slstm_forward(p: SLSTMParams, cfg, x):
+    """x: (B, S, d); true recurrence -> lax.scan over time."""
+    b, s, d = x.shape
+    di, h, ph, ff = _sdims(cfg)
+    pre = (x @ p.w_in).reshape(b, s, h, 4 * ph)
+
+    def step(state, pre_t):
+        state = _slstm_cell(p, cfg, pre_t, state)
+        return state, state[2]
+
+    z0 = jnp.zeros((b, h, ph), jnp.float32)
+    _, hs = jax.lax.scan(step, (z0, z0, z0), jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y, p.norm)
+    y = jax.nn.gelu(y @ p.w_ff) @ p.w_ff2
+    return shard(y, "dp", None, None)
+
+
+def slstm_decode_step(p: SLSTMParams, cfg, x, state):
+    b, _, d = x.shape
+    di, h, ph, ff = _sdims(cfg)
+    pre = (x[:, 0] @ p.w_in).reshape(b, h, 4 * ph)
+    state = _slstm_cell(p, cfg, pre, state)
+    y = state[2].reshape(b, di).astype(x.dtype)
+    y = rms_norm(y, p.norm)
+    y = jax.nn.gelu(y @ p.w_ff) @ p.w_ff2
+    return y[:, None], state

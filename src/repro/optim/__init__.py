@@ -1,0 +1,4 @@
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from .compression import (  # noqa: F401
+    compress_int8, decompress_int8, make_compressed_psum,
+)

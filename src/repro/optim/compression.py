@@ -1,0 +1,85 @@
+"""Int8 gradient compression with error feedback, for cross-pod data-
+parallel all-reduce (DESIGN.md §5).
+
+The inter-pod links are the slowest hop of the production mesh (DCN or
+long ICI); compressing the gradient all-reduce 4x (fp32->int8 with a
+per-tensor scale) trades a little fidelity — recovered by error-feedback
+accumulation — for a 4x cut of the collective term on that hop.
+
+``make_compressed_psum`` returns a shard_map-based reducer usable in a
+custom training mode; the standard jit train_step keeps XLA-native
+all-reduces (compression is an opt-in distributed-optimisation trick, and
+the §Perf log measures its collective-bytes effect from the lowered HLO).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantisation: returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(x: jnp.ndarray, error: jnp.ndarray):
+    """Error-feedback compression: returns (q, scale, new_error)."""
+    corrected = x.astype(jnp.float32) + error
+    q, scale = compress_int8(corrected)
+    new_error = corrected - decompress_int8(q, scale)
+    return q, scale, new_error
+
+
+def make_compressed_psum(mesh, axis: str = "pod"):
+    """shard_map reducer: int8-compressed psum of a pytree over ``axis``.
+
+    Each device quantises its local shard, all-gathers the int8 payloads
+    + scales over the (slow) axis and dequantises/sums locally — the wire
+    bytes drop 4x vs an fp32 all-reduce.  Returns fn(tree, errors) ->
+    (summed_tree, new_errors).
+    """
+    try:
+        from jax import shard_map
+    except ImportError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def reduce_one(x, err):
+        q, scale, new_err = ef_compress(x, err)
+        qg = jax.lax.all_gather(q, axis)  # (Npod, ...)
+        sg = jax.lax.all_gather(scale, axis)
+        summed = jnp.tensordot(
+            sg.astype(jnp.float32),
+            qg.astype(jnp.float32).reshape(qg.shape[0], -1),
+            axes=[[0], [0]],
+        ).reshape(x.shape)
+        return summed, new_err
+
+    def body(tree, errors):
+        flat, td = jax.tree.flatten(tree)
+        errs = jax.tree.leaves(errors)
+        outs = [reduce_one(x, e) for x, e in zip(flat, errs)]
+        return td.unflatten([o[0] for o in outs]), td.unflatten(
+            [o[1] for o in outs]
+        )
+
+    def reducer(tree, errors):
+        specs = jax.tree.map(lambda _: P(), tree)
+        espc = jax.tree.map(lambda _: P(), errors)
+        kwargs = dict(mesh=mesh, in_specs=(specs, espc), out_specs=(specs, espc))
+        try:
+            f = shard_map(body, check_vma=False, **kwargs)
+        except TypeError:  # pragma: no cover
+            f = shard_map(body, check_rep=False, **kwargs)
+        return f(tree, errors)
+
+    return reducer

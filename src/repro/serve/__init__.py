@@ -1,0 +1,3 @@
+from .kv_cache import PagedKVCache  # noqa: F401
+from .request_index import RequestIndex  # noqa: F401
+from .engine import ServeEngine  # noqa: F401

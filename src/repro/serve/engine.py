@@ -1,0 +1,124 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+Request lifecycle: admit (BS-tree request index insert + KV page alloc)
+-> decode steps over the active batch -> complete (index delete + page
+release).  The decode step is the jitted model ``decode_step`` over a
+fixed (B_slots, ...) cache; empty slots are masked.  Greedy or top-p
+sampling; top-p uses the branchless succ/searchsorted primitive on the
+sorted CDF (the same operator family as the index)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.succ import searchsorted_right
+from repro.models.model import decode_step, make_cache
+from .kv_cache import PagedKVCache
+from .request_index import RequestIndex
+
+
+def top_p_sample(key, logits, p: float = 0.9):
+    """logits: (B, V).  Sort-based nucleus sampling; the cutoff index is a
+    successor search on the sorted-prob CDF (branchless)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    sorted_probs = jnp.sort(probs, axis=-1)[:, ::-1]
+    order = jnp.argsort(probs, axis=-1)[:, ::-1]
+    cdf = jnp.cumsum(sorted_probs, axis=-1)
+    # number of tokens kept = succ_gt(cdf, p) + 1
+    cut = searchsorted_right(cdf, jnp.full((logits.shape[0],), p)) + 1
+    iota = jnp.arange(logits.shape[-1])[None, :]
+    keep = iota < cut[:, None]
+    filt = jnp.where(keep, sorted_probs, 0.0)
+    filt = filt / jnp.sum(filt, axis=-1, keepdims=True)
+    idx = jax.random.categorical(key, jnp.log(jnp.maximum(filt, 1e-30)))
+    return jnp.take_along_axis(order, idx[:, None], axis=1)[:, 0]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 8
+    ctx: int = 256
+    page_size: int = 16
+    top_p: float = 0.0  # 0 -> greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.cache = make_cache(cfg, ecfg.slots, ecfg.ctx)
+        self.index = RequestIndex()
+        self.pages = PagedKVCache(
+            num_pages=ecfg.slots * (ecfg.ctx // ecfg.page_size),
+            page_size=ecfg.page_size,
+        )
+        self.active = np.zeros(ecfg.slots, dtype=bool)
+        self.slot_req = np.zeros(ecfg.slots, dtype=np.uint64)
+        self.positions = np.zeros(ecfg.slots, dtype=np.int32)
+        self.last_token = np.zeros(ecfg.slots, dtype=np.int32)
+        self.outputs: dict[int, list[int]] = {}
+        self.key = jax.random.key(ecfg.seed)
+        self._step = jax.jit(
+            lambda p, t, c, pos: decode_step(cfg, p, t, c, pos),
+            donate_argnums=(2,),
+        )
+
+    # -- lifecycle -------------------------------------------------------
+    def admit(self, request_id: int, prompt_token: int) -> bool:
+        free = np.nonzero(~self.active)[0]
+        if len(free) == 0:
+            return False
+        slot = int(free[0])
+        self.active[slot] = True
+        self.slot_req[slot] = request_id
+        self.positions[slot] = 0
+        self.last_token[slot] = prompt_token
+        self.outputs[request_id] = []
+        self.index.admit(np.array([request_id]), np.array([slot]))
+        self.pages.admit(request_id)
+        self.pages.extend_to(request_id, 1)
+        return True
+
+    def complete(self, request_id: int) -> list[int]:
+        found, slots = self.index.lookup(np.array([request_id], np.uint64))
+        assert found[0], f"unknown request {request_id}"
+        slot = int(slots[0])
+        self.active[slot] = False
+        self.index.complete(np.array([request_id], np.uint64))
+        self.pages.release(request_id)
+        return self.outputs.pop(request_id)
+
+    # -- decoding --------------------------------------------------------
+    def step(self) -> dict:
+        """One decode step over the whole slot batch (inactive masked)."""
+        if not self.active.any():
+            return {"active": 0}
+        pos = int(self.positions[self.active].max())
+        tokens = jnp.asarray(self.last_token[:, None])
+        logits, self.cache = self._step(
+            self.params, tokens, self.cache, jnp.asarray(pos, jnp.int32)
+        )
+        logits = logits[:, 0]
+        if self.ecfg.top_p > 0:
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(top_p_sample(sub, logits, self.ecfg.top_p))
+        else:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot in np.nonzero(self.active)[0]:
+            rid = int(self.slot_req[slot])
+            tok = int(nxt[slot])
+            self.outputs[rid].append(tok)
+            self.last_token[slot] = tok
+            self.positions[slot] += 1
+            self.pages.extend_to(rid, int(self.positions[slot]) + 1)
+        return {
+            "active": int(self.active.sum()),
+            "page_util": self.pages.utilization(),
+            "index_size": len(self.index),
+        }

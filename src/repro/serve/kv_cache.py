@@ -1,0 +1,102 @@
+"""Paged KV cache with a successor-searched page table.
+
+Pages of ``page_size`` positions are allocated from a free list; each
+sequence owns an ordered page list.  The flat page table (sorted
+``(seq, logical_page) -> physical page``) is queried with the branchless
+searchsorted primitive — the BS-tree succ operator again — so gather
+indices for attention are produced without host round trips.
+
+This is the substrate for long-context decode with eviction: completed
+sequences release pages; admission reuses them (tested in
+tests/test_serve.py)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.succ import searchsorted_left
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Host-managed page table + device-resident page pool.
+
+    pool: (num_pages, page_size, kv_heads, head_dim) per K and V per layer
+    is owned by the engine; this class manages the mapping only.
+    """
+
+    num_pages: int
+    page_size: int
+
+    def __post_init__(self):
+        self.free = list(range(self.num_pages))[::-1]
+        self.tables: dict[int, list[int]] = {}  # seq id -> physical pages
+
+    # -- allocation ------------------------------------------------------
+    def admit(self, seq_id: int) -> None:
+        assert seq_id not in self.tables
+        self.tables[seq_id] = []
+
+    def extend_to(self, seq_id: int, length: int) -> list[int]:
+        """Ensure pages cover ``length`` positions; returns new pages."""
+        pages = self.tables[seq_id]
+        need = -(-length // self.page_size)
+        new = []
+        while len(pages) < need:
+            if not self.free:
+                raise MemoryError("KV page pool exhausted")
+            p = self.free.pop()
+            pages.append(p)
+            new.append(p)
+        return new
+
+    def release(self, seq_id: int) -> int:
+        pages = self.tables.pop(seq_id, [])
+        self.free.extend(reversed(pages))
+        return len(pages)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.num_pages
+
+    # -- lookup ----------------------------------------------------------
+    def gather_indices(self, seq_id: int, positions: np.ndarray) -> np.ndarray:
+        """(physical_page, offset) per position, vectorised."""
+        pages = np.asarray(self.tables[seq_id], dtype=np.int32)
+        logical = positions // self.page_size
+        return pages[logical], positions % self.page_size
+
+    def flat_table(self):
+        """Sorted plane arrays (hi = seq_id, lo = logical page, val =
+        physical page) for device-side successor-search lookups."""
+        his, los, vals = [], [], []
+        for sid, pages in sorted(self.tables.items()):
+            for lp, pp in enumerate(pages):
+                his.append(sid)
+                los.append(lp)
+                vals.append(pp)
+        return (
+            np.asarray(his, dtype=np.uint32),
+            np.asarray(los, dtype=np.uint32),
+            np.asarray(vals, dtype=np.int32),
+        )
+
+
+def device_page_lookup(hi_t, lo_t, table_vals, seq_ids, logical_pages):
+    """Branchless device-side page lookup via the succ operator.
+
+    The table key ``sid << 32 | logical_page`` is exactly the (hi, lo)
+    u32-plane layout the BS-tree uses, so no 64-bit arithmetic is needed:
+    hi plane = seq id, lo plane = logical page (both uint32 jnp arrays,
+    sorted lexicographically).  Returns the physical page or -1."""
+    from repro.core.succ import succ_ge
+
+    hi_q = seq_ids.astype(jnp.uint32)
+    lo_q = logical_pages.astype(jnp.uint32)
+    r = succ_ge(hi_t[None, :], lo_t[None, :], hi_q, lo_q)
+    rc = jnp.minimum(r, hi_t.shape[0] - 1)
+    hit = (r < hi_t.shape[0]) & (hi_t[rc] == hi_q) & (lo_t[rc] == lo_q)
+    return jnp.where(hit, table_vals[rc], -1)

@@ -1,0 +1,2 @@
+from .step import make_train_step, make_serve_step, make_prefill_step  # noqa: F401
+from .loop import Trainer, TrainConfig  # noqa: F401

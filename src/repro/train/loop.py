@@ -1,0 +1,118 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented (and exercised by tests/test_train.py):
+
+  * checkpoint/restart: async atomic checkpoints every K steps; on start
+    the loop resumes from the newest valid checkpoint, the data pipeline
+    skips ahead deterministically (O(1), counter-mode data), and the loss
+    curve continues bitwise-identically vs an uninterrupted run;
+  * elastic: restore reshards onto whatever mesh is active now;
+  * straggler mitigation: per-step wall time is tracked against an EMA —
+    a step exceeding ``straggler_factor`` x EMA fires ``on_straggler``
+    (in a real multi-host deployment this triggers hot-spare swap /
+    re-slicing; the hook makes the policy pluggable and testable);
+  * failure injection: ``fail_at_step`` raises mid-run to let tests prove
+    the restart path (no torn checkpoints, identical continuation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models.model import init_lm
+from repro.optim.adamw import adamw_init
+from .step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    base_lr: float = 3e-4
+    warmup: int = 10
+    global_batch: int = 8
+    seq_len: int = 128
+    straggler_factor: float = 3.0
+    fail_at_step: Optional[int] = None  # failure injection (tests)
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainConfig, mesh=None,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.on_straggler = on_straggler or (lambda step, dt: None)
+        self.ds = SyntheticLMDataset(
+            vocab=cfg.vocab, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed,
+        )
+        self.step_fn, self.specs = make_train_step(
+            cfg, mesh, base_lr=tcfg.base_lr, warmup=tcfg.warmup,
+            total_steps=tcfg.steps,
+        )
+        self.history: list[dict] = []
+
+    def _fresh_state(self):
+        params = init_lm(self.cfg, jax.random.key(self.tcfg.seed))
+        return params, adamw_init(params)
+
+    def _make_batch(self, step: int):
+        toks = self.ds.batch_at(step)
+        return {"tokens": jnp.asarray(toks)}
+
+    def run(self) -> dict:
+        if self.mesh is not None:
+            with self.mesh:
+                return self._run()
+        return self._run()
+
+    def _run(self) -> dict:
+        t = self.tcfg
+        start = 0
+        params = opt_state = None
+        latest = ckpt.latest_step(t.ckpt_dir)
+        if latest is not None:
+            like_p, like_o = jax.eval_shape(self._fresh_state)
+            state = ckpt.restore(t.ckpt_dir, latest, (like_p, like_o))
+            params = jax.tree.map(jnp.asarray, state[0])
+            opt_state = jax.tree.map(jnp.asarray, state[1])
+            start = latest
+        else:
+            params, opt_state = self._fresh_state()
+
+        ema = None
+        for step in range(start, t.steps):
+            if t.fail_at_step is not None and step == t.fail_at_step:
+                ckpt.wait_pending()
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = self._make_batch(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32)
+            )
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            if dt > self.tcfg.straggler_factor * ema and step > start + 3:
+                self.on_straggler(step, dt)
+            self.history.append({"step": step, "loss": loss, "time": dt})
+            if (step + 1) % t.ckpt_every == 0 or step + 1 == t.steps:
+                ckpt.save_async(t.ckpt_dir, step + 1, (params, opt_state))
+        ckpt.wait_pending()
+        return {
+            "final_loss": self.history[-1]["loss"] if self.history else None,
+            "steps_run": len(self.history),
+            "history": self.history,
+        }

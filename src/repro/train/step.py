@@ -1,0 +1,160 @@
+"""jit'd step factories with explicit in/out shardings for the mesh.
+
+``make_train_step``: loss -> grads -> AdamW update, remat-on, donated
+buffers.  ``make_serve_step``: one decode step with a donated cache.
+``make_prefill_step``: the full-sequence trunk.  Each returns (fn, specs)
+so the dry-run can lower with ShapeDtypeStructs and the launcher can feed
+real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import sharding_rules as SR
+from repro.models.model import abstract_params, decode_step, forward_train, prefill
+from repro.optim.adamw import abstract_opt_state, adamw_update, cosine_lr
+
+
+def _named(mesh: Optional[Mesh], spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def make_train_step(
+    cfg, mesh: Optional[Mesh] = None, *,
+    batch_shape: Any = None,
+    base_lr: float = 3e-4, warmup: int = 100, total_steps: int = 10_000,
+    remat: bool = True, fsdp: bool = True, donate: bool = True,
+):
+    """Returns (train_step, specs) where specs hold the sharding trees.
+
+    train_step(params, opt_state, batch, step) -> (params, opt_state,
+    metrics)."""
+    params_shape = abstract_params(cfg)
+    opt_shape = abstract_opt_state(params_shape)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return forward_train(cfg, p, batch, remat=remat)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = cosine_lr(step, base_lr=base_lr, warmup=warmup, total=total_steps)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, lr=lr
+        )
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    specs = None
+    if mesh is not None:
+        pspec = SR.params_pspecs(params_shape, mesh, fsdp=fsdp)
+        ospec = _opt_specs(pspec)
+        bspec = SR.batch_pspecs(batch_shape, mesh) if batch_shape is not None else None
+        specs = dict(params=pspec, opt=ospec, batch=bspec)
+        fn = jax.jit(
+            train_step,
+            in_shardings=(
+                _named(mesh, pspec), _named(mesh, ospec),
+                _named(mesh, bspec), NamedSharding(mesh, P()),
+            ),
+            out_shardings=(
+                _named(mesh, pspec), _named(mesh, ospec),
+                NamedSharding(mesh, P()),
+            ),
+            donate_argnums=(0, 1) if donate else (),
+        )
+    else:
+        fn = jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+    return fn, specs
+
+
+def _opt_specs(param_specs):
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(
+        step=P(),
+        mu=jax.tree.map(lambda s: s, param_specs,
+                        is_leaf=lambda x: isinstance(x, P)),
+        nu=jax.tree.map(lambda s: s, param_specs,
+                        is_leaf=lambda x: isinstance(x, P)),
+    )
+
+
+def make_serve_step(cfg, mesh: Optional[Mesh] = None, *, cache_shape=None,
+                    donate: bool = True):
+    """decode: (params, token, cache, pos) -> (logits, cache)."""
+    params_shape = abstract_params(cfg)
+
+    def serve_step(params, token, cache, pos):
+        return decode_step(cfg, params, token, cache, pos)
+
+    if mesh is None:
+        return jax.jit(serve_step, donate_argnums=(2,) if donate else ()), None
+    pspec = SR.params_pspecs(params_shape, mesh, fsdp=True)
+    cspec = SR.cache_pspecs(cache_shape, mesh)
+    # batch-dim sharding only when divisible (long_500k has batch 1)
+    batch = jax.tree.leaves(cache_shape)[0].shape[1]
+    dp = _dp_axes_present(mesh)
+    import numpy as np
+
+    dp_size = int(np.prod([mesh.shape[a] for a in (dp or ())])) if dp else 1
+    bdp = dp if (dp and dp_size > 1 and batch % dp_size == 0) else None
+    logits_spec = P(bdp, None, None)
+    specs = dict(params=pspec, cache=cspec)
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(
+            _named(mesh, pspec),
+            NamedSharding(mesh, P(bdp, None)),
+            _named(mesh, cspec),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, logits_spec),
+            _named(mesh, cspec),
+        ),
+        donate_argnums=(2,) if donate else (),
+    )
+    return fn, specs
+
+
+def _dp_axes_present(mesh) -> Optional[tuple]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if axes else None
+
+
+def cache_shape_batch_dims(cache_shape):
+    leaf = jax.tree.leaves(cache_shape)[0]
+    return (leaf.shape[1], 1)
+
+
+def make_prefill_step(cfg, mesh: Optional[Mesh] = None, *, batch_shape=None,
+                      ctx: int = 0):
+    params_shape = abstract_params(cfg)
+
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, ctx)
+
+    if mesh is None:
+        return jax.jit(prefill_step), None
+    pspec = SR.params_pspecs(params_shape, mesh, fsdp=True)
+    bspec = SR.batch_pspecs(batch_shape, mesh)
+    logits_spec = P(_dp_axes_present(mesh), None, None)
+    fn = jax.jit(
+        prefill_step,
+        in_shardings=(_named(mesh, pspec), _named(mesh, bspec)),
+        out_shardings=(
+            NamedSharding(mesh, logits_spec),
+            None,
+        ),
+    )
+    return fn, dict(params=pspec, batch=bspec)

@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; multi-device tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand_keys(rng, size: int) -> np.ndarray:
+    """Unique random u64 keys in [0, 2^62)."""
+    ks = np.unique(rng.integers(0, 2**62, size=size * 2, dtype=np.uint64))
+    return ks[:size]
+
+
+@pytest.fixture
+def keys_10k(rng):
+    return np.sort(rand_keys(rng, 10_000))

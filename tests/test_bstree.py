@@ -1,0 +1,103 @@
+"""Vectorised JAX BS-tree vs dict model and vs the scalar oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bstree as B
+from repro.core.layout import split_u64
+from conftest import rand_keys
+
+
+@pytest.mark.parametrize("n", [8, 16, 128])
+def test_bulk_load_lookup(rng, n):
+    keys = np.sort(rand_keys(rng, 3000))
+    t = B.bulk_load(keys, n=n)
+    items = B.check_invariants(t)
+    assert [k for k, _ in items] == list(map(int, keys))
+    found, vals = B.lookup_u64(t, keys)
+    assert found.all()
+    np.testing.assert_array_equal(vals, np.arange(len(keys), dtype=np.uint32))
+    absent = rand_keys(rng, 500)
+    absent = absent[~np.isin(absent, keys)]
+    found, _ = B.lookup_u64(t, absent)
+    assert not found.any()
+
+
+def test_insert_delete_vs_model(rng, keys_10k):
+    t = B.bulk_load(keys_10k, n=16)
+    model = {int(k): i for i, k in enumerate(keys_10k)}
+    for it in range(4):
+        newk = rng.integers(0, 2**62, size=500, dtype=np.uint64)
+        newv = rng.integers(0, 2**31, size=500).astype(np.uint32)
+        t, stats = B.insert_batch(t, newk, newv)
+        for k, v in zip(newk.tolist(), newv.tolist()):
+            model[k] = v
+        delk = rng.choice(np.array(sorted(model), np.uint64), 200, replace=False)
+        t, nd = B.delete_batch(t, delk)
+        assert nd == len(set(delk.tolist()))
+        for k in delk.tolist():
+            model.pop(k)
+    items = B.check_invariants(t)
+    assert [k for k, _ in items] == sorted(model)
+    assert all(model[k] == v for k, v in items)
+
+
+def test_upsert_semantics(rng, keys_10k):
+    t = B.bulk_load(keys_10k, n=16)
+    sub = keys_10k[100:200]
+    newv = np.full(len(sub), 777, dtype=np.uint32)
+    t, stats = B.insert_batch(t, sub, newv)
+    assert stats["upserted"] == len(sub)
+    found, vals = B.lookup_u64(t, sub)
+    assert found.all() and (vals == 777).all()
+
+
+def test_range_scan_vs_model(rng, keys_10k):
+    t = B.bulk_load(keys_10k, n=16)
+    ks = list(map(int, keys_10k))
+    for _ in range(30):
+        i = int(rng.integers(0, len(ks) - 1))
+        j = min(len(ks) - 1, i + int(rng.integers(0, 300)))
+        k1h, k1l = split_u64(np.array([ks[i]], np.uint64))
+        k2h, k2l = split_u64(np.array([ks[j]], np.uint64))
+        vals, sel, trunc = B.range_scan(
+            t, jnp.asarray(k1h), jnp.asarray(k1l),
+            jnp.asarray(k2h), jnp.asarray(k2l), max_leaves=64,
+        )
+        assert not bool(trunc[0])
+        got = sorted(np.asarray(vals)[np.asarray(sel)].tolist())
+        assert got == list(range(i, j + 1))
+
+
+def test_sequential_keys_and_edge_positions(rng):
+    keys = np.arange(1, 2001, dtype=np.uint64) * 3
+    t = B.bulk_load(keys, n=16)
+    # insert below min, above max, and between every pair
+    t, _ = B.insert_batch(
+        t, np.array([0, 1, 2, 6001, 2**62], np.uint64),
+        np.arange(5, dtype=np.uint32))
+    items = B.check_invariants(t)
+    got = [k for k, _ in items]
+    assert got[0] == 0 and got[-1] == 2**62
+    found, _ = B.lookup_u64(t, np.array([0, 2, 6001, 2**62], np.uint64))
+    assert found.all()
+
+
+def test_empty_tree_inserts(rng):
+    t = B.bulk_load(np.zeros(0, np.uint64), n=16)
+    keys = rand_keys(rng, 300)
+    t, _ = B.insert_batch(t, keys, np.arange(len(keys), dtype=np.uint32))
+    found, _ = B.lookup_u64(t, keys)
+    assert found.all()
+    B.check_invariants(t)
+
+
+def test_kernel_lookup_path_equivalence(rng, keys_10k):
+    from repro.kernels import ops
+
+    t = B.bulk_load(keys_10k, n=16)
+    qs = np.concatenate([keys_10k[::5], rand_keys(rng, 1000)])
+    f1, v1 = ops.lookup_batch_kernel(t, qs)
+    f2, v2 = B.lookup_u64(t, qs)
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(v1, v2)

@@ -1,0 +1,99 @@
+"""CBS-tree: FOR compression, decision mechanism, mixed-tag updates."""
+import numpy as np
+import pytest
+
+from repro.core import compress as C
+from repro.data.keys import gen_keys
+from conftest import rand_keys
+
+
+def clustered_keys(rng, n_clusters=150, per=50, spread=40000):
+    base = np.sort(
+        rng.integers(0, 2**40, size=n_clusters, dtype=np.uint64)
+    ) * np.uint64(2**20)
+    keys = base[:, None] + rng.integers(
+        0, spread, size=(n_clusters, per), dtype=np.uint64)
+    return np.unique(keys.ravel())
+
+
+def test_decision_mechanism(rng):
+    assert C.decide(clustered_keys(rng), 16) is True
+    uniform = np.sort(rand_keys(rng, 20000))
+    assert C.decide(uniform, 16) is False
+
+
+def test_cbs_bulk_and_lookup(rng):
+    keys = clustered_keys(rng)
+    t = C.cbs_bulk_load(keys, n=16)
+    tags = set(np.asarray(t.leaf_tag)[: int(t.num_leaves)].tolist())
+    assert tags & {C.TAG_U16, C.TAG_U32}, "no compressed leaves produced"
+    np.testing.assert_array_equal(C.cbs_items(t), keys)
+    found, _, _ = C.cbs_lookup_u64(t, keys)
+    assert found.all()
+    absent = rand_keys(rng, 3000)
+    absent = absent[~np.isin(absent, keys)]
+    found, _, _ = C.cbs_lookup_u64(t, absent)
+    assert not found.any()
+
+
+def test_cbs_updates_vs_model(rng):
+    keys = clustered_keys(rng, n_clusters=80, per=40)
+    t = C.cbs_bulk_load(keys, n=16)
+    model = set(keys.tolist())
+    base = np.sort(np.asarray(list(model), np.uint64))
+    for it in range(3):
+        newk = np.unique(np.concatenate([
+            rng.choice(base, 120) + rng.integers(1, 900, 120).astype(np.uint64),
+            rand_keys(rng, 40),  # out-of-frame -> host rebuild path
+        ]))
+        t, stats = C.cbs_insert_batch(t, newk)
+        model |= set(newk.tolist())
+        delk = rng.choice(np.asarray(sorted(model), np.uint64), 100, replace=False)
+        t, nd = C.cbs_delete_batch(t, delk)
+        assert nd == len(set(delk.tolist()))
+        model -= set(delk.tolist())
+    assert C.cbs_items(t).tolist() == sorted(model)
+    found, _, _ = C.cbs_lookup_u64(t, np.asarray(sorted(model), np.uint64))
+    assert found.all()
+
+
+@pytest.mark.parametrize("dist,expect", [
+    ("books", "bs"), ("osm", "bs"), ("fb", "cbs"), ("genome", "cbs"),
+    ("planet", "cbs"),
+])
+def test_build_auto_on_paper_distributions(dist, expect):
+    # paper §8.2: the mechanism picks BS for BOOKS/OSM, CBS for the rest
+    keys = gen_keys(dist, 30000, seed=1)
+    kind, tree = C.build_auto(keys, n=128)
+    assert kind == expect, f"{dist}: decided {kind}, paper behaviour {expect}"
+
+
+def test_cbs_memory_smaller_on_compressible(rng):
+    from repro.core import bstree as B
+
+    keys = gen_keys("planet", 40000, seed=2)
+    bs = B.bulk_load(keys, n=128)
+    cbs = C.cbs_bulk_load(keys, n=128)
+    assert cbs.memory_bytes() < bs.memory_bytes() * 0.7, (
+        cbs.memory_bytes(), bs.memory_bytes())
+
+
+def test_cbs_range_scan_vs_model(rng):
+    import jax.numpy as jnp
+    from repro.core.layout import split_u64
+
+    keys = clustered_keys(rng, n_clusters=60, per=40)
+    t = C.cbs_bulk_load(keys, n=16)
+    ks = keys.tolist()
+    for _ in range(40):
+        i = int(rng.integers(0, len(ks) - 1))
+        j = min(len(ks) - 1, i + int(rng.integers(0, 400)))
+        k1h, k1l = split_u64(np.array([ks[i]], np.uint64))
+        k2h, k2l = split_u64(np.array([ks[j]], np.uint64))
+        leaves, r1s, r2s, trunc = C.cbs_range_scan(
+            t, jnp.asarray(k1h), jnp.asarray(k1l),
+            jnp.asarray(k2h), jnp.asarray(k2l), max_leaves=64)
+        assert not bool(trunc[0]), "unexpected truncation"
+        got = C.cbs_decode_spans(t, leaves[0], r1s[0], r2s[0])
+        want = ks[i : j + 1]
+        assert got == want, (i, j, len(got), len(want))

@@ -1,0 +1,120 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bstree as B, compress as C
+from repro.core.layout import split_u64
+from repro.kernels import ops, ref as kref
+from conftest import rand_keys
+
+
+@pytest.mark.parametrize("n", [8, 16, 128, 256])
+@pytest.mark.parametrize("b", [1, 7, 64, 300])
+@pytest.mark.parametrize("strict", [False, True])
+def test_succ_u64_sweep(rng, n, b, strict):
+    rows = np.sort(rng.integers(0, 2**63, size=(b, n), dtype=np.uint64), axis=1)
+    qs = rng.integers(0, 2**63, size=b, dtype=np.uint64)
+    rh, rl = split_u64(rows)
+    qh, ql = split_u64(qs)
+    args = (jnp.asarray(rh), jnp.asarray(rl), jnp.asarray(qh), jnp.asarray(ql))
+    got = ops.succ_ge(*args) if strict else ops.succ_gt(*args)
+    want = kref.succ_u64_ref(*args, strict=strict)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [64, 128])
+@pytest.mark.parametrize("strict", [False, True])
+def test_succ_u32_and_u16_sweep(rng, n, strict):
+    rows = np.sort(
+        rng.integers(0, 2**32, size=(40, n), dtype=np.uint64), axis=1
+    ).astype(np.uint32)
+    qs = rng.integers(0, 2**32, size=40, dtype=np.uint64).astype(np.uint32)
+    got = ops.succ_u32(jnp.asarray(rows), jnp.asarray(qs), strict=strict)
+    want = kref.succ_u32_ref(jnp.asarray(rows), jnp.asarray(qs), strict=strict)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    d16 = np.sort(rng.integers(0, 2**16, size=(40, n), dtype=np.uint32), axis=1)
+    words = d16[:, 0::2] | (d16[:, 1::2] << 16)
+    q16 = rng.integers(0, 2**16, size=40, dtype=np.uint64).astype(np.uint32)
+    got = ops.succ_u16_packed(jnp.asarray(words), jnp.asarray(q16), strict=strict)
+    want = kref.succ_u16_packed_ref(jnp.asarray(words), jnp.asarray(q16),
+                                    strict=strict)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_tree_search_kernel(rng, n):
+    keys = np.sort(rand_keys(rng, 8000))
+    t = B.bulk_load(keys, n=n)
+    qs = np.concatenate([keys[::11], rand_keys(rng, 500)])
+    qh, ql = split_u64(qs)
+    got = ops.tree_search(t, jnp.asarray(qh), jnp.asarray(ql))
+    want = kref.tree_search_ref(
+        t.root, t.inner_hi, t.inner_lo, t.inner_child,
+        jnp.asarray(qh), jnp.asarray(ql), height=t.height)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tree_search_height_zero(rng):
+    keys = np.sort(rand_keys(rng, 5))
+    t = B.bulk_load(keys, n=16)
+    assert t.height == 0
+    qh, ql = split_u64(keys)
+    got = ops.tree_search(t, jnp.asarray(qh), jnp.asarray(ql))
+    assert (np.asarray(got) == 0).all()
+
+
+@pytest.mark.parametrize("n", [8, 16, 128])
+def test_leaf_insert_delete_kernels(rng, n):
+    keys = np.sort(rand_keys(rng, 2000))
+    t = B.bulk_load(keys, n=n)
+    h = B.to_host(t)
+    L = int(t.num_leaves)
+    rows = h["leaf_keys"][:L]
+    vals = h["leaf_vals"][:L]
+    hi, lo = split_u64(rows)
+    ink = rng.integers(0, 2**62, size=L, dtype=np.uint64)
+    ink[::5] = rows[::5, min(3, n - 1)]  # hit existing/gap-duplicated keys
+    inv = rng.integers(0, 2**31, size=L).astype(np.uint32)
+    kh, kl = split_u64(ink)
+    args = (jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals),
+            jnp.asarray(kh), jnp.asarray(kl), jnp.asarray(inv))
+    got = ops.leaf_upsert_rows(*args)
+    want = kref.leaf_insert_ref(*args)
+    for g, w, name in zip(got, want, ("hi", "lo", "val", "status")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+    delk = rows[:, min(5, n - 1)].copy()
+    delk[::3] = rng.integers(0, 2**62, size=len(delk[::3]), dtype=np.uint64)
+    kh, kl = split_u64(delk)
+    args = (jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals),
+            jnp.asarray(kh), jnp.asarray(kl))
+    got = ops.leaf_delete_rows(*args)
+    want = kref.leaf_delete_ref(*args)
+    for g, w, name in zip(got, want, ("hi", "lo", "val", "found")):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w).astype(np.asarray(g).dtype),
+            err_msg=name)
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_for_block_kernel(rng, n):
+    base = np.sort(rng.integers(0, 2**40, size=120, dtype=np.uint64)) \
+        * np.uint64(2**20)
+    keys = np.unique(
+        (base[:, None] + rng.integers(0, 60000, size=(120, 50),
+                                      dtype=np.uint64)).ravel())
+    t = C.cbs_bulk_load(keys, n=n)
+    qs = np.concatenate([keys[::7], rand_keys(rng, 1500)])
+    qh, ql = split_u64(qs)
+    qh, ql = jnp.asarray(qh), jnp.asarray(ql)
+    fnd, leaf, _ = C.cbs_lookup_batch(t, qh, ql)
+    words = t.leaf_words[leaf]
+    tag = t.leaf_tag[leaf]
+    k0h, k0l = t.leaf_k0_hi[leaf], t.leaf_k0_lo[leaf]
+    kr, km = ops.for_block_search(words, tag, k0h, k0l, qh, ql, strict=True)
+    rr, rm = kref.for_block_search_ref(words, tag, k0h, k0l, qh, ql, strict=True)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(fnd))

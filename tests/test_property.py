@@ -1,0 +1,83 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bstree as B
+from repro.core.compress import cbs_bulk_load, cbs_items, decide
+from repro.core.layout import MAXKEY
+from repro.core.reference import ReferenceBSTree
+
+KEY = st.integers(min_value=0, max_value=2**64 - 2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(KEY, min_size=0, max_size=200, unique=True))
+def test_bulk_load_preserves_items(keys):
+    keys = np.sort(np.asarray(keys, dtype=np.uint64))
+    t = B.bulk_load(keys, n=8)
+    items = B.check_invariants(t)
+    assert [k for k, _ in items] == list(map(int, keys))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(KEY, min_size=1, max_size=120, unique=True),
+    st.lists(st.tuples(st.booleans(), KEY), min_size=0, max_size=120),
+)
+def test_reference_tree_equals_dict_model(initial, ops):
+    keys = np.sort(np.asarray(initial, dtype=np.uint64))
+    t = ReferenceBSTree.bulk_load(keys, n=8)
+    model = {int(k): i for i, k in enumerate(keys)}
+    for i, (is_insert, k) in enumerate(ops):
+        if is_insert:
+            t.insert(k, i % 2**31)
+            model[k] = i % 2**31
+        else:
+            assert t.delete(k) == (k in model)
+            model.pop(k, None)
+    t.check_invariants()
+    items = t.items()
+    assert [k for k, _ in items] == sorted(model)
+    assert all(model[k] == v for k, v in items)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(KEY, min_size=1, max_size=150, unique=True),
+    st.lists(KEY, min_size=1, max_size=50, unique=True),
+)
+def test_batched_equals_reference(initial, updates):
+    keys = np.sort(np.asarray(initial, dtype=np.uint64))
+    tj = B.bulk_load(keys, n=8)
+    tr = ReferenceBSTree.bulk_load(keys, n=8)
+    upd = np.asarray(updates, dtype=np.uint64)
+    vals = (upd % np.uint64(2**31)).astype(np.uint32)
+    tj, _ = B.insert_batch(tj, upd, vals)
+    for k, v in zip(upd.tolist(), vals.tolist()):
+        tr.insert(k, v)
+    items_j = B.check_invariants(tj)
+    items_r = tr.items()
+    assert items_j == items_r
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(KEY, min_size=2, max_size=400, unique=True))
+def test_cbs_roundtrip(keys):
+    keys = np.sort(np.asarray(keys, dtype=np.uint64))
+    t = cbs_bulk_load(keys, n=8)
+    got = cbs_items(t)
+    assert got.tolist() == keys.tolist()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(KEY, min_size=5, max_size=100, unique=True),
+    st.integers(min_value=0, max_value=2**64 - 2),
+)
+def test_lookup_found_iff_member(keys, probe):
+    keys = np.sort(np.asarray(keys, dtype=np.uint64))
+    t = B.bulk_load(keys, n=8)
+    found, val = B.lookup_u64(t, np.asarray([probe], np.uint64))
+    assert bool(found[0]) == (probe in set(keys.tolist()))
+    if found[0]:
+        assert val[0] == int(np.searchsorted(keys, probe))

@@ -1,0 +1,85 @@
+"""The scalar oracle (paper Algorithms 3-6) vs a dict model."""
+import numpy as np
+import pytest
+
+from repro.core.reference import ReferenceBSTree
+from conftest import rand_keys
+
+
+def test_bulk_load_and_lookup(rng):
+    keys = np.sort(rand_keys(rng, 1500))
+    t = ReferenceBSTree.bulk_load(keys, n=16)
+    t.check_invariants()
+    for k in keys[::37]:
+        assert t.lookup(k) is not None
+    absent = rand_keys(rng, 300)
+    absent = absent[~np.isin(absent, keys)]
+    for k in absent[:100]:
+        assert t.lookup(k) is None
+
+
+def test_mixed_ops_vs_model(rng):
+    keys = np.sort(rand_keys(rng, 800))
+    t = ReferenceBSTree.bulk_load(keys, n=16)
+    model = {int(k): i for i, k in enumerate(keys)}
+    for step in range(1500):
+        op = rng.integers(0, 3)
+        if op == 0:
+            k = int(rng.integers(0, 2**62))
+            v = int(rng.integers(0, 2**31))
+            t.insert(k, v)
+            model[k] = v
+        elif op == 1 and model:
+            k = list(model)[int(rng.integers(0, len(model)))]
+            assert t.delete(k)
+            del model[k]
+        else:
+            k = int(rng.integers(0, 2**62))
+            got, want = t.lookup(k), model.get(k)
+            assert (got is None) == (want is None)
+            assert got is None or got == want
+    t.check_invariants()
+    items = t.items()
+    assert [k for k, _ in items] == sorted(model)
+    assert all(model[k] == v for k, v in items)
+
+
+def test_range_queries_vs_model(rng):
+    keys = np.sort(rand_keys(rng, 600))
+    t = ReferenceBSTree.bulk_load(keys, n=8)
+    model = {int(k): i for i, k in enumerate(keys)}
+    # deletions create gaps + empty-ish leaves, stressing the chain scan
+    for k in keys[::3]:
+        t.delete(k)
+        del model[int(k)]
+    ks = sorted(model)
+    for _ in range(100):
+        i, j = sorted(rng.integers(0, len(ks), size=2))
+        got = sorted(t.range_query(ks[i], ks[j]))
+        want = sorted(model[k] for k in ks[i : j + 1])
+        assert got == want
+
+
+def test_small_node_deep_tree_with_inner_splits(rng):
+    t = ReferenceBSTree.bulk_load(np.sort(rand_keys(rng, 40)), n=8)
+    model = {int(k): t.lookup(int(k)) for k in t.leaf_keys.ravel()
+             if int(k) != 2**64 - 1}
+    for step in range(2500):
+        k = int(rng.integers(0, 500))
+        if rng.integers(0, 2) == 0:
+            t.insert(k, step)
+            model[k] = step
+        elif t.delete(k):
+            del model[k]
+    t.check_invariants()
+    assert sorted(model) == [k for k, _ in t.items()]
+    assert t.height >= 2  # splits must have propagated upward
+
+
+def test_duplicate_insert_is_upsert(rng):
+    keys = np.sort(rand_keys(rng, 100))
+    t = ReferenceBSTree.bulk_load(keys, n=16)
+    k = int(keys[50])
+    t.insert(k, 4242)
+    assert t.lookup(k) == 4242
+    t.check_invariants()

@@ -1,0 +1,105 @@
+"""Serving: engine lifecycle, request index (BS-tree), paged KV, top-p."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import init_lm
+from repro.serve.engine import EngineConfig, ServeEngine, top_p_sample
+from repro.serve.kv_cache import PagedKVCache, device_page_lookup
+from repro.serve.request_index import RequestIndex
+
+
+def test_request_index_lifecycle(rng):
+    idx = RequestIndex()
+    ids = rng.integers(1, 2**62, size=200, dtype=np.uint64)
+    ids = np.unique(ids)
+    slots = np.arange(len(ids), dtype=np.uint32)
+    idx.admit(ids, slots)
+    found, got = idx.lookup(ids)
+    assert found.all()
+    np.testing.assert_array_equal(got, slots)
+    assert idx.complete(ids[:50]) == 50
+    found, _ = idx.lookup(ids[:50])
+    assert not found.any()
+    found, _ = idx.lookup(ids[50:])
+    assert found.all()
+    assert len(idx) == len(ids) - 50
+
+
+def test_request_index_snapshot_isolation(rng):
+    idx = RequestIndex()
+    ids = np.unique(rng.integers(1, 2**62, size=64, dtype=np.uint64))
+    idx.admit(ids, np.arange(len(ids), dtype=np.uint32))
+    with idx.idx.snapshot() as snap:
+        before = snap.version
+        idx.complete(ids[:10])  # concurrent writer
+        # the pinned snapshot still sees all keys
+        from repro.core import bstree as B
+
+        found, _ = B.lookup_u64(snap.value, ids)
+        assert found.all()
+    assert idx.idx.version == before + 1
+
+
+def test_paged_kv_alloc_release():
+    pk = PagedKVCache(num_pages=16, page_size=4)
+    pk.admit(1)
+    pk.admit(2)
+    pk.extend_to(1, 10)  # 3 pages
+    pk.extend_to(2, 5)  # 2 pages
+    assert pk.utilization() == pytest.approx(5 / 16)
+    pages, offs = pk.gather_indices(1, np.array([0, 5, 9]))
+    assert len(set(pk.tables[1])) == 3
+    np.testing.assert_array_equal(offs, [0, 1, 1])
+    assert pk.release(1) == 3
+    assert pk.utilization() == pytest.approx(2 / 16)
+    # released pages are reused
+    pk.admit(3)
+    pk.extend_to(3, 40)
+    assert pk.utilization() == pytest.approx(12 / 16)
+
+
+def test_device_page_lookup():
+    pk = PagedKVCache(num_pages=8, page_size=2)
+    for sid in (1, 2):
+        pk.admit(sid)
+        pk.extend_to(sid, 4)
+    hi, lo, vals = pk.flat_table()
+    got = device_page_lookup(
+        jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals),
+        jnp.asarray(np.array([1, 1, 2, 3], np.int32)),
+        jnp.asarray(np.array([0, 1, 1, 0], np.int32)),
+    )
+    got = np.asarray(got)
+    assert got[0] == pk.tables[1][0]
+    assert got[1] == pk.tables[1][1]
+    assert got[2] == pk.tables[2][1]
+    assert got[3] == -1  # unknown sequence
+
+
+def test_engine_end_to_end():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    params = init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, EngineConfig(slots=4, ctx=32, page_size=4))
+    assert eng.admit(1001, prompt_token=5)
+    assert eng.admit(1002, prompt_token=7)
+    for _ in range(6):
+        stats = eng.step()
+    assert stats["active"] == 2 and stats["index_size"] == 2
+    out = eng.complete(1001)
+    assert len(out) == 6 and all(0 <= t < cfg.vocab for t in out)
+    assert eng.step()["active"] == 1
+    out2 = eng.complete(1002)
+    assert len(out2) == 7
+    assert eng.pages.utilization() == 0.0
+
+
+def test_top_p_sampling_cutoff():
+    logits = jnp.asarray(np.log(np.array([[0.5, 0.3, 0.15, 0.05]])))
+    # p=0.6: nucleus = {0, 1}; 1000 draws must only hit those
+    draws = [int(top_p_sample(jax.random.key(i), logits, 0.6)[0])
+             for i in range(50)]
+    assert set(draws) <= {0, 1}
+    assert len(set(draws)) == 2

@@ -1,0 +1,61 @@
+"""succ operators == searchsorted, across dtypes and widths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import succ as S
+from repro.core.layout import split_u64, join_u64, used_mask, slot_use, MAXKEY
+
+
+@pytest.mark.parametrize("n", [8, 16, 64, 128])
+def test_succ_u64_matches_searchsorted(rng, n):
+    rows = np.sort(rng.integers(0, 2**63, size=(50, n), dtype=np.uint64), axis=1)
+    qs = rng.integers(0, 2**63, size=50, dtype=np.uint64)
+    rh, rl = split_u64(rows)
+    qh, ql = split_u64(qs)
+    gt = np.asarray(S.succ_gt(jnp.asarray(rh), jnp.asarray(rl),
+                              jnp.asarray(qh), jnp.asarray(ql)))
+    ge = np.asarray(S.succ_ge(jnp.asarray(rh), jnp.asarray(rl),
+                              jnp.asarray(qh), jnp.asarray(ql)))
+    for i in range(50):
+        assert gt[i] == np.searchsorted(rows[i], qs[i], side="right")
+        assert ge[i] == np.searchsorted(rows[i], qs[i], side="left")
+
+
+def test_succ_plane_and_aliases(rng):
+    row = np.sort(rng.integers(0, 2**31, size=64, dtype=np.uint64)).astype(np.uint32)
+    qs = rng.integers(0, 2**31, size=33, dtype=np.uint64).astype(np.uint32)
+    left = np.asarray(S.searchsorted_left(jnp.asarray(row), jnp.asarray(qs)))
+    right = np.asarray(S.searchsorted_right(jnp.asarray(row), jnp.asarray(qs)))
+    np.testing.assert_array_equal(left, np.searchsorted(row, qs, side="left"))
+    np.testing.assert_array_equal(right, np.searchsorted(row, qs, side="right"))
+
+
+def test_unsigned_order_at_sign_boundary():
+    # values straddling 2^31 and 2^63 must order as unsigned
+    row = np.array([1, 2**31, 2**31 + 5, 2**63, 2**64 - 2], dtype=np.uint64)
+    rows = np.tile(row, (3, 1))
+    qs = np.array([2**31, 2**63, 2**64 - 2], dtype=np.uint64)
+    rh, rl = split_u64(rows)
+    qh, ql = split_u64(qs)
+    gt = np.asarray(S.succ_gt(jnp.asarray(rh), jnp.asarray(rl),
+                              jnp.asarray(qh), jnp.asarray(ql)))
+    for i, q in enumerate(qs):
+        assert gt[i] == np.searchsorted(row, q, side="right")
+
+
+def test_used_mask_derivation(rng):
+    # row with gaps: gaps duplicate the next used key; trailing MAXKEY
+    row = np.array([5, 9, 9, 9, 17, 23, 23, MAXKEY], dtype=np.uint64)
+    hi, lo = split_u64(row[None])
+    used = np.asarray(used_mask(jnp.asarray(hi), jnp.asarray(lo)))[0]
+    np.testing.assert_array_equal(
+        used, [True, False, False, True, True, False, True, False]
+    )
+    assert int(slot_use(jnp.asarray(hi), jnp.asarray(lo))[0]) == 4
+
+
+def test_split_join_roundtrip(rng):
+    ks = rng.integers(0, 2**64 - 1, size=1000, dtype=np.uint64)
+    hi, lo = split_u64(ks)
+    np.testing.assert_array_equal(join_u64(hi, lo), ks)

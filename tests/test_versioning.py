@@ -1,0 +1,56 @@
+"""MVCC versioning semantics (OLC adaptation, paper §7)."""
+import threading
+
+import pytest
+
+from repro.core.versioning import VersionedIndex
+
+
+def test_snapshot_pins_value():
+    idx = VersionedIndex({"x": 1})
+    with idx.snapshot() as s:
+        idx.update(lambda v: {"x": v["x"] + 1})
+        assert s.value == {"x": 1}
+    assert idx.version == 1
+    with idx.snapshot() as s2:
+        assert s2.value == {"x": 2}
+
+
+def test_optimistic_commit_conflict():
+    idx = VersionedIndex(0)
+    base, _ = idx.pin()
+    idx.unpin(base)
+    assert idx.commit(base, 10)
+    # stale base must be rejected
+    assert not idx.commit(base, 99)
+    assert idx.version == 1
+
+
+def test_update_rebases_on_conflict():
+    idx = VersionedIndex(0)
+    calls = []
+
+    def bump(v):
+        calls.append(v)
+        if len(calls) == 1:
+            # concurrent commit sneaks in during the first attempt
+            idx.commit(idx.version, 100)
+        return v + 1
+
+    version, value = idx.update(bump)
+    assert value == 101  # rebased on the concurrent value
+    assert len(calls) == 2
+
+
+def test_concurrent_updates_all_applied():
+    idx = VersionedIndex(0)
+    threads = [
+        threading.Thread(target=lambda: idx.update(lambda v: v + 1))
+        for _ in range(16)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    with idx.snapshot() as s:
+        assert s.value == 16
