@@ -60,13 +60,15 @@ def main() -> None:
         t0 = time.perf_counter()
         t2, stats = B.insert_batch(tree, fresh[:OPS], newv)
         dt = (time.perf_counter() - t0) * 1e6
-        row(f"wlB/bs/{dist}", dt, f"{OPS/dt:.2f}Mops_def{stats['deferred']}")
+        row(f"wlB/bs/{dist}", dt,
+            f"{OPS/dt:.2f}Mops_def{stats['deferred']}_r{stats['rounds']}")
         t0 = time.perf_counter()
         cbs_ops = OPS // 5  # CBS full-leaf rebuilds amortise poorly on CPU
         c2, cstats = cbs_insert_batch(ctree, fresh[:cbs_ops])
         dt = (time.perf_counter() - t0) * 1e6
         row(f"wlB/cbs/{dist}", dt,
-            f"{cbs_ops/dt:.2f}Mops_def{cstats['deferred']}_n{cbs_ops}")
+            f"{cbs_ops/dt:.2f}Mops_def{cstats['deferred']}"
+            f"_r{cstats['rounds']}_n{cbs_ops}")
 
         # Workload C: 50/50 read-write
         half = OPS // 2

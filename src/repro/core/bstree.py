@@ -24,6 +24,12 @@ Execution model (the TPU adaptation of the paper — DESIGN.md §2):
   (Algorithm 5) is ``new[i] = next_key  where keys[i] == k`` — the dup-run
   of ``k`` is contiguous by the gap invariant.
 
+* **Segmented multi-key batch updates**: a sorted batch groups by
+  destination leaf into contiguous segments; ONE device dispatch merges
+  every leaf's whole segment into its gapped row (see
+  :func:`segmented_rows_upsert`) — the write-path analogue of the fused
+  level-synchronous read path, with zero per-round host syncs.
+
 * **Functional updates + host maintenance**: in-node updates run on device
   (jit); node splits are rare, amortised events handled by a host-side
   maintenance pass that reuses the scalar oracle's row helpers
@@ -55,7 +61,7 @@ from .layout import (
     spread_positions,
     used_mask,
 )
-from .succ import succ_ge, succ_gt
+from .succ import cmp_ge_u64, succ_ge, succ_gt
 
 __all__ = [
     "bulk_load",
@@ -71,6 +77,8 @@ __all__ = [
     "check_invariants",
     "row_upsert",
     "row_delete",
+    "segmented_rows_upsert",
+    "segmented_rows_delete",
 ]
 
 
@@ -342,19 +350,19 @@ def range_scan(
 @jax.jit
 def count_range(tree: BSTreeArrays, k1_hi, k1_lo, k2_hi, k2_lo):
     """Paper §3.3 alternative for large ranges: two equality-style descents
-    give the number of used keys in [k1, k2] without scanning leaves.
+    locate both range endpoints without scanning the leaf chain.
 
-    Counting positions needs a per-leaf prefix of used slots; we compute
-    used counts on the fly from the gathered rows (O(height) work).
+    Returns ``(leaf1, lo_rank, leaf2, hi_rank)``: the leaf id and leaf-local
+    rank (count of used slots before the endpoint) for each boundary —
+    ``lo_rank`` counts used keys < k1 in ``leaf1``, ``hi_rank`` counts used
+    keys <= k2 in ``leaf2``.  A *global* count would need per-subtree or
+    leaf-prefix sums, which the arrays do not store; when both endpoints
+    land in the same leaf, ``hi_rank - lo_rank`` is the exact count of keys
+    in ``[k1, k2]``.
     """
-    # count keys < k1 and keys <= k2 by descending and summing used slots
     def rank(q_hi, q_lo, inclusive):
         b = q_hi.shape[0]
         node = jnp.full((b,), tree.root, dtype=jnp.int32)
-        total = jnp.zeros((b,), jnp.int64)
-        # Without per-subtree counts a positional rank needs leaf-prefix
-        # sums; we return leaf-local rank + leaf id instead (sufficient for
-        # the workload benchmarks).  Kept simple deliberately.
         for _ in range(tree.height):
             rows_hi = tree.inner_hi[node]
             rows_lo = tree.inner_lo[node]
@@ -446,57 +454,233 @@ def row_delete(keys_hi, keys_lo, vals, k_hi, k_lo):
 
 
 # ---------------------------------------------------------------------------
-# Batched updates: jit rounds + host split maintenance
+# Segmented multi-key batch updates: one merge dispatch + host split pass
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def _insert_round(tree: BSTreeArrays, k_hi, k_lo, v, leaf, active):
-    """One round: apply the first still-active key of each distinct leaf.
-
-    Returns (tree', active', deferred') — deferred keys hit full rows and
-    need the host split pass.  Keys must be sorted (leaf ids then follow
-    non-decreasing order, so segment-firsts are a neighbour test).
-    """
-    # select the first still-active key of each leaf run (keys are sorted,
-    # so equal-leaf keys are contiguous): segmented min of active positions.
-    pos = jnp.arange(leaf.shape[0], dtype=jnp.int32)
-    seg_start = jnp.concatenate([jnp.zeros((1,), bool), leaf[1:] != leaf[:-1]])
-    seg_id = jnp.cumsum(seg_start.astype(jnp.int32))
-    first_act = jax.ops.segment_max(
-        jnp.where(active, -pos, -(leaf.shape[0] + 1)), seg_id,
-        num_segments=leaf.shape[0] + 1, indices_are_sorted=True,
+def _segment_meta(leaf):
+    """Segment bookkeeping for a sorted batch: keys of one leaf form a
+    contiguous run.  Returns (seg_first (B,) bool, run_start (B,) int32,
+    seg_id (B,) int32)."""
+    b = leaf.shape[0]
+    pos = jnp.arange(b, dtype=jnp.int32)
+    seg_first = jnp.concatenate(
+        [jnp.ones((1,), bool), leaf[1:] != leaf[:-1]]
     )
-    sel = active & (pos == -first_act[seg_id])
+    run_start = jax.lax.cummax(jnp.where(seg_first, pos, 0))
+    seg_id = jnp.cumsum(seg_first.astype(jnp.int32)) - 1
+    return seg_first, run_start, seg_id
 
+
+def _row_searchsorted(a, q):
+    """Per-row searchsorted-left: first column i with ``a[row, i] >= q``.
+    ``a`` (B, N) row-wise sorted, ``q`` (B, N) queries.  Unrolled binary
+    search — log2(N) gathers, no scatters (scatter is the slow op on every
+    backend; gathers are near-free)."""
+    n = a.shape[1]
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, n, jnp.int32)
+    # interval [lo, hi] shrinks from size n; n.bit_length() halvings reach 0
+    for _ in range(max(1, n.bit_length())):
+        mid = (lo + hi) // 2
+        amid = jnp.take_along_axis(a, jnp.clip(mid, 0, n - 1), axis=1)
+        go_right = amid < q
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    return hi
+
+
+def segmented_rows_upsert(rows_hi, rows_lo, rows_val, k_hi, k_lo, v, leaf,
+                          active):
+    """Merge every segment's keys into its gapped row in ONE vectorized pass.
+
+    Generalizes :func:`row_upsert` from one key to a whole sorted key
+    segment per row: with ``r`` = used-rank of a key in its row and ``j`` =
+    its rank among the segment's new keys, the merged rank is ``r + j``;
+    surviving row keys fill the remaining merged ranks in order.  The new
+    gapped layout then falls out of pure gathers — slot ``i`` takes merged
+    rank ``t = ceil(i * c' / n)`` (``c'`` = merged key count), which
+    re-spreads gaps evenly AND reproduces the gap-duplication invariant by
+    construction (a gap slot gathers exactly the first subsequent used
+    key).  Rank ``t`` resolves to its source without any (B, N) scatter:
+    with ``q`` = number of new-key ranks <= t (cumsum of a B-sized rank
+    occupancy), rank ``t`` is either the segment's q-th new key or the
+    row's (t - q)-th used key, the latter located by a per-row binary
+    search over the used-slot prefix sums.
+
+    Rows whose segment exceeds their free gaps (``c' > n``) are left
+    untouched and flagged for the caller's split pass — the whole segment
+    is deferred, matching the one-key formula's overflow status.
+
+    Inputs are flat per batch element: ``rows_*`` (B, N) are the gathered
+    destination rows (elements of one segment share a row), ``k/v`` (B,)
+    the sorted unique batch, ``leaf`` (B,) the destination ids (contiguous
+    per segment), ``active`` (B,) which elements participate.
+
+    Returns (new_hi, new_lo, new_val, write (B,), merged_new (B,),
+    upserted (B,), overflow (B,)): ``write`` marks segment-first rows whose
+    merged row should be scattered back; ``overflow`` marks elements whose
+    whole segment was deferred.
+    """
+    b, n = rows_hi.shape
+    iota = jnp.arange(n, dtype=jnp.int32)[None, :]
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    seg_first, run_start, seg_id = _segment_meta(leaf)
+
+    used = used_mask(rows_hi, rows_lo)
+    c = jnp.sum(used.astype(jnp.int32), axis=1)
+
+    # per element: membership and used-rank r = |{used row keys < k}|
+    # (gap copies alias used keys, so an equality hit implies membership)
+    run = (rows_hi == k_hi[:, None]) & (rows_lo == k_lo[:, None])
+    exists = jnp.any(run, axis=1)
+    lt = ~cmp_ge_u64(rows_hi, rows_lo, k_hi[:, None], k_lo[:, None])
+    r = jnp.sum((used & lt).astype(jnp.int32), axis=1)
+
+    # per segment: j = rank among the segment's new keys (exclusive prefix)
+    new = active & ~exists
+    ne = new.astype(jnp.int32)
+    excl = jnp.cumsum(ne) - ne
+    j = excl - excl[run_start]
+    num_new = jax.ops.segment_sum(
+        ne, seg_id, num_segments=b, indices_are_sorted=True
+    )[seg_id]
+    cprime = c + num_new
+    overflow = active & (cprime > n)
+
+    ok = active & (cprime <= n)
+    merged_new = ok & ~exists
+    upserted = ok & exists
+    out_rank = r + j
+
+    wf = jax.ops.segment_max(
+        ok.astype(jnp.int32), seg_id, num_segments=b, indices_are_sorted=True
+    )
+    write = seg_first & (wf[seg_id] > 0)
+
+    # the only scatters are B-sized (one element per batch key), written
+    # into the segment-first row of each (B, n) side table:
+    #   occ_new[row, t] = 1   iff merged rank t is taken by a new key
+    #   newpos[row, q]  = batch index of the segment's q-th new key
+    #   upsidx[row, t]  = batch index of the upsert targeting rank t
+    occ_new = jnp.zeros((b, n), jnp.int32).at[
+        jnp.where(merged_new, run_start, b), out_rank].set(1, mode="drop")
+    newpos = jnp.zeros((b, n), jnp.int32).at[
+        jnp.where(merged_new, run_start, b), jnp.clip(j, 0, n - 1)
+    ].set(bidx, mode="drop")
+    upsidx = jnp.full((b, n), -1, jnp.int32).at[
+        jnp.where(upserted, run_start, b), out_rank].set(bidx, mode="drop")
+
+    # gapped re-spread, all gathers: slot i <- merged rank ceil(i * c' / n)
+    t_i = (iota * cprime[:, None] + (n - 1)) // n
+    in_row = t_i < cprime[:, None]
+    tc = jnp.clip(t_i, 0, n - 1)
+    q = jnp.take_along_axis(jnp.cumsum(occ_new, axis=1), tc, axis=1)
+    is_new = jnp.take_along_axis(occ_new, tc, axis=1) == 1
+    src_new = jnp.take_along_axis(newpos, jnp.clip(q - 1, 0, n - 1), axis=1)
+    used_inc = jnp.cumsum(used.astype(jnp.int32), axis=1)
+    src_row = jnp.clip(
+        _row_searchsorted(used_inc, jnp.clip(tc - q, 0, n - 1) + 1), 0, n - 1
+    )
+    ups = jnp.take_along_axis(upsidx, tc, axis=1)
+
+    new_hi = jnp.where(
+        in_row,
+        jnp.where(is_new, k_hi[src_new],
+                  jnp.take_along_axis(rows_hi, src_row, axis=1)),
+        MAXKEY_HI,
+    )
+    new_lo = jnp.where(
+        in_row,
+        jnp.where(is_new, k_lo[src_new],
+                  jnp.take_along_axis(rows_lo, src_row, axis=1)),
+        MAXKEY_LO,
+    )
+    vals = jnp.where(is_new, v[src_new],
+                     jnp.take_along_axis(rows_val, src_row, axis=1))
+    vals = jnp.where(ups >= 0, v[jnp.clip(ups, 0, b - 1)], vals)
+    new_v = jnp.where(in_row, vals, 0).astype(rows_val.dtype)
+    return new_hi, new_lo, new_v, write, merged_new, upserted, overflow
+
+
+def segmented_rows_delete(rows_hi, rows_lo, rows_val, k_hi, k_lo, leaf,
+                          active):
+    """Delete every segment's keys from its row in ONE vectorized pass.
+
+    Same shape contract as :func:`segmented_rows_upsert`.  The surviving
+    used keys are re-spread through the gapped-layout gather (slot i takes
+    the ceil(i*c'/n)-th kept key, located by a per-row binary search — no
+    scatters at all), so deletion never leaves a row needing further
+    rounds.  Returns (new_hi, new_lo, new_val, write (B,), found (B,))."""
+    b, n = rows_hi.shape
+    iota = jnp.arange(n, dtype=jnp.int32)[None, :]
+    seg_first, _, seg_id = _segment_meta(leaf)
+
+    used = used_mask(rows_hi, rows_lo)
+    run = (rows_hi == k_hi[:, None]) & (rows_lo == k_lo[:, None])
+    found = active & jnp.any(run, axis=1)
+
+    # segment-OR of per-element hit masks -> slots to drop from each row
+    hit = (run & used & found[:, None]).astype(jnp.int32)
+    drop = jax.ops.segment_max(
+        hit, seg_id, num_segments=b, indices_are_sorted=True
+    )[seg_id] > 0
+    keep = used & ~drop
+    cprime = jnp.sum(keep.astype(jnp.int32), axis=1)
+
+    wf = jax.ops.segment_max(
+        found.astype(jnp.int32), seg_id, num_segments=b,
+        indices_are_sorted=True,
+    )
+    write = seg_first & (wf[seg_id] > 0)
+
+    # slot i <- the ceil(i*c'/n)-th kept key of the row
+    t_i = (iota * cprime[:, None] + (n - 1)) // n
+    in_row = t_i < cprime[:, None]
+    keep_inc = jnp.cumsum(keep.astype(jnp.int32), axis=1)
+    src = jnp.clip(
+        _row_searchsorted(keep_inc, jnp.clip(t_i, 0, n - 1) + 1), 0, n - 1
+    )
+    new_hi = jnp.where(in_row, jnp.take_along_axis(rows_hi, src, axis=1),
+                       MAXKEY_HI)
+    new_lo = jnp.where(in_row, jnp.take_along_axis(rows_lo, src, axis=1),
+                       MAXKEY_LO)
+    new_v = jnp.where(in_row, jnp.take_along_axis(rows_val, src, axis=1),
+                      0).astype(rows_val.dtype)
+    return new_hi, new_lo, new_v, write, found
+
+
+@jax.jit
+def _insert_merge(tree: BSTreeArrays, k_hi, k_lo, v, leaf):
+    """One device dispatch: merge the whole batch into its leaves."""
     rows_hi = tree.leaf_hi[leaf]
     rows_lo = tree.leaf_lo[leaf]
     rows_v = tree.leaf_val[leaf]
-    new_hi, new_lo, new_v, status = jax.vmap(row_upsert)(
-        rows_hi, rows_lo, rows_v, k_hi, k_lo, v
+    active = jnp.ones(k_hi.shape, bool)
+    new_hi, new_lo, new_v, write, merged_new, upserted, overflow = (
+        segmented_rows_upsert(
+            rows_hi, rows_lo, rows_v, k_hi, k_lo, v, leaf, active
+        )
     )
-    applied = sel & (status != 2)
-    deferred = sel & (status == 2)
-    # scatter rows of applied/deferred-selected keys; non-selected dropped
-    tgt = jnp.where(sel & (status != 2), leaf, tree.leaf_hi.shape[0] + 1)
-    t = tree
+    tgt = jnp.where(write, leaf, tree.leaf_hi.shape[0] + 1)
     t = dataclasses.replace(
-        t,
-        leaf_hi=t.leaf_hi.at[tgt].set(new_hi, mode="drop"),
-        leaf_lo=t.leaf_lo.at[tgt].set(new_lo, mode="drop"),
-        leaf_val=t.leaf_val.at[tgt].set(new_v, mode="drop"),
+        tree,
+        leaf_hi=tree.leaf_hi.at[tgt].set(new_hi, mode="drop"),
+        leaf_lo=tree.leaf_lo.at[tgt].set(new_lo, mode="drop"),
+        leaf_val=tree.leaf_val.at[tgt].set(new_v, mode="drop"),
     )
-    active = active & ~applied & ~deferred
-    n_inserted = jnp.sum((applied & (status == 0)).astype(jnp.int32))
-    n_upserted = jnp.sum((applied & (status == 1)).astype(jnp.int32))
-    return t, active, deferred, n_inserted, n_upserted
+    n_ins = jnp.sum(merged_new.astype(jnp.int32))
+    n_ups = jnp.sum(upserted.astype(jnp.int32))
+    return t, n_ins, n_ups, overflow
 
 
 def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
     """Batched upsert.  Returns (tree', stats dict).
 
-    Device rounds handle all in-node inserts; keys landing in full leaves
-    are deferred to a host maintenance pass that performs paper-faithful
-    splits (proactive gapping) and parent separator insertion.
+    A single segmented-merge dispatch applies every key whose leaf has
+    room for its whole segment (no per-round host syncs); segments that
+    exceed their leaf's free gaps are deferred whole to a host maintenance
+    pass that performs paper-faithful splits (proactive gapping) and parent
+    separator insertion.  ``stats['rounds']`` counts device dispatches.
     """
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
     vals = np.asarray(vals, dtype=np.uint32)
@@ -507,78 +691,60 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
         last = np.concatenate([keys_u64[1:] != keys_u64[:-1], [True]])
         keys_u64, vals = keys_u64[last], vals[last]
 
+    stats = {"inserted": 0, "upserted": 0, "deferred": 0, "rounds": 0}
+    if len(keys_u64) == 0:
+        return tree, stats
+
     hi, lo = split_u64(keys_u64)
     k_hi, k_lo, v = jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals)
-    active = jnp.ones((len(keys_u64),), dtype=bool)
-    deferred_total = np.zeros((len(keys_u64),), dtype=bool)
-    stats = {"inserted": 0, "upserted": 0, "deferred": 0, "rounds": 0}
-
     leaf = descend(tree, k_hi, k_lo)
-    while True:
-        n_active = int(jnp.sum(active.astype(jnp.int32)))
-        if n_active == 0:
-            break
-        tree, active, deferred, n_ins, n_ups = _insert_round(
-            tree, k_hi, k_lo, v, leaf, active
-        )
-        stats["inserted"] += int(n_ins)
-        stats["upserted"] += int(n_ups)
-        stats["rounds"] += 1
-        d = np.asarray(deferred)
-        if d.any():
-            deferred_total |= d
-        # leaf ids are stable within rounds (no structural changes in jit)
+    tree, n_ins, n_ups, overflow = _insert_merge(tree, k_hi, k_lo, v, leaf)
+    stats["inserted"] = int(n_ins)
+    stats["upserted"] = int(n_ups)
+    stats["rounds"] = 1
 
-    if deferred_total.any():
-        idx = np.nonzero(deferred_total)[0]
+    d = np.asarray(overflow)
+    if d.any():
+        idx = np.nonzero(d)[0]
         stats["deferred"] = len(idx)
-        tree = _host_insert_with_splits(tree, keys_u64[idx], vals[idx])
-        stats["inserted"] += len(idx)
+        tree, h_ins, h_ups = _host_insert_with_splits(
+            tree, keys_u64[idx], vals[idx]
+        )
+        stats["inserted"] += h_ins
+        stats["upserted"] += h_ups
     return tree, stats
 
 
 @jax.jit
-def _delete_round(tree: BSTreeArrays, k_hi, k_lo, leaf, active):
-    pos = jnp.arange(leaf.shape[0], dtype=jnp.int32)
-    seg_start = jnp.concatenate([jnp.zeros((1,), bool), leaf[1:] != leaf[:-1]])
-    seg_id = jnp.cumsum(seg_start.astype(jnp.int32))
-    first_act = jax.ops.segment_max(
-        jnp.where(active, -pos, -(leaf.shape[0] + 1)), seg_id,
-        num_segments=leaf.shape[0] + 1, indices_are_sorted=True,
-    )
-    sel = active & (pos == -first_act[seg_id])
-
+def _delete_merge(tree: BSTreeArrays, k_hi, k_lo, leaf):
     rows_hi = tree.leaf_hi[leaf]
     rows_lo = tree.leaf_lo[leaf]
     rows_v = tree.leaf_val[leaf]
-    new_hi, new_lo, new_v, found = jax.vmap(row_delete)(
-        rows_hi, rows_lo, rows_v, k_hi, k_lo
+    active = jnp.ones(k_hi.shape, bool)
+    new_hi, new_lo, new_v, write, found = segmented_rows_delete(
+        rows_hi, rows_lo, rows_v, k_hi, k_lo, leaf, active
     )
-    tgt = jnp.where(sel, leaf, tree.leaf_hi.shape[0] + 1)
+    tgt = jnp.where(write, leaf, tree.leaf_hi.shape[0] + 1)
     t = dataclasses.replace(
         tree,
         leaf_hi=tree.leaf_hi.at[tgt].set(new_hi, mode="drop"),
         leaf_lo=tree.leaf_lo.at[tgt].set(new_lo, mode="drop"),
         leaf_val=tree.leaf_val.at[tgt].set(new_v, mode="drop"),
     )
-    n_found = jnp.sum((sel & found).astype(jnp.int32))
-    active = active & ~sel
-    return t, active, n_found
+    return t, jnp.sum(found.astype(jnp.int32))
 
 
 def delete_batch(tree: BSTreeArrays, keys_u64: np.ndarray):
-    """Batched delete (Algorithm 5; no merging, like the paper).
-    Returns (tree', n_deleted)."""
+    """Batched delete (Algorithm 5; no merging, like the paper), applied as
+    one segmented-merge dispatch.  Returns (tree', n_deleted)."""
     keys_u64 = np.unique(np.asarray(keys_u64, dtype=np.uint64))
+    if len(keys_u64) == 0:
+        return tree, 0
     hi, lo = split_u64(keys_u64)
     k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
-    active = jnp.ones((len(keys_u64),), dtype=bool)
     leaf = descend(tree, k_hi, k_lo)
-    n_deleted = 0
-    while int(jnp.sum(active.astype(jnp.int32))):
-        tree, active, n_found = _delete_round(tree, k_hi, k_lo, leaf, active)
-        n_deleted += int(n_found)
-    return tree, n_deleted
+    tree, n_deleted = _delete_merge(tree, k_hi, k_lo, leaf)
+    return tree, int(n_deleted)
 
 
 # ---------------------------------------------------------------------------
@@ -631,11 +797,18 @@ class _HostView(ref.ReferenceBSTree):
 
 
 def _host_insert_with_splits(tree: BSTreeArrays, keys: np.ndarray, vals: np.ndarray):
+    """Insert deferred keys with paper-faithful splits.  Returns
+    (tree', n_inserted, n_upserted) — upserts are keys that already existed
+    (ReferenceBSTree.insert returns False for them)."""
     h = to_host(tree)
     view = _HostView(h)
+    n_ins = n_ups = 0
     for k, v in zip(keys, vals):
-        view.insert(int(k), int(v))
-    return from_host(
+        if view.insert(int(k), int(v)):
+            n_ins += 1
+        else:
+            n_ups += 1
+    tree = from_host(
         leaf_keys=view.leaf_keys,
         leaf_vals=view.leaf_vals,
         next_leaf=view.next_leaf,
@@ -647,6 +820,7 @@ def _host_insert_with_splits(tree: BSTreeArrays, keys: np.ndarray, vals: np.ndar
         height=view.height,
         n=view.n,
     )
+    return tree, n_ins, n_ups
 
 
 # ---------------------------------------------------------------------------

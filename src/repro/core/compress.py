@@ -531,62 +531,50 @@ def _pack_tag(d_hi, d_lo, tag_const: int, n: int):
 
 
 def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
-    """Batched insert into the CBS-tree.  In-frame keys with a free gap are
-    inserted on device (logical-plane row ops); the rest (out-of-frame
-    deltas, full leaves) go through the host rebuild path, which re-splits
-    the affected leaves choosing fresh narrowest tags (paper §5 Insert)."""
+    """Batched insert into the CBS-tree, as ONE segmented-merge dispatch.
+
+    Each leaf's whole in-frame key segment is merged into its unpacked
+    logical planes in a single pass (unpack -> segmented merge -> repack at
+    every tag width, predicated by tag); the rest (out-of-frame deltas,
+    segments exceeding the leaf's free gaps) go through the host rebuild
+    path, which re-splits the affected leaves choosing fresh narrowest
+    tags (paper §5 Insert).  ``stats['rounds']`` counts device dispatches.
+    """
     keys_u64 = np.unique(np.asarray(keys_u64, dtype=np.uint64))
+    stats = {"inserted": 0, "deferred": 0, "rounds": 0, "present": 0}
+    if len(keys_u64) == 0:
+        return tree, stats
     hi, lo = split_u64(keys_u64)
     k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
-    active = jnp.ones((len(keys_u64),), dtype=bool)
-    deferred_total = np.zeros((len(keys_u64),), dtype=bool)
-    stats = {"inserted": 0, "deferred": 0, "rounds": 0}
 
     found, leaf, _ = cbs_lookup_batch(tree, k_hi, k_lo)
-    active = active & ~found  # keys-only tree: present keys are no-ops
+    active = ~found  # keys-only tree: present keys are no-ops
     stats["present"] = int(jnp.sum(found.astype(jnp.int32)))
 
-    while int(jnp.sum(active.astype(jnp.int32))):
-        tree, active, deferred, n_ins = _cbs_insert_round(
-            tree, k_hi, k_lo, leaf, active
-        )
-        stats["inserted"] += int(n_ins)
-        stats["rounds"] += 1
-        d = np.asarray(deferred)
-        if d.any():
-            deferred_total |= d
+    tree, deferred, n_ins = _cbs_insert_merge(tree, k_hi, k_lo, leaf, active)
+    stats["inserted"] = int(n_ins)
+    stats["rounds"] = 1
 
-    if deferred_total.any():
-        idx = np.nonzero(deferred_total)[0]
+    d = np.asarray(deferred)
+    if d.any():
+        idx = np.nonzero(d)[0]
         stats["deferred"] = len(idx)
         tree = _cbs_host_rebuild(tree, keys_u64[idx])
-        stats["inserted"] += len(idx)
+        stats["inserted"] += len(idx)  # deferred keys are all new (not present)
     return tree, stats
 
 
-def _select_first_active(leaf, active):
-    pos = jnp.arange(leaf.shape[0], dtype=jnp.int32)
-    seg_start = jnp.concatenate([jnp.zeros((1,), bool), leaf[1:] != leaf[:-1]])
-    seg_id = jnp.cumsum(seg_start.astype(jnp.int32))
-    first_act = jax.ops.segment_max(
-        jnp.where(active, -pos, -(leaf.shape[0] + 1)), seg_id,
-        num_segments=leaf.shape[0] + 1, indices_are_sorted=True,
-    )
-    return active & (pos == -first_act[seg_id])
+def _select_by_tag(tag, per_tag):
+    """Predicate (u16, u32, u64) evaluations by each row's actual tag.
+    ``tag`` must be broadcastable against the per-tag arrays."""
+    return jnp.where(tag == TAG_U16, per_tag[0],
+                     jnp.where(tag == TAG_U32, per_tag[1], per_tag[2]))
 
 
-@jax.jit
-def _cbs_insert_round(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
-    from .bstree import row_upsert
-
-    n = tree.node_width
-    sel = _select_first_active(leaf, active)
-
-    words = tree.leaf_words[leaf]
+def _frame_deltas(tree: CBSTreeArrays, k_hi, k_lo, leaf):
+    """Per-key delta in its leaf's frame + tag-aware in-frame mask."""
     tag = tree.leaf_tag[leaf]
     k0_hi, k0_lo = tree.leaf_k0_hi[leaf], tree.leaf_k0_lo[leaf]
-
-    # delta of the new key in the leaf's frame; in-frame check per tag
     ge_k0 = cmp_ge_u64(k_hi, k_lo, k0_hi, k0_lo)
     dq_hi = k_hi - k0_hi - (k_lo < k0_lo).astype(k_hi.dtype)
     dq_lo = k_lo - k0_lo
@@ -596,91 +584,96 @@ def _cbs_insert_round(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
         ~((dq_hi == MAXKEY_HI) & (dq_lo == MAXKEY_LO)),
         (dq_hi == 0) & (dq_lo < maxd_lo),
     )
+    return tag, dq_hi, dq_lo, in_frame, ge_k0
 
-    # evaluate every interpretation at its own static width; predicate by
-    # tag (the TPU-idiomatic replacement for the CPU's per-leaf branch)
-    new_words, statuses = [], []
+
+@jax.jit
+def _cbs_insert_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
+    from .bstree import segmented_rows_upsert
+
+    n = tree.node_width
+    words = tree.leaf_words[leaf]
+    tag, dq_hi, dq_lo, in_frame, _ = _frame_deltas(tree, k_hi, k_lo, leaf)
+    act = active & in_frame
     dummy_v = jnp.zeros(k_hi.shape, jnp.uint32)
+
+    # evaluate the segmented merge at every interpretation's own static
+    # width; predicate by tag (the TPU-idiomatic replacement for the CPU's
+    # per-leaf branch).  The merge generalizes the one-key row formula, so
+    # the unpack -> merge -> repack planes pipeline is unchanged.
+    new_words, writes, merges, overflows = [], [], [], []
     for tc in (TAG_U16, TAG_U32, TAG_U64):
         d_hi, d_lo = _unpack_tag(words, tc, n)
-        ins_hi = (dq_hi if tc == TAG_U64 else jnp.zeros_like(dq_hi)).astype(jnp.uint32)
+        ins_hi = (dq_hi if tc == TAG_U64 else jnp.zeros_like(dq_hi)).astype(
+            jnp.uint32)
         row_v = jnp.zeros(d_lo.shape, jnp.uint32)
-        nh, nl, _, st = jax.vmap(row_upsert)(d_hi, d_lo, row_v, ins_hi, dq_lo, dummy_v)
+        nh, nl, _, write, merged_new, _, overflow = segmented_rows_upsert(
+            d_hi, d_lo, row_v, ins_hi, dq_lo, dummy_v, leaf, act
+        )
         new_words.append(_pack_tag(nh, nl, tc, n))
-        statuses.append(st)
-    t16, t32 = tag[:, None] == TAG_U16, tag[:, None] == TAG_U32
-    merged = jnp.where(t16, new_words[0], jnp.where(t32, new_words[1], new_words[2]))
-    status = jnp.where(
-        tag == TAG_U16, statuses[0], jnp.where(tag == TAG_U32, statuses[1], statuses[2])
-    )
+        writes.append(write)
+        merges.append(merged_new)
+        overflows.append(overflow)
 
-    ok = sel & in_frame & (status == 0)
-    deferred = sel & (~in_frame | (status == 2))
-    tgt = jnp.where(ok, leaf, tree.leaf_words.shape[0] + 1)
+    merged = _select_by_tag(tag[:, None], new_words)
+    write = _select_by_tag(tag, writes)
+    merged_new = _select_by_tag(tag, merges)
+    overflow = _select_by_tag(tag, overflows)
+
+    deferred = active & (~in_frame | overflow)
+    tgt = jnp.where(write, leaf, tree.leaf_words.shape[0] + 1)
     tree = dataclasses.replace(
         tree, leaf_words=tree.leaf_words.at[tgt].set(merged, mode="drop")
     )
-    active = active & ~ok & ~deferred
-    return tree, active, deferred, jnp.sum(ok.astype(jnp.int32))
+    return tree, deferred, jnp.sum(merged_new.astype(jnp.int32))
 
 
 def cbs_delete_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
     """Batched delete (paper §5 Delete: copy next value / MAXKEY over the
-    dup-run; k0 never changes).  Fully on device — deletes never retype."""
+    dup-run; k0 never changes) as ONE segmented-merge dispatch.  Fully on
+    device — deletes never retype."""
     keys_u64 = np.unique(np.asarray(keys_u64, dtype=np.uint64))
+    if len(keys_u64) == 0:
+        return tree, 0
     hi, lo = split_u64(keys_u64)
     k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
-    active = jnp.ones((len(keys_u64),), dtype=bool)
     _, leaf, _ = cbs_lookup_batch(tree, k_hi, k_lo)
-    n_deleted = 0
-    while int(jnp.sum(active.astype(jnp.int32))):
-        tree, active, n_found = _cbs_delete_round(tree, k_hi, k_lo, leaf, active)
-        n_deleted += int(n_found)
-    return tree, n_deleted
+    tree, n_deleted = _cbs_delete_merge(tree, k_hi, k_lo, leaf)
+    return tree, int(n_deleted)
 
 
 @jax.jit
-def _cbs_delete_round(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
-    from .bstree import row_delete
+def _cbs_delete_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf):
+    from .bstree import segmented_rows_delete
 
     n = tree.node_width
-    sel = _select_first_active(leaf, active)
-
     words = tree.leaf_words[leaf]
-    tag = tree.leaf_tag[leaf]
-    k0_hi, k0_lo = tree.leaf_k0_hi[leaf], tree.leaf_k0_lo[leaf]
-    ge_k0 = cmp_ge_u64(k_hi, k_lo, k0_hi, k0_lo)
-    dq_hi_raw = k_hi - k0_hi - (k_lo < k0_lo).astype(k_hi.dtype)
-    dq_lo = jnp.where(ge_k0, k_lo - k0_lo, 0)
-    maxd_lo = jnp.where(tag == TAG_U16, MAXD16, MAXD32)
-    in_frame = ge_k0 & jnp.where(
-        tag == TAG_U64,
-        ~((dq_hi_raw == MAXKEY_HI) & (dq_lo == MAXKEY_LO)),
-        (dq_hi_raw == 0) & (dq_lo < maxd_lo),
-    )
+    tag, dq_hi, dq_lo, in_frame, ge_k0 = _frame_deltas(tree, k_hi, k_lo, leaf)
+    act = in_frame
+    dq_lo_c = jnp.where(ge_k0, dq_lo, 0)
 
-    new_words, founds = [], []
+    new_words, writes, founds = [], [], []
     for tc in (TAG_U16, TAG_U32, TAG_U64):
         d_hi, d_lo = _unpack_tag(words, tc, n)
-        del_hi = (dq_hi_raw if tc == TAG_U64 else jnp.zeros_like(dq_hi_raw))
+        del_hi = (dq_hi if tc == TAG_U64 else jnp.zeros_like(dq_hi))
         del_hi = jnp.where(ge_k0, del_hi, 0).astype(jnp.uint32)
         row_v = jnp.zeros(d_lo.shape, jnp.uint32)
-        nh, nl, _, fd = jax.vmap(row_delete)(d_hi, d_lo, row_v, del_hi, dq_lo)
+        nh, nl, _, write, found = segmented_rows_delete(
+            d_hi, d_lo, row_v, del_hi, dq_lo_c, leaf, act
+        )
         new_words.append(_pack_tag(nh, nl, tc, n))
-        founds.append(fd)
-    t16, t32 = tag[:, None] == TAG_U16, tag[:, None] == TAG_U32
-    merged = jnp.where(t16, new_words[0], jnp.where(t32, new_words[1], new_words[2]))
-    found = jnp.where(
-        tag == TAG_U16, founds[0], jnp.where(tag == TAG_U32, founds[1], founds[2])
-    )
+        writes.append(write)
+        founds.append(found)
 
-    ok = sel & found & in_frame
-    tgt = jnp.where(ok, leaf, tree.leaf_words.shape[0] + 1)
+    merged = _select_by_tag(tag[:, None], new_words)
+    write = _select_by_tag(tag, writes)
+    found = _select_by_tag(tag, founds)
+
+    tgt = jnp.where(write, leaf, tree.leaf_words.shape[0] + 1)
     tree = dataclasses.replace(
         tree, leaf_words=tree.leaf_words.at[tgt].set(merged, mode="drop")
     )
-    active = active & ~sel
-    return tree, active, jnp.sum(ok.astype(jnp.int32))
+    return tree, jnp.sum(found.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -127,6 +127,132 @@ def leaf_insert(
     return nh[:b], nl[:b], nv[:b], st[:b, 0]
 
 
+def _leaf_insert_multi_kernel(
+    hi_ref, lo_ref, val_ref, shi_ref, slo_ref, sv_ref,
+    ohi_ref, olo_ref, oval_ref, oins_ref, oups_ref, oovf_ref,
+):
+    """Multi-key tile variant: merge each row's whole key segment in one
+    kernel launch (the segmented write-path analogue of the fused read
+    path).  Segment lanes hold MAXKEY padding for rows with fewer keys.
+
+    Pass 1 counts the segment's new keys so a row whose segment exceeds
+    its free gaps is left untouched (deferred whole, matching the core
+    segmented merge).  Pass 2 applies the branchless one-key rotate
+    formula once per segment lane — every step is 2D lane-static VPU work,
+    no cross-lane variable shuffles.
+    """
+    hi, lo, vals = hi_ref[...], lo_ref[...], val_ref[...]
+    shi, slo, sv = shi_ref[...], slo_ref[...], sv_ref[...]  # (TB, S)
+    n = hi.shape[1]
+    s = shi.shape[1]
+
+    used0, _, _ = _row_aux(hi, lo)
+    c = jnp.sum(used0.astype(jnp.int32), axis=1, keepdims=True)
+
+    # ---- pass 1: count new (valid, not-already-present) segment keys ----
+    num_new = jnp.zeros_like(c)
+    for jj in range(s):
+        kh, kl = shi[:, jj : jj + 1], slo[:, jj : jj + 1]
+        valid = ~((~kh == 0) & (~kl == 0))  # != MAXKEY (all-ones planes)
+        exists = jnp.any((hi == kh) & (lo == kl), axis=1, keepdims=True)
+        num_new += (valid & ~exists).astype(jnp.int32)
+    ovf = (c + num_new) > n
+
+    # ---- pass 2: apply the one-key branchless formula per segment lane ----
+    n_ins = jnp.zeros_like(c)
+    n_ups = jnp.zeros_like(c)
+    for jj in range(s):
+        kh, kl, vv = (shi[:, jj : jj + 1], slo[:, jj : jj + 1],
+                      sv[:, jj : jj + 1])
+        valid = ~((~kh == 0) & (~kl == 0)) & ~ovf
+        used, gap, iota = _row_aux(hi, lo)
+        a_hi, a_lo = _as_signed(hi), _as_signed(lo)
+        sqh, sql = _as_signed(kh), _as_signed(kl)
+        lt = (sqh > a_hi) | ((sqh == a_hi) & (sql > a_lo))
+        r = jnp.sum(lt.astype(jnp.int32), axis=1, keepdims=True)
+        run = (hi == kh) & (lo == kl)
+        exists = jnp.any(run, axis=1, keepdims=True)
+
+        j = jnp.min(jnp.where(gap & (iota >= r), iota, n), axis=1,
+                    keepdims=True)
+        g = jnp.max(jnp.where(gap & (iota < r), iota, -1), axis=1,
+                    keepdims=True)
+        right_ok = j < n
+        tgt = jnp.where(right_ok, jnp.minimum(r, n - 1), r - 1)
+        shift_r = right_ok & (iota > r) & (iota <= j)
+        shift_l = (~right_ok) & (iota >= g) & (iota < r - 1)
+
+        def build(plane, fill):
+            moved = jnp.where(
+                shift_r, jnp.roll(plane, 1, axis=1),
+                jnp.where(shift_l, jnp.roll(plane, -1, axis=1), plane),
+            )
+            return jnp.where(iota == tgt, fill, moved)
+
+        do_ins = valid & ~exists
+        do_ups = valid & exists
+        hi = jnp.where(do_ins, build(hi, kh), hi)
+        lo = jnp.where(do_ins, build(lo, kl), lo)
+        vals = jnp.where(do_ins, build(vals, vv),
+                         jnp.where(do_ups & run, vv, vals))
+        n_ins += do_ins.astype(jnp.int32)
+        n_ups += do_ups.astype(jnp.int32)
+
+    ohi_ref[...] = hi
+    olo_ref[...] = lo
+    oval_ref[...] = vals
+    oins_ref[...] = n_ins
+    oups_ref[...] = n_ups
+    oovf_ref[...] = ovf.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def leaf_insert_multi(
+    hi, lo, vals,  # (B, N) uint32 row tiles
+    seg_hi, seg_lo, seg_v,  # (B, S) uint32: each row's key segment
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+):
+    """Batched segmented upsert: each row absorbs its whole (MAXKEY-padded,
+    duplicate-free) key segment in one launch.  Returns (hi', lo', vals',
+    n_inserted (B,), n_upserted (B,), overflow (B,) bool); overflowing rows
+    are returned untouched for the caller's split pass."""
+    b, n = hi.shape
+    s = seg_hi.shape[1]
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        padk = ((0, pad), (0, 0))
+        hi = jnp.pad(hi, padk, constant_values=np.uint32(0xFFFFFFFF))
+        lo = jnp.pad(lo, padk, constant_values=np.uint32(0xFFFFFFFF))
+        vals = jnp.pad(vals, padk)
+        seg_hi = jnp.pad(seg_hi, padk, constant_values=np.uint32(0xFFFFFFFF))
+        seg_lo = jnp.pad(seg_lo, padk, constant_values=np.uint32(0xFFFFFFFF))
+        seg_v = jnp.pad(seg_v, padk)
+    bp = hi.shape[0]
+    specs2d = pl.BlockSpec((tb, n), lambda i: (i, 0))
+    specs_seg = pl.BlockSpec((tb, s), lambda i: (i, 0))
+    specs1d = pl.BlockSpec((tb, 1), lambda i: (i, 0))
+    nh, nl, nv, ni, nu, ov = pl.pallas_call(
+        _leaf_insert_multi_kernel,
+        grid=(bp // tb,),
+        in_specs=[specs2d, specs2d, specs2d, specs_seg, specs_seg, specs_seg],
+        out_specs=[specs2d, specs2d, specs2d, specs1d, specs1d, specs1d],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi, lo, vals, seg_hi, seg_lo, seg_v)
+    return (nh[:b], nl[:b], nv[:b], ni[:b, 0], nu[:b, 0],
+            ov[:b, 0].astype(bool))
+
+
 def _leaf_delete_kernel(
     hi_ref, lo_ref, val_ref, khi_ref, klo_ref,
     ohi_ref, olo_ref, oval_ref, ofound_ref,

@@ -57,6 +57,14 @@ def leaf_upsert_rows(hi, lo, vals, k_hi, k_lo, v, **kw):
     return leaf_insert.leaf_insert(hi, lo, vals, k_hi, k_lo, v, **kw)
 
 
+def leaf_upsert_rows_multi(hi, lo, vals, seg_hi, seg_lo, seg_v, **kw):
+    """Segmented multi-key upsert: each row absorbs its whole (B, S)
+    MAXKEY-padded key segment in one kernel launch."""
+    kw.setdefault("interpret", _interp())
+    return leaf_insert.leaf_insert_multi(hi, lo, vals, seg_hi, seg_lo, seg_v,
+                                         **kw)
+
+
 def leaf_delete_rows(hi, lo, vals, k_hi, k_lo, **kw):
     kw.setdefault("interpret", _interp())
     return leaf_insert.leaf_delete(hi, lo, vals, k_hi, k_lo, **kw)

@@ -92,6 +92,55 @@ def test_empty_tree_inserts(rng):
     B.check_invariants(t)
 
 
+def test_count_range_endpoint_ranks(rng, keys_10k):
+    """count_range returns (leaf, leaf-local rank) per endpoint; check both
+    against the host arrays, and the same-leaf exact-count corollary."""
+    from repro.core.reference import _is_used_slot
+
+    t = B.bulk_load(keys_10k, n=16)
+    h = B.to_host(t)
+    ks = keys_10k.tolist()
+
+    idx = rng.integers(0, len(ks) - 1, size=64)
+    k1 = keys_10k[idx]
+    k2 = keys_10k[np.minimum(idx + rng.integers(0, 50, size=64), len(ks) - 1)]
+    k1h, k1l = map(jnp.asarray, split_u64(k1))
+    k2h, k2l = map(jnp.asarray, split_u64(k2))
+    leaf1, lo_rank, leaf2, hi_rank = map(
+        np.asarray, B.count_range(t, k1h, k1l, k2h, k2l))
+
+    exp_leaf1 = np.asarray(B.descend(t, k1h, k1l))
+    exp_leaf2 = np.asarray(B.descend(t, k2h, k2l))
+    np.testing.assert_array_equal(leaf1, exp_leaf1)
+    np.testing.assert_array_equal(leaf2, exp_leaf2)
+    for q in range(len(idx)):
+        row1 = h["leaf_keys"][leaf1[q]]
+        row2 = h["leaf_keys"][leaf2[q]]
+        want_lo = sum(
+            1 for i in range(t.node_width)
+            if _is_used_slot(row1, i) and row1[i] < k1[q])
+        want_hi = sum(
+            1 for i in range(t.node_width)
+            if _is_used_slot(row2, i) and row2[i] <= k2[q])
+        assert lo_rank[q] == want_lo
+        assert hi_rank[q] == want_hi
+        if leaf1[q] == leaf2[q]:
+            want_count = sum(1 for k in ks if k1[q] <= k <= k2[q])
+            assert hi_rank[q] - lo_rank[q] == want_count
+
+
+def test_insert_batch_bounded_rounds(rng, keys_10k):
+    """A 2k-key batch resolves in one merge dispatch (+ host split pass),
+    not one dispatch per key sharing a leaf."""
+    t = B.bulk_load(keys_10k, n=16)
+    newk = rand_keys(rng, 2000)
+    newk = newk[~np.isin(newk, keys_10k)]
+    t, stats = B.insert_batch(t, newk, np.arange(len(newk), dtype=np.uint32))
+    assert stats["rounds"] <= 2
+    found, _ = B.lookup_u64(t, newk)
+    assert found.all()
+
+
 def test_kernel_lookup_path_equivalence(rng, keys_10k):
     from repro.kernels import ops
 

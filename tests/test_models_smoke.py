@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # ~2 min of model compiles; CI fast lane skips
+
 from repro.configs import all_arch_names, get_config
 from repro.models.model import (
     decode_step, forward_train, init_lm, make_cache,

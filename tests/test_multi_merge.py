@@ -1,0 +1,205 @@
+"""Adversarial batches for the segmented multi-key merge, cross-checked
+against the scalar oracle (ReferenceBSTree) / set models.  The merge must
+resolve every batch in a bounded number of device dispatches:
+stats["rounds"] <= 2 regardless of how many keys share a leaf."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bstree as B
+from repro.core import compress as C
+from repro.core.layout import MAXKEY, split_u64
+from repro.core.reference import ReferenceBSTree
+from conftest import rand_keys
+
+MAX_ROUNDS = 2
+
+
+def _assert_matches_reference(tree, base_keys, ins_keys, ins_vals):
+    ref = ReferenceBSTree.bulk_load(base_keys, n=tree.node_width)
+    for k, v in zip(ins_keys.tolist(), ins_vals.tolist()):
+        ref.insert(k, v)
+    items = B.check_invariants(tree)
+    assert [k for k, _ in items] == [k for k, _ in ref.items()]
+    model = {int(k): i for i, k in enumerate(base_keys)}
+    for k, v in zip(ins_keys.tolist(), ins_vals.tolist()):
+        model[k] = v
+    assert dict(items) == model
+
+
+def test_all_keys_one_leaf_fits(rng):
+    # widely spaced base keys -> the batch lands in ONE leaf and fits its
+    # gaps; previously this cost one dispatch per key.
+    base = np.arange(1, 65, dtype=np.uint64) * np.uint64(1 << 32)
+    t = B.bulk_load(base, n=16)
+    newk = base[3] + np.arange(1, 4, dtype=np.uint64)  # 3 keys, same leaf
+    newv = np.arange(3, dtype=np.uint32)
+    t, stats = B.insert_batch(t, newk, newv)
+    assert stats["rounds"] <= MAX_ROUNDS
+    assert stats["deferred"] == 0
+    assert stats["inserted"] == 3
+    _assert_matches_reference(t, base, newk, newv)
+
+
+def test_all_keys_one_leaf_overflows(rng):
+    base = np.arange(1, 65, dtype=np.uint64) * np.uint64(1 << 32)
+    t = B.bulk_load(base, n=16)
+    # 40 keys into one 16-slot leaf: segment exceeds free gaps -> host splits
+    newk = base[3] + np.arange(1, 41, dtype=np.uint64)
+    newv = np.arange(40, dtype=np.uint32)
+    t, stats = B.insert_batch(t, newk, newv)
+    assert stats["rounds"] <= MAX_ROUNDS
+    assert stats["deferred"] == 40
+    _assert_matches_reference(t, base, newk, newv)
+
+
+def test_dup_heavy_batch(rng):
+    base = np.sort(rand_keys(rng, 500))
+    t = B.bulk_load(base, n=16)
+    uniq = rand_keys(rng, 50)
+    # each key repeated many times with different values; the LAST value
+    # must win (upsert semantics), and repeats of existing keys too
+    reps = np.concatenate([uniq, uniq, uniq, base[:30], base[:30]])
+    order = rng.permutation(len(reps))
+    # values chosen so the final occurrence is identifiable after the
+    # stable sort inside insert_batch
+    vals = np.arange(len(reps), dtype=np.uint32)
+    reps, vals = reps[order], vals[order]
+    t, stats = B.insert_batch(t, reps, vals)
+    assert stats["rounds"] <= MAX_ROUNDS
+    expect = {}
+    for k, v in zip(reps.tolist(), vals.tolist()):
+        expect[k] = v  # latest occurrence wins
+    model = {int(k): i for i, k in enumerate(base)}
+    model.update(expect)
+    items = B.check_invariants(t)
+    assert dict(items) == model
+
+
+def test_batch_larger_than_tree_capacity(rng):
+    base = np.sort(rand_keys(rng, 20))
+    t = B.bulk_load(base, n=8)
+    newk = np.sort(rand_keys(rng, 600))
+    newk = newk[~np.isin(newk, base)]
+    newv = np.arange(len(newk), dtype=np.uint32)
+    t, stats = B.insert_batch(t, newk, newv)
+    assert stats["rounds"] <= MAX_ROUNDS
+    _assert_matches_reference(t, base, newk, newv)
+
+
+def test_empty_tree_batch(rng):
+    t = B.bulk_load(np.zeros(0, np.uint64), n=16)
+    newk = np.sort(rand_keys(rng, 200))
+    newv = np.arange(len(newk), dtype=np.uint32)
+    t, stats = B.insert_batch(t, newk, newv)
+    assert stats["rounds"] <= MAX_ROUNDS
+    items = B.check_invariants(t)
+    assert [k for k, _ in items] == list(map(int, newk))
+
+
+def test_segmented_delete_whole_leaves(rng):
+    base = np.sort(rand_keys(rng, 1000))
+    t = B.bulk_load(base, n=16)
+    # delete a dense contiguous stretch (empties whole leaves), a sparse
+    # sample, and keys that do not exist
+    absent = rand_keys(rng, 50)
+    absent = absent[~np.isin(absent, base)]
+    dels = np.concatenate([base[100:400], base[::97], absent])
+    t, nd = B.delete_batch(t, dels)
+    present = set(base.tolist())
+    expect_deleted = {k for k in dels.tolist() if k in present}
+    assert nd == len(expect_deleted)
+    items = B.check_invariants(t)
+    assert [k for k, _ in items] == sorted(present - expect_deleted)
+
+
+def test_cbs_mixed_tag_segments(rng):
+    # clustered keys -> u16/u32 leaves; a wide tail -> u64 leaves
+    base = np.sort(rng.integers(0, 2**40, size=120, dtype=np.uint64)) \
+        * np.uint64(2**20)
+    clustered = np.unique(
+        (base[:, None] + rng.integers(0, 50000, size=(120, 40),
+                                      dtype=np.uint64)).ravel())
+    wide = rand_keys(rng, 200)
+    keys = np.unique(np.concatenate([clustered, wide]))
+    t = C.cbs_bulk_load(keys, n=16)
+    tags = set(np.asarray(t.leaf_tag)[: int(t.num_leaves)].tolist())
+    assert len(tags) >= 2, "test needs mixed leaf tags"
+
+    # in-frame multi-key segments (several per leaf) + some out-of-frame
+    newk = np.unique(np.concatenate([
+        rng.choice(clustered, 150) + rng.integers(1, 800, 150).astype(np.uint64),
+        rand_keys(rng, 30),
+    ]))
+    model = set(keys.tolist()) | set(newk.tolist())
+    t, stats = C.cbs_insert_batch(t, newk)
+    assert stats["rounds"] <= MAX_ROUNDS
+    assert C.cbs_items(t).tolist() == sorted(model)
+
+    delk = rng.choice(np.asarray(sorted(model), np.uint64), 200, replace=False)
+    t, nd = C.cbs_delete_batch(t, delk)
+    assert nd == len(set(delk.tolist()))
+    model -= set(delk.tolist())
+    assert C.cbs_items(t).tolist() == sorted(model)
+
+
+@pytest.mark.parametrize("n,s", [(8, 4), (16, 8), (128, 16)])
+def test_multi_kernel_matches_sequential_formula(rng, n, s):
+    """leaf_insert_multi == S sequential applications of row_upsert, with
+    whole-segment deferral on overflow."""
+    from repro.core.reference import _slot_use
+    from repro.kernels import ops
+
+    keys = np.sort(rand_keys(rng, 24 * max(4, n // 4)))
+    t = B.bulk_load(keys, n=n)
+    h = B.to_host(t)
+    L = int(t.num_leaves)
+    rows, vals = h["leaf_keys"][:L], h["leaf_vals"][:L]
+    hi, lo = split_u64(rows)
+
+    seg = np.full((L, s), MAXKEY, dtype=np.uint64)
+    segv = np.zeros((L, s), dtype=np.uint32)
+    for i in range(L):
+        m = int(rng.integers(0, s + 1))
+        ks = np.unique(rng.integers(0, 2**62, m, dtype=np.uint64))
+        if len(ks) and rng.random() < 0.5:
+            ks[0] = rows[i, min(3, n - 1)]  # hit an existing key
+            ks = np.unique(ks)
+        seg[i, : len(ks)] = ks
+        segv[i, : len(ks)] = rng.integers(0, 2**31, len(ks)).astype(np.uint32)
+    shi, slo = split_u64(seg)
+
+    got = ops.leaf_upsert_rows_multi(
+        jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals),
+        jnp.asarray(shi), jnp.asarray(slo), jnp.asarray(segv))
+    ghi, glo, gv, gins, gups, govf = map(np.asarray, got)
+
+    ehi, elo, ev = hi.copy(), lo.copy(), vals.copy()
+    oins = np.zeros(L, np.int64)
+    oups = np.zeros(L, np.int64)
+    oovf = np.zeros(L, bool)
+    for i in range(L):
+        ks = seg[i][seg[i] != MAXKEY]
+        new = sum(1 for k in ks if not (rows[i] == k).any())
+        if _slot_use(rows[i]) + new > n:
+            oovf[i] = True
+            continue
+        for k, v in zip(seg[i], segv[i]):
+            if k == MAXKEY:
+                continue
+            kh, kl = split_u64(np.array([k]))
+            nh, nl, nv, st = B.row_upsert(
+                jnp.asarray(ehi[i]), jnp.asarray(elo[i]), jnp.asarray(ev[i]),
+                jnp.asarray(kh[0]), jnp.asarray(kl[0]), jnp.asarray(v))
+            ehi[i], elo[i], ev[i] = map(np.asarray, (nh, nl, nv))
+            if int(st) == 0:
+                oins[i] += 1
+            else:
+                oups[i] += 1
+
+    np.testing.assert_array_equal(govf, oovf)
+    np.testing.assert_array_equal(ghi, ehi)
+    np.testing.assert_array_equal(glo, elo)
+    np.testing.assert_array_equal(gv, ev)
+    np.testing.assert_array_equal(gins, oins)
+    np.testing.assert_array_equal(gups, oups)

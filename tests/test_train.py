@@ -6,6 +6,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full train loops; CI fast lane skips
+
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLMDataset
 from repro.train.loop import TrainConfig, Trainer
