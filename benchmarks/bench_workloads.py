@@ -1,21 +1,29 @@
 """Figures 5-9 analogue: workloads A-E throughput (batched, Mops/s).
 
-Build 1M keys, run 100k-op workloads.  BS-tree and CBS-tree are compared
-against a sorted-array + vmapped-binary-search baseline (the strongest
-simple read-only competitor on TPU-like hardware)."""
+One backend-agnostic code path through the ``Index`` facade — pick the
+tree with ``--backend {bs,cbs,auto,all}`` instead of duplicated BS/CBS
+blocks.  A sorted-array + vmapped-binary-search baseline (the strongest
+simple read-only competitor on TPU-like hardware) rides along for
+workload A.
+
+``--json PATH`` additionally records every row machine-readably
+(per-backend op timings + run metadata) so the perf trajectory
+accumulates across commits:
+
+    PYTHONPATH=src python -m benchmarks.bench_workloads \
+        --backend all --json BENCH_workloads.json
+"""
 from __future__ import annotations
 
-import functools
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bstree as B
-from repro.core.compress import (
-    cbs_bulk_load, cbs_delete_batch, cbs_insert_batch, cbs_lookup_batch,
-)
+from repro.core import Index, IndexSpec
 from repro.core.layout import split_u64
 from repro.data.keys import gen_keys
 from .common import row, time_fn
@@ -33,72 +41,126 @@ def _baseline_lookup(sorted_keys_hi, sorted_keys_lo, q_hi, q_lo):
     return (sorted_keys_hi[idx] == q_hi) & (sorted_keys_lo[idx] == q_lo)
 
 
-def main() -> None:
+def _emit(rows: list, name: str, us: float, derived: str, **tags):
+    row(name, us, derived)
+    rows.append({"name": name, "us_per_call": round(us, 2),
+                 "derived": derived, **tags})
+
+
+def run_backend(backend: str, dist: str, build: np.ndarray,
+                fresh: np.ndarray, reads: np.ndarray, ops: int,
+                rows: list) -> None:
+    """Workloads A-E for one backend — the same facade calls whatever the
+    node representation underneath."""
+    rng = np.random.default_rng(1)
+    vals0 = np.arange(len(build), dtype=np.uint32)
+    spec = IndexSpec(n=128, backend=backend)
+    idx = Index.build(build, vals0 if backend == "bs" else None, spec=spec)
+    resolved = idx.backend  # what "auto" decided
+    tag = f"{backend}@{resolved}" if backend == "auto" else resolved
+    qh, ql = map(jnp.asarray, split_u64(reads))
+
+    def t(name, us, derived, wl):
+        _emit(rows, f"{name}/{tag}/{dist}", us, derived,
+              backend=backend, resolved=resolved, dist=dist, workload=wl)
+
+    # Workload A: 100% reads (device-level facade path, one dispatch)
+    us = time_fn(lambda: idx.lookup_batch(qh, ql))
+    t("wlA", us, f"{ops/us:.2f}Mops", "A")
+
+    # Workload B: 100% writes.  Keys-only backends pay full-leaf host
+    # rebuilds that amortise poorly on CPU — smaller batch, same metric.
+    n_w = ops if idx.supports_values else ops // 5
+    newv = np.arange(n_w, dtype=np.uint32) if idx.supports_values else None
+    t0 = time.perf_counter()
+    _, stats = idx.insert(fresh[:n_w], newv)
+    dt = (time.perf_counter() - t0) * 1e6
+    t("wlB", dt,
+      f"{n_w/dt:.2f}Mops_def{stats['deferred']}_r{stats['rounds']}_n{n_w}",
+      "B")
+
+    # Workload C: 50/50 read-write
+    half = ops // 2
+    newv = np.arange(half, dtype=np.uint32) if idx.supports_values else None
+    t0 = time.perf_counter()
+    ix3, _ = idx.insert(fresh[:half], newv)
+    jax.block_until_ready(ix3.lookup_batch(qh[:half], ql[:half])[0])
+    dt = (time.perf_counter() - t0) * 1e6
+    t("wlC", dt, f"{ops/dt:.2f}Mops", "C")
+
+    # Workload D: short ranges + 5% writes.  Ranges go through the
+    # facade's host-walk count_range, NOT the device range kernels the
+    # pre-facade bench timed — rows are named wlD_host so the perf
+    # trajectory never silently compares the two methodologies (device
+    # range kernels: bstree.range_scan / compress.cbs_range_scan).
+    nr = 200
+    i = rng.integers(0, len(build) - 1, nr)
+    lospan = build[i]
+    hispan = build[np.minimum(i + 150, len(build) - 1)]
+    newv = np.arange(500, dtype=np.uint32) if idx.supports_values else None
+    t0 = time.perf_counter()
+    got = sum(idx.count_range(a, b) for a, b in zip(lospan, hispan))
+    idx.insert(fresh[:500], newv)
+    dt = (time.perf_counter() - t0) * 1e6
+    t("wlD_host", dt, f"{(nr+500)/dt:.2f}Mops_{got/nr:.0f}keys_per_range",
+      "D_host")
+
+    # Workload E: 60/35/5 read/write/delete
+    n_ins, n_del, n_rd = int(ops * 0.35), int(ops * 0.05), int(ops * 0.6)
+    newv = np.arange(n_ins, dtype=np.uint32) if idx.supports_values else None
+    t0 = time.perf_counter()
+    ix5, _ = idx.insert(fresh[:n_ins], newv)
+    ix5, _ = ix5.delete(rng.choice(build, n_del))
+    jax.block_until_ready(ix5.lookup_batch(qh[:n_rd], ql[:n_rd])[0])
+    dt = (time.perf_counter() - t0) * 1e6
+    t("wlE", dt, f"{ops/dt:.2f}Mops", "E")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="all",
+                    choices=("bs", "cbs", "auto", "all"))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + metadata as JSON")
+    ap.add_argument("--build", type=int, default=BUILD)
+    ap.add_argument("--ops", type=int, default=OPS)
+    ap.add_argument("--dists", default="books,fb")
+    args = ap.parse_args(argv)
+    backends = ("bs", "cbs") if args.backend == "all" else (args.backend,)
+
+    rows: list[dict] = []
     rng = np.random.default_rng(0)
-    for dist in ("books", "fb"):
-        keys = gen_keys(dist, BUILD + OPS, seed=0)
+    for dist in args.dists.split(","):
+        keys = gen_keys(dist, args.build + args.ops, seed=0)
         perm = rng.permutation(len(keys))
-        build = np.sort(keys[perm[:BUILD]])
-        fresh = keys[perm[BUILD:]]
-        reads = rng.choice(build, OPS)
+        build = np.sort(keys[perm[: args.build]])
+        fresh = keys[perm[args.build:]]
+        reads = rng.choice(build, args.ops)
+
+        for backend in backends:
+            run_backend(backend, dist, build, fresh, reads, args.ops, rows)
+
+        # sorted-array baseline (read-only competitor, workload A)
         qh, ql = map(jnp.asarray, split_u64(reads))
-
-        tree = B.bulk_load(build, n=128)
-        ctree = cbs_bulk_load(build, n=128)
-
-        # Workload A: 100% reads
-        us = time_fn(lambda: B.lookup_batch(tree, qh, ql))
-        row(f"wlA/bs/{dist}", us, f"{OPS/us:.2f}Mops")
-        us = time_fn(lambda: cbs_lookup_batch(ctree, qh, ql))
-        row(f"wlA/cbs/{dist}", us, f"{OPS/us:.2f}Mops")
         bh, bl = map(jnp.asarray, split_u64(build))
         us = time_fn(lambda: _baseline_lookup(bh, bl, qh, ql))
-        row(f"wlA/sorted_array/{dist}", us, f"{OPS/us:.2f}Mops")
+        _emit(rows, f"wlA/sorted_array/{dist}", us, f"{args.ops/us:.2f}Mops",
+              backend="sorted_array", resolved="sorted_array", dist=dist,
+              workload="A")
 
-        # Workload B: 100% writes
-        newv = np.arange(OPS, dtype=np.uint32)
-        t0 = time.perf_counter()
-        t2, stats = B.insert_batch(tree, fresh[:OPS], newv)
-        dt = (time.perf_counter() - t0) * 1e6
-        row(f"wlB/bs/{dist}", dt,
-            f"{OPS/dt:.2f}Mops_def{stats['deferred']}_r{stats['rounds']}")
-        t0 = time.perf_counter()
-        cbs_ops = OPS // 5  # CBS full-leaf rebuilds amortise poorly on CPU
-        c2, cstats = cbs_insert_batch(ctree, fresh[:cbs_ops])
-        dt = (time.perf_counter() - t0) * 1e6
-        row(f"wlB/cbs/{dist}", dt,
-            f"{cbs_ops/dt:.2f}Mops_def{cstats['deferred']}"
-            f"_r{cstats['rounds']}_n{cbs_ops}")
-
-        # Workload C: 50/50 read-write
-        half = OPS // 2
-        t0 = time.perf_counter()
-        t3, _ = B.insert_batch(tree, fresh[:half], newv[:half])
-        B.lookup_batch(t3, qh[:half], ql[:half])[0].block_until_ready()
-        dt = (time.perf_counter() - t0) * 1e6
-        row(f"wlC/bs/{dist}", dt, f"{OPS/dt:.2f}Mops")
-
-        # Workload D: 95% short ranges / 5% writes
-        nr = 9500
-        i = rng.integers(0, BUILD - 1, nr)
-        k1h, k1l = map(jnp.asarray, split_u64(build[i]))
-        k2h, k2l = map(jnp.asarray, split_u64(build[np.minimum(i + 150, BUILD - 1)]))
-        t0 = time.perf_counter()
-        vals, sel, _ = B.range_scan(tree, k1h, k1l, k2h, k2l, max_leaves=4)
-        sel.block_until_ready()
-        t4, _ = B.insert_batch(tree, fresh[:500], newv[:500])
-        dt = (time.perf_counter() - t0) * 1e6
-        row(f"wlD/bs/{dist}", dt, f"{(nr+500)/dt:.2f}Mops_avg153keys")
-
-        # Workload E: 60/35/5 read/write/delete
-        t0 = time.perf_counter()
-        t5, _ = B.insert_batch(tree, fresh[: int(OPS * 0.35)],
-                               newv[: int(OPS * 0.35)])
-        t5, nd = B.delete_batch(t5, rng.choice(build, int(OPS * 0.05)))
-        B.lookup_batch(t5, qh[: int(OPS * 0.6)], ql[: int(OPS * 0.6)])[
-            0].block_until_ready()
-        dt = (time.perf_counter() - t0) * 1e6
-        row(f"wlE/bs/{dist}", dt, f"{OPS/dt:.2f}Mops")
+    if args.json:
+        payload = {
+            "bench": "workloads",
+            "build_keys": args.build,
+            "ops": args.ops,
+            "backends": list(backends),
+            "jax_backend": jax.default_backend(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,27 +1,33 @@
-"""Quickstart: build, search and update a BS-tree / CBS-tree.
+"""Quickstart: one `Index` API over the BS-tree and the CBS-tree.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Everything below goes through the backend-agnostic facade
+(`repro.core.Index`); the §6 decision mechanism is just
+`IndexSpec(backend="auto")`.  The low-level modules (`repro.core.bstree`,
+`repro.core.compress`) stay available for device-level pipelines.
 """
 import numpy as np
 
-from repro.core import bstree as B
-from repro.core.compress import build_auto, cbs_lookup_u64
+from repro.core import Index, IndexSpec
 from repro.data.keys import gen_keys
 
 
 def main():
-    # --- build: the §6 decision mechanism picks BS or CBS per dataset ----
+    # --- build: the §6 decision mechanism picks the backend per dataset -
     for dist in ("books", "planet"):
         keys = gen_keys(dist, 200_000, seed=0)
-        kind, tree = build_auto(keys, n=128)
-        print(f"{dist}: decision -> {kind.upper()}-tree, "
-              f"{tree.memory_bytes()/len(keys):.2f} bytes/key")
+        idx = Index.build(keys, spec=IndexSpec(n=128, backend="auto"))
+        print(f"{dist}: decision -> {idx.backend.upper()}-tree, "
+              f"{idx.memory_bytes()/len(keys):.2f} bytes/key")
 
-    # --- uncompressed BS-tree: full workload ----------------------------
+    # --- full workload, identical calls on any backend ------------------
     keys = gen_keys("osm", 200_000, seed=0)
-    tree = B.bulk_load(keys, n=128)  # gapped bulk load, alpha=0.75
-    print(f"\nosm BS-tree: height={tree.height}, "
-          f"leaves={int(tree.num_leaves)}")
+    vals = np.arange(len(keys), dtype=np.uint32)
+    idx = Index.build(keys, vals, spec=IndexSpec(n=128, backend="bs"))
+    s = idx.stats()
+    print(f"\nosm {idx.backend.upper()}-tree: height={s['height']}, "
+          f"leaves={s['num_leaves']}")
 
     # batched lookups (Algorithm 3, branchless succ at every level)
     rng = np.random.default_rng(1)
@@ -29,36 +35,29 @@ def main():
         rng.choice(keys, 5000),
         rng.integers(0, 2**62, 5000, dtype=np.uint64),  # mostly absent
     ])
-    found, vals = B.lookup_u64(tree, queries)
+    found, got = idx.lookup(queries)
     print(f"lookup batch: {found.sum()} / {len(queries)} found")
 
     # batched upserts + deletes (Algorithms 5/6, gap-aware, branchless)
     fresh = rng.integers(0, 2**62, 10_000, dtype=np.uint64)
-    tree, stats = B.insert_batch(
-        tree, fresh, np.arange(len(fresh), dtype=np.uint32))
+    idx, stats = idx.insert(fresh, np.arange(len(fresh), dtype=np.uint32))
     print(f"insert batch: {stats}")
-    tree, n_deleted = B.delete_batch(tree, fresh[:2000])
-    print(f"delete batch: {n_deleted} deleted")
+    idx, dstats = idx.delete(fresh[:2000])
+    print(f"delete batch: {dstats['deleted']} deleted")
 
-    # range scan (Algorithm 4 with the gap-aware continuation rule)
-    import jax.numpy as jnp
-    from repro.core.layout import split_u64
-
+    # range scan / count (Algorithm 4 with the gap-aware continuation)
     lo, hi = np.sort(rng.choice(keys, 2))
-    k1h, k1l = split_u64(np.array([lo], np.uint64))
-    k2h, k2l = split_u64(np.array([hi], np.uint64))
-    vals, sel, truncated = B.range_scan(
-        tree, jnp.asarray(k1h), jnp.asarray(k1l),
-        jnp.asarray(k2h), jnp.asarray(k2l), max_leaves=32)
-    print(f"range [{lo}, {hi}]: {int(np.asarray(sel).sum())} keys "
-          f"(truncated={bool(truncated[0])})")
+    rkeys, rvals = idx.range_scan(lo, hi)
+    print(f"range [{lo}, {hi}]: {len(rkeys)} keys "
+          f"(count_range agrees: {idx.count_range(lo, hi) == len(rkeys)})")
 
-    # --- compressed CBS-tree --------------------------------------------
+    # --- compressed backend: same calls, keys-only flagged via property -
     ckeys = gen_keys("genome", 200_000, seed=0)
-    kind, ctree = build_auto(ckeys, n=128)
-    found, leaf, rank = cbs_lookup_u64(ctree, ckeys[:5000])
-    print(f"\ngenome {kind.upper()}-tree: {found.sum()}/5000 found, "
-          f"{ctree.memory_bytes()/len(ckeys):.2f} bytes/key")
+    cidx = Index.build(ckeys, spec=IndexSpec(n=128, backend="auto"))
+    found, pos = cidx.lookup(ckeys[:5000])  # pos = stable record position
+    print(f"\ngenome {cidx.backend.upper()}-tree: {found.sum()}/5000 found, "
+          f"{cidx.memory_bytes()/len(ckeys):.2f} bytes/key, "
+          f"supports_values={cidx.supports_values}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,12 @@
 """Core BS-tree library (the paper's contribution, in JAX).
 
+Public entry point: the backend-agnostic :class:`Index` facade
+(``from repro.core import Index, IndexSpec``) — one uniform u64 API over
+the plain BS-tree and the FOR-compressed CBS-tree, with the paper §6
+decision mechanism as ``backend="auto"``.
+
 Modules:
+  index       the Index facade + Backend protocol/registry  <- start here
   layout      node layout, MAXKEY, u64<->u32-plane helpers, derived bitmap
   succ        branchless successor operators (paper Snippet 1/2)
   reference   host-side scalar oracle (paper Algorithms 3-6)
@@ -46,3 +52,61 @@ from .compress import (  # noqa: F401
     decide,
 )
 from .reference import ReferenceBSTree  # noqa: F401
+from .index import (  # noqa: F401
+    Backend,
+    Index,
+    IndexSpec,
+    INSERT_STATS_KEYS,
+    backend_for_tree,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
+from .versioning import VersionedIndex  # noqa: F401
+
+__all__ = [
+    # facade (the public API surface)
+    "Backend",
+    "Index",
+    "IndexSpec",
+    "INSERT_STATS_KEYS",
+    "backend_for_tree",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
+    "VersionedIndex",
+    # layout / containers
+    "DEFAULT_ALPHA",
+    "DEFAULT_N",
+    "MAXKEY",
+    "BSTreeArrays",
+    "CBSTreeArrays",
+    "join_u64",
+    "split_u64",
+    "used_mask",
+    # succ operators
+    "searchsorted_left",
+    "searchsorted_right",
+    "succ_ge",
+    "succ_ge_plane",
+    "succ_gt",
+    "succ_gt_plane",
+    # low-level BS-tree (stable contracts; prefer Index)
+    "bulk_load",
+    "delete_batch",
+    "descend",
+    "insert_batch",
+    "lookup_batch",
+    "lookup_u64",
+    "range_scan",
+    # low-level CBS-tree (stable contracts; prefer Index)
+    "build_auto",
+    "cbs_bulk_load",
+    "cbs_delete_batch",
+    "cbs_insert_batch",
+    "cbs_lookup_batch",
+    "cbs_lookup_u64",
+    "decide",
+    # oracle
+    "ReferenceBSTree",
+]

@@ -294,7 +294,13 @@ def lookup_batch(tree: BSTreeArrays, q_hi: jnp.ndarray, q_lo: jnp.ndarray):
 
 
 def lookup_u64(tree: BSTreeArrays, keys_u64: np.ndarray):
-    """Convenience host API: u64 numpy keys in, (found, vals) numpy out."""
+    """Convenience host API: u64 numpy keys in, (found, vals) numpy out.
+
+    Stable low-level contract: returns exactly ``(found (B,) bool,
+    vals (B,) uint32)`` with ``vals == 0`` where not found.  This is the
+    shape the :class:`repro.core.index.Index` facade normalises every
+    backend to; most callers should go through ``Index.lookup`` instead.
+    """
     hi, lo = split_u64(keys_u64)
     found, vals = lookup_batch(tree, jnp.asarray(hi), jnp.asarray(lo))
     return np.asarray(found), np.asarray(vals)
@@ -680,10 +686,20 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
     room for its whole segment (no per-round host syncs); segments that
     exceed their leaf's free gaps are deferred whole to a host maintenance
     pass that performs paper-faithful splits (proactive gapping) and parent
-    separator insertion.  ``stats['rounds']`` counts device dispatches.
+    separator insertion.
+
+    Stable low-level contract — the stats dict has exactly the unified
+    schema shared with ``cbs_insert_batch``: ``requested`` (raw batch
+    length, before dedup), ``inserted`` (new keys added), ``present``
+    (keys that already existed; their value is overwritten), ``deferred``
+    (keys routed through the host split pass) and ``rounds`` (device
+    dispatches).  ``requested - inserted - present`` = batch-internal
+    duplicates (last occurrence wins).
     """
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
     vals = np.asarray(vals, dtype=np.uint32)
+    stats = {"requested": int(len(keys_u64)), "inserted": 0, "present": 0,
+             "deferred": 0, "rounds": 0}
     order = np.argsort(keys_u64, kind="stable")
     keys_u64, vals = keys_u64[order], vals[order]
     # batch-internal duplicates: keep the last occurrence (upsert semantics)
@@ -691,7 +707,6 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
         last = np.concatenate([keys_u64[1:] != keys_u64[:-1], [True]])
         keys_u64, vals = keys_u64[last], vals[last]
 
-    stats = {"inserted": 0, "upserted": 0, "deferred": 0, "rounds": 0}
     if len(keys_u64) == 0:
         return tree, stats
 
@@ -700,7 +715,7 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
     leaf = descend(tree, k_hi, k_lo)
     tree, n_ins, n_ups, overflow = _insert_merge(tree, k_hi, k_lo, v, leaf)
     stats["inserted"] = int(n_ins)
-    stats["upserted"] = int(n_ups)
+    stats["present"] = int(n_ups)
     stats["rounds"] = 1
 
     d = np.asarray(overflow)
@@ -711,7 +726,7 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
             tree, keys_u64[idx], vals[idx]
         )
         stats["inserted"] += h_ins
-        stats["upserted"] += h_ups
+        stats["present"] += h_ups
     return tree, stats
 
 

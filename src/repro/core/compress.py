@@ -382,6 +382,15 @@ def cbs_lookup_batch(tree: CBSTreeArrays, q_hi, q_lo):
 
 
 def cbs_lookup_u64(tree: CBSTreeArrays, keys_u64: np.ndarray):
+    """Convenience host API over :func:`cbs_lookup_batch`.
+
+    Stable low-level contract: returns ``(found (B,) bool, leaf (B,)
+    int32, rank (B,) int32)`` — the record id is the stable position
+    ``leaf * capacity + rank`` (module docstring).  This shape differs
+    from ``bstree.lookup_u64``; the :class:`repro.core.index.Index`
+    facade normalises both to ``(found, vals)`` — new callers should use
+    ``Index.lookup`` instead.
+    """
     hi, lo = split_u64(np.asarray(keys_u64, dtype=np.uint64))
     found, leaf, rank = cbs_lookup_batch(tree, jnp.asarray(hi), jnp.asarray(lo))
     return np.asarray(found), np.asarray(leaf), np.asarray(rank)
@@ -538,10 +547,21 @@ def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
     every tag width, predicated by tag); the rest (out-of-frame deltas,
     segments exceeding the leaf's free gaps) go through the host rebuild
     path, which re-splits the affected leaves choosing fresh narrowest
-    tags (paper §5 Insert).  ``stats['rounds']`` counts device dispatches.
+    tags (paper §5 Insert).
+
+    Stable low-level contract — the stats dict has exactly the unified
+    schema shared with ``bstree.insert_batch``: ``requested`` (raw batch
+    length, before dedup), ``inserted`` (new keys added), ``present``
+    (keys already in the tree; no-ops on this keys-only backend),
+    ``deferred`` (keys routed through the host rebuild) and ``rounds``
+    (device dispatches).  ``requested - inserted - present`` =
+    batch-internal duplicates, so requested-vs-applied accounting always
+    balances.
     """
-    keys_u64 = np.unique(np.asarray(keys_u64, dtype=np.uint64))
-    stats = {"inserted": 0, "deferred": 0, "rounds": 0, "present": 0}
+    keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+    stats = {"requested": int(len(keys_u64)), "inserted": 0, "present": 0,
+             "deferred": 0, "rounds": 0}
+    keys_u64 = np.unique(keys_u64)
     if len(keys_u64) == 0:
         return tree, stats
     hi, lo = split_u64(keys_u64)
@@ -734,7 +754,14 @@ def _cbs_host_rebuild(tree: CBSTreeArrays, new_keys: np.ndarray) -> CBSTreeArray
 
 def build_auto(keys: np.ndarray, *, n: int = DEFAULT_N, alpha: float = DEFAULT_ALPHA):
     """§6 decision mechanism: returns ('cbs', CBSTreeArrays) or
-    ('bs', BSTreeArrays) based on the key distribution."""
+    ('bs', BSTreeArrays) based on the key distribution.
+
+    .. deprecated:: thin compatibility shim.  The tagged-tuple return
+       forces callers to branch on kind and pick the matching function
+       family; use ``Index.build(keys, spec=IndexSpec(backend="auto"))``
+       from :mod:`repro.core.index`, which resolves the decision and
+       exposes one uniform API (``idx.backend`` reports the choice).
+    """
     from .bstree import bulk_load
 
     keys = np.asarray(keys, dtype=np.uint64)

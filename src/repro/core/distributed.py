@@ -1,10 +1,14 @@
-"""Range-partitioned BS-tree sharded across a device mesh.
+"""Range-partitioned index sharded across a device mesh — either backend.
 
 The paper scales the BS-tree across cores with OLC threads (§8.5).  The
 SPMD equivalent is a **range partition across the mesh's ``model`` axis**:
 device *m* owns the key range ``[fence[m], fence[m+1])`` as a complete
-local BS-tree, and a tiny replicated *fence* array (the top of the global
-tree, in effect) routes queries.  Query flow inside one ``shard_map``:
+local index, and a tiny replicated *fence* array (the top of the global
+tree, in effect) routes queries.  Since the facade refactor a shard holds
+*any* registered backend tree — the stacked container, the routing and
+the exchange are backend-agnostic; only the per-shard local lookup
+dispatches on the tree type (BS rows vs CBS blocks).  Query flow inside
+one ``shard_map``:
 
     1. target shard per query  = succ_gt(fences, q) - 1   (branchless!)
     2. bucket queries per target with a fixed per-peer capacity C
@@ -21,13 +25,13 @@ The ``pod`` axis composes two ways (DESIGN.md §5):
     (pass ``axis_name=('pod', 'model')``): maximal capacity, writes stay
     local to one pod.
 
-Updates take the host-orchestrated bulk path per shard (amortised, like
-splits); lookups are the fully-SPMD hot path.
+Updates take the host-orchestrated bulk path per shard through the
+``Index`` facade (amortised, like splits); lookups are the fully-SPMD hot
+path.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence, Union
 
 import jax
@@ -35,8 +39,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import bstree
-from .layout import BSTreeArrays, MAXKEY, join_u64, split_u64
+from .index import (
+    Index,
+    IndexSpec,
+    backend_for_tree,
+    get_backend,
+    resolve_backend,
+)
+from .layout import MAXKEY, join_u64, split_u64
 from .succ import succ_gt
 
 AxisName = Union[str, tuple[str, ...]]
@@ -45,57 +55,106 @@ AxisName = Union[str, tuple[str, ...]]
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ShardedBSTree:
-    """S stacked local BS-trees + replicated routing fences.
+    """S stacked local index trees + replicated routing fences.
 
-    Every array field of the local trees carries a leading shard dim S;
+    ``trees`` holds one backend's array container (``BSTreeArrays`` or
+    ``CBSTreeArrays``) with a leading shard dim S on every array field;
     heights are equalised at build time so the traversal is one static
-    program for all shards.
+    program for all shards.  ``backend`` names the registered backend all
+    shards share.
     """
 
-    trees: BSTreeArrays  # every array has leading dim S
+    trees: object  # BSTreeArrays | CBSTreeArrays, leading dim S everywhere
     fence_hi: jnp.ndarray  # (S,) uint32 — first key of each shard
     fence_lo: jnp.ndarray  # (S,) uint32
     num_shards: int = dataclasses.field(metadata=dict(static=True))
+    backend: str = dataclasses.field(default="bs", metadata=dict(static=True))
+
+    @property
+    def supports_values(self) -> bool:
+        return get_backend(self.backend).supports_values
 
     def memory_bytes(self) -> int:
         return self.trees.memory_bytes() + 8 * self.num_shards
 
 
-def _lift_height(tree: BSTreeArrays, target_height: int) -> BSTreeArrays:
+def _lift_height(tree, target_height: int):
     """Add single-child root levels until the tree has the target height
-    (keeps traversal static-shape-uniform across shards)."""
-    h = bstree.to_host(tree)
-    n = h["n"]
-    while h["height"] < target_height:
-        # append a root row whose child 0 is the old root
-        if h["num_inner"] >= h["inner_keys"].shape[0]:
-            h["inner_keys"] = np.vstack(
-                [h["inner_keys"], np.full((4, n), MAXKEY, np.uint64)]
-            )
-            h["inner_child"] = np.vstack(
-                [h["inner_child"], np.zeros((4, n), np.int32)]
-            )
-        rid = h["num_inner"]
-        h["inner_keys"][rid] = MAXKEY
-        h["inner_child"][rid] = 0
-        h["inner_child"][rid, 0] = h["root"]
-        h["root"] = rid
-        h["num_inner"] += 1
-        h["height"] += 1
-    return bstree.from_host(
-        leaf_keys=h["leaf_keys"], leaf_vals=h["leaf_vals"],
-        next_leaf=h["next_leaf"], inner_keys=h["inner_keys"],
-        inner_child=h["inner_child"], root=h["root"],
-        num_leaves=h["num_leaves"], num_inner=h["num_inner"],
-        height=h["height"], n=n,
+    (keeps traversal static-shape-uniform across shards).  Works on any
+    backend: inner levels share the uncompressed (hi, lo, child) layout."""
+    if tree.height >= target_height:
+        return tree
+    inner_hi = np.array(tree.inner_hi)
+    inner_lo = np.array(tree.inner_lo)
+    inner_child = np.array(tree.inner_child)
+    root = int(tree.root)
+    num_inner = int(tree.num_inner)
+    height = tree.height
+    n = tree.node_width
+    while height < target_height:
+        if num_inner >= inner_hi.shape[0]:
+            grow = max(4, inner_hi.shape[0] // 2)
+            inner_hi = np.vstack(
+                [inner_hi, np.full((grow, n), 0xFFFFFFFF, np.uint32)])
+            inner_lo = np.vstack(
+                [inner_lo, np.full((grow, n), 0xFFFFFFFF, np.uint32)])
+            inner_child = np.vstack(
+                [inner_child, np.zeros((grow, n), np.int32)])
+        inner_hi[num_inner] = 0xFFFFFFFF
+        inner_lo[num_inner] = 0xFFFFFFFF
+        inner_child[num_inner] = 0
+        inner_child[num_inner, 0] = root
+        root = num_inner
+        num_inner += 1
+        height += 1
+    return dataclasses.replace(
+        tree,
+        inner_hi=jnp.asarray(inner_hi),
+        inner_lo=jnp.asarray(inner_lo),
+        inner_child=jnp.asarray(inner_child),
+        root=jnp.asarray(root, jnp.int32),
+        num_inner=jnp.asarray(num_inner, jnp.int32),
+        height=height,
     )
 
 
-def _pad_rows(a: np.ndarray, rows: int, fill) -> np.ndarray:
-    if a.shape[0] >= rows:
-        return a
-    pad = np.full((rows - a.shape[0],) + a.shape[1:], fill, dtype=a.dtype)
-    return np.concatenate([a, pad], axis=0)
+def _pad_fill(name: str, dtype: np.dtype):
+    """Fill for capacity-padding rows (they sit past the used prefix and
+    are unreachable from root/chain; next_leaf must still terminate)."""
+    if name == "next_leaf":
+        return -1
+    if np.issubdtype(dtype, np.unsignedinteger):
+        return np.iinfo(dtype).max  # MAXKEY planes / sentinel words
+    return 0
+
+
+def _stack_trees(parts: list):
+    """Stack per-shard trees (same backend class) into one container with
+    a leading shard dim, lifting heights and padding capacities."""
+    cls = type(parts[0])
+    target_h = max(p.height for p in parts)
+    parts = [_lift_height(p, target_h) for p in parts]
+    kw = {}
+    for f in dataclasses.fields(cls):
+        if f.metadata.get("static"):
+            continue
+        arrs = [np.asarray(getattr(p, f.name)) for p in parts]
+        cap = max(a.shape[0] for a in arrs) if arrs[0].ndim else 0
+        fill = _pad_fill(f.name, arrs[0].dtype)
+        padded = []
+        for a in arrs:
+            if a.ndim and a.shape[0] < cap:
+                pad = np.full((cap - a.shape[0],) + a.shape[1:], fill,
+                              dtype=a.dtype)
+                a = np.concatenate([a, pad], axis=0)
+            padded.append(a)
+        kw[f.name] = jnp.asarray(np.stack(padded))
+    return cls(**kw, height=target_h, node_width=parts[0].node_width)
+
+
+def _shard_tree(st: ShardedBSTree, s: int):
+    """Slice out shard ``s`` as a standalone single-tree container."""
+    return jax.tree.map(lambda x: x[s], st.trees)
 
 
 def build_sharded(
@@ -105,45 +164,31 @@ def build_sharded(
     vals: Optional[np.ndarray] = None,
     n: int = 128,
     alpha: float = 0.75,
+    backend: str = "bs",
 ) -> ShardedBSTree:
     """Equal-count range partition of sorted unique u64 keys into
-    ``num_shards`` local BS-trees with uniform static shapes."""
+    ``num_shards`` local trees with uniform static shapes.
+
+    ``backend`` is any registered backend name or ``"auto"`` (the §6
+    decision mechanism, applied once to the whole key set so all shards
+    agree).  Keys-only backends reject ``vals``.
+    """
     keys = np.asarray(keys, dtype=np.uint64)
-    if vals is None:
-        vals = np.arange(len(keys), dtype=np.uint32)
+    backend = resolve_backend(backend, keys, n, has_values=vals is not None)
+    impl = get_backend(backend)
+    if vals is not None and not impl.supports_values:
+        raise ValueError(f"backend {backend!r} is keys-only; drop vals")
+    spec = IndexSpec(n=n, alpha=alpha, backend=backend)
     bounds = [len(keys) * s // num_shards for s in range(num_shards + 1)]
     parts = [
-        bstree.bulk_load(keys[bounds[s] : bounds[s + 1]],
-                         vals[bounds[s] : bounds[s + 1]], n=n, alpha=alpha)
+        impl.build(
+            keys[bounds[s]: bounds[s + 1]],
+            vals[bounds[s]: bounds[s + 1]] if vals is not None else None,
+            spec,
+        )
         for s in range(num_shards)
     ]
-    target_h = max(p.height for p in parts)
-    parts = [_lift_height(p, target_h) if p.height < target_h else p for p in parts]
-    hosts = [bstree.to_host(p) for p in parts]
-    lcap = max(h["leaf_keys"].shape[0] for h in hosts)
-    icap = max(h["inner_keys"].shape[0] for h in hosts)
-
-    def stack(field, cap, fill):
-        return np.stack([_pad_rows(h[field], cap, fill) for h in hosts])
-
-    leaf_keys = stack("leaf_keys", lcap, MAXKEY)
-    leaf_vals = stack("leaf_vals", lcap, 0)
-    next_leaf = np.stack([_pad_rows(h["next_leaf"], lcap, -1) for h in hosts])
-    inner_keys = stack("inner_keys", icap, MAXKEY)
-    inner_child = stack("inner_child", icap, 0)
-
-    lhi, llo = split_u64(leaf_keys)
-    ihi, ilo = split_u64(inner_keys)
-    trees = BSTreeArrays(
-        leaf_hi=jnp.asarray(lhi), leaf_lo=jnp.asarray(llo),
-        leaf_val=jnp.asarray(leaf_vals), next_leaf=jnp.asarray(next_leaf),
-        inner_hi=jnp.asarray(ihi), inner_lo=jnp.asarray(ilo),
-        inner_child=jnp.asarray(inner_child),
-        root=jnp.asarray([h["root"] for h in hosts], jnp.int32),
-        num_leaves=jnp.asarray([h["num_leaves"] for h in hosts], jnp.int32),
-        num_inner=jnp.asarray([h["num_inner"] for h in hosts], jnp.int32),
-        height=target_h, node_width=n,
-    )
+    trees = _stack_trees(parts)
     fences = np.array(
         [keys[bounds[s]] if bounds[s] < len(keys) else MAXKEY
          for s in range(num_shards)],
@@ -154,7 +199,7 @@ def build_sharded(
     fhi, flo = split_u64(fences)
     return ShardedBSTree(
         trees=trees, fence_hi=jnp.asarray(fhi), fence_lo=jnp.asarray(flo),
-        num_shards=num_shards,
+        num_shards=num_shards, backend=backend,
     )
 
 
@@ -169,41 +214,24 @@ def place_on_mesh(st: ShardedBSTree, mesh: Mesh, axis: AxisName) -> ShardedBSTre
 
     trees = jax.tree.map(shard_leaf, st.trees)
     rep = NamedSharding(mesh, P())
-    return ShardedBSTree(
+    return dataclasses.replace(
+        st,
         trees=trees,
         fence_hi=jax.device_put(st.fence_hi, rep),
         fence_lo=jax.device_put(st.fence_lo, rep),
-        num_shards=st.num_shards,
     )
 
 
-def _local_tree(trees: BSTreeArrays) -> BSTreeArrays:
+def _local_tree(trees):
     """Strip the leading (per-device) shard dim inside shard_map."""
-    sq = lambda x: x[0]
-    return BSTreeArrays(
-        leaf_hi=sq(trees.leaf_hi), leaf_lo=sq(trees.leaf_lo),
-        leaf_val=sq(trees.leaf_val), next_leaf=sq(trees.next_leaf),
-        inner_hi=sq(trees.inner_hi), inner_lo=sq(trees.inner_lo),
-        inner_child=sq(trees.inner_child), root=sq(trees.root),
-        num_leaves=sq(trees.num_leaves), num_inner=sq(trees.num_inner),
-        height=trees.height, node_width=trees.node_width,
-    )
+    return jax.tree.map(lambda x: x[0], trees)
 
 
-def _local_lookup(tree: BSTreeArrays, q_hi, q_lo):
-    n = tree.node_width
-    leaf = bstree.descend(tree, q_hi, q_lo)
-    rows_hi = tree.leaf_hi[leaf]
-    rows_lo = tree.leaf_lo[leaf]
-    from .succ import succ_ge
-
-    r = succ_ge(rows_hi, rows_lo, q_hi, q_lo)
-    rc = jnp.minimum(r, n - 1)
-    k_hi = jnp.take_along_axis(rows_hi, rc[:, None], axis=1)[:, 0]
-    k_lo = jnp.take_along_axis(rows_lo, rc[:, None], axis=1)[:, 0]
-    found = (r < n) & (k_hi == q_hi) & (k_lo == q_lo)
-    vals = jnp.take_along_axis(tree.leaf_val[leaf], rc[:, None], axis=1)[:, 0]
-    return found, jnp.where(found, vals, 0)
+def _local_lookup(tree, q_hi, q_lo):
+    """Per-shard batched lookup: dispatch to the registered backend's
+    device-level kernel — the same (found, vals) normalisation as the
+    facade, so new backends shard without touching this module."""
+    return backend_for_tree(tree).lookup_device(tree, q_hi, q_lo)
 
 
 def make_sharded_lookup(
@@ -218,6 +246,9 @@ def make_sharded_lookup(
     Returns ``lookup(st, q_hi, q_lo) -> (found, vals, overflow)`` where the
     query batch is sharded over (data_axes x model_axis) — every device
     contributes and receives its own slice, like MoE token dispatch.
+    Works with any backend the sharded index was built with; ``vals``
+    follows the facade contract (stored value, or record position on
+    keys-only backends).
     """
     model_axes = (model_axis,) if isinstance(model_axis, str) else tuple(model_axis)
     m_total = int(np.prod([mesh.shape[a] for a in model_axes]))
@@ -286,7 +317,8 @@ def make_sharded_lookup(
     cache: dict = {}
 
     def lookup(st: ShardedBSTree, q_hi, q_lo):
-        key = (st.trees.height, st.trees.node_width, st.num_shards)
+        key = (st.backend, st.trees.height, st.trees.node_width,
+               st.num_shards)
         if key not in cache:
             tree_specs = jax.tree.map(lambda _: P(model_axes), st.trees)
             kwargs = dict(
@@ -307,93 +339,54 @@ def make_sharded_lookup(
 
 
 # ---------------------------------------------------------------------------
-# Host-orchestrated sharded updates (bulk maintenance path)
+# Host-orchestrated sharded updates (bulk maintenance path, via the facade)
 # ---------------------------------------------------------------------------
 
-def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray, vals: np.ndarray):
-    """Route new keys by fence and apply the local bulk insert per shard.
-    Returns (ShardedBSTree, total stats).  Host path — see module docstring."""
-    keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
-    vals = np.asarray(vals, dtype=np.uint32)
+def _route(st: ShardedBSTree, keys_u64: np.ndarray) -> np.ndarray:
     fences = join_u64(np.asarray(st.fence_hi), np.asarray(st.fence_lo))
-    tgt = np.clip(np.searchsorted(fences, keys_u64, side="right") - 1, 0, None)
-    hosts = _unstack_hosts(st)
-    stats = {"inserted": 0, "upserted": 0, "deferred": 0}
+    return np.clip(np.searchsorted(fences, keys_u64, side="right") - 1, 0, None)
+
+
+def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray,
+                   vals: Optional[np.ndarray] = None):
+    """Route new keys by fence and apply the local bulk insert per shard
+    through the ``Index`` facade.  Returns (ShardedBSTree, total stats)
+    with the unified ``{requested, inserted, present, deferred, rounds}``
+    schema.  Host path — see module docstring."""
+    keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+    if vals is not None:
+        vals = np.asarray(vals, dtype=np.uint32)
+    tgt = _route(st, keys_u64)
+    spec = IndexSpec(n=st.trees.node_width, backend=st.backend)
+    parts = [_shard_tree(st, s) for s in range(st.num_shards)]
+    stats = {"requested": int(len(keys_u64)), "inserted": 0, "present": 0,
+             "deferred": 0, "rounds": 0}
     for s in range(st.num_shards):
         mask = tgt == s
         if not mask.any():
             continue
-        local = bstree.from_host(**hosts[s])
-        local, s_stats = bstree.insert_batch(local, keys_u64[mask], vals[mask])
-        hosts[s] = bstree.to_host(local)
-        for k in ("inserted", "upserted", "deferred"):
+        idx = Index(tree=parts[s], backend=st.backend, spec=spec)
+        idx, s_stats = idx.insert(
+            keys_u64[mask], vals[mask] if vals is not None else None)
+        parts[s] = idx.tree
+        for k in ("inserted", "present", "deferred", "rounds"):
             stats[k] += s_stats[k]
-    return _restack(st, hosts), stats
+    return dataclasses.replace(st, trees=_stack_trees(parts)), stats
 
 
 def delete_sharded(st: ShardedBSTree, keys_u64: np.ndarray):
+    """Route deletions by fence; returns (ShardedBSTree, n_deleted)."""
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
-    fences = join_u64(np.asarray(st.fence_hi), np.asarray(st.fence_lo))
-    tgt = np.clip(np.searchsorted(fences, keys_u64, side="right") - 1, 0, None)
-    hosts = _unstack_hosts(st)
+    tgt = _route(st, keys_u64)
+    spec = IndexSpec(n=st.trees.node_width, backend=st.backend)
+    parts = [_shard_tree(st, s) for s in range(st.num_shards)]
     deleted = 0
     for s in range(st.num_shards):
         mask = tgt == s
         if not mask.any():
             continue
-        local = bstree.from_host(**hosts[s])
-        local, nd = bstree.delete_batch(local, keys_u64[mask])
-        hosts[s] = bstree.to_host(local)
-        deleted += nd
-    return _restack(st, hosts), deleted
-
-
-def _unstack_hosts(st: ShardedBSTree) -> list[dict]:
-    t = st.trees
-    lk = join_u64(np.asarray(t.leaf_hi), np.asarray(t.leaf_lo))
-    ik = join_u64(np.asarray(t.inner_hi), np.asarray(t.inner_lo))
-    lv = np.array(t.leaf_val)
-    nl = np.array(t.next_leaf)
-    ic = np.array(t.inner_child)
-    roots = np.asarray(t.root)
-    n_l = np.asarray(t.num_leaves)
-    n_i = np.asarray(t.num_inner)
-    return [
-        dict(
-            leaf_keys=lk[s].copy(), leaf_vals=lv[s].copy(), next_leaf=nl[s].copy(),
-            inner_keys=ik[s].copy(), inner_child=ic[s].copy(),
-            root=int(roots[s]), num_leaves=int(n_l[s]), num_inner=int(n_i[s]),
-            height=t.height, n=t.node_width,
-        )
-        for s in range(st.num_shards)
-    ]
-
-
-def _restack(st: ShardedBSTree, hosts: list[dict]) -> ShardedBSTree:
-    target_h = max(h["height"] for h in hosts)
-    parts = [bstree.from_host(**h) for h in hosts]
-    parts = [_lift_height(p, target_h) if p.height < target_h else p for p in parts]
-    hosts = [bstree.to_host(p) for p in parts]
-    lcap = max(h["leaf_keys"].shape[0] for h in hosts)
-    icap = max(h["inner_keys"].shape[0] for h in hosts)
-    leaf_keys = np.stack([_pad_rows(h["leaf_keys"], lcap, MAXKEY) for h in hosts])
-    leaf_vals = np.stack([_pad_rows(h["leaf_vals"], lcap, 0) for h in hosts])
-    next_leaf = np.stack([_pad_rows(h["next_leaf"], lcap, -1) for h in hosts])
-    inner_keys = np.stack([_pad_rows(h["inner_keys"], icap, MAXKEY) for h in hosts])
-    inner_child = np.stack([_pad_rows(h["inner_child"], icap, 0) for h in hosts])
-    lhi, llo = split_u64(leaf_keys)
-    ihi, ilo = split_u64(inner_keys)
-    trees = BSTreeArrays(
-        leaf_hi=jnp.asarray(lhi), leaf_lo=jnp.asarray(llo),
-        leaf_val=jnp.asarray(leaf_vals), next_leaf=jnp.asarray(next_leaf),
-        inner_hi=jnp.asarray(ihi), inner_lo=jnp.asarray(ilo),
-        inner_child=jnp.asarray(inner_child),
-        root=jnp.asarray([h["root"] for h in hosts], jnp.int32),
-        num_leaves=jnp.asarray([h["num_leaves"] for h in hosts], jnp.int32),
-        num_inner=jnp.asarray([h["num_inner"] for h in hosts], jnp.int32),
-        height=target_h, node_width=st.trees.node_width,
-    )
-    return ShardedBSTree(
-        trees=trees, fence_hi=st.fence_hi, fence_lo=st.fence_lo,
-        num_shards=st.num_shards,
-    )
+        idx = Index(tree=parts[s], backend=st.backend, spec=spec)
+        idx, d_stats = idx.delete(keys_u64[mask])
+        parts[s] = idx.tree
+        deleted += d_stats["deleted"]
+    return dataclasses.replace(st, trees=_stack_trees(parts)), deleted

@@ -1,0 +1,473 @@
+"""Unified ``Index`` facade: one backend-agnostic API over BS and CBS trees.
+
+The paper's §6 decision mechanism treats the plain BS-tree and the
+FOR-compressed CBS-tree as two interchangeable builds of the *same* index.
+This module makes that literal: :class:`Index` is a pytree-registered
+handle holding one backend tree (``BSTreeArrays`` or ``CBSTreeArrays``)
+plus the backend name, and every operation takes/returns plain u64 numpy
+keys — the hi/lo plane split, the CBS delta frames, and the
+rank-is-the-record convention are internal details of the backends.
+
+Backends register through the :class:`Backend` protocol (see
+``register_backend``), so new node representations — different tag widths,
+learned leaves, GPU layouts — plug in without touching any caller:
+
+    spec = IndexSpec(n=128, backend="auto")      # §6 decision mechanism
+    idx  = Index.build(keys, vals, spec=spec)
+    found, vals = idx.lookup(queries)            # same shape on any backend
+    idx, stats  = idx.insert(new_keys)           # functional update
+    ks, vs      = idx.range_scan(lo, hi)
+
+Capability differences are surfaced as *flags*, not signature divergence:
+the CBS backend stores keys only (the paper's evaluated configuration), so
+``idx.supports_values`` is False and ``lookup`` returns the stable record
+*position* ``leaf * 4n + rank`` instead of a stored value; passing values
+to a keys-only backend raises ``ValueError`` instead of silently dropping
+them.
+
+Hot paths: the facade's batch entry points (``lookup``, ``insert``,
+``delete`` and the device-level ``lookup_batch``) dispatch straight to the
+backends' jitted kernels.  ``range_scan`` / ``count_range`` / ``items``
+are host conveniences that walk the leaf chain (device descent to the
+start leaf, then per-leaf row fetches); throughput-critical range code
+should use the device kernels ``bstree.range_scan`` /
+``compress.cbs_range_scan`` directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bstree as _bs
+from . import compress as _cbs
+from .layout import (
+    DEFAULT_ALPHA,
+    DEFAULT_N,
+    MAXKEY,
+    BSTreeArrays,
+    join_u64,
+    split_u64,
+    used_mask,
+)
+
+__all__ = [
+    "Backend",
+    "Index",
+    "IndexSpec",
+    "INSERT_STATS_KEYS",
+    "backend_for_tree",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
+]
+
+#: The unified insert-stats schema every backend must emit (satellite of
+#: the facade contract; asserted by tests/test_index_api.py).
+INSERT_STATS_KEYS = frozenset(
+    {"requested", "inserted", "present", "deferred", "rounds"}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Build-time configuration, shared verbatim by all backends.
+
+    ``backend`` is ``"bs"``, ``"cbs"`` or ``"auto"`` (the paper §6
+    decision mechanism picks per key distribution).  Hashable so it can
+    ride in the static part of the :class:`Index` pytree.
+    """
+
+    n: int = DEFAULT_N
+    alpha: float = DEFAULT_ALPHA
+    backend: str = "auto"
+    slack: float = 1.5
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a pluggable node representation must provide.
+
+    All keys cross this boundary as u64 numpy arrays; trees are immutable
+    pytrees (functional updates return new trees).  ``insert`` must emit
+    the :data:`INSERT_STATS_KEYS` schema.
+    """
+
+    name: str
+    supports_values: bool
+    tree_cls: type  # array container this backend owns (for inference)
+
+    def build(self, keys: np.ndarray, vals: Optional[np.ndarray],
+              spec: IndexSpec) -> Any: ...
+
+    def lookup_device(self, tree: Any, q_hi: jnp.ndarray,
+                      q_lo: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+
+    def insert(self, tree: Any, keys: np.ndarray,
+               vals: Optional[np.ndarray]) -> tuple[Any, dict]: ...
+
+    def delete(self, tree: Any, keys: np.ndarray) -> tuple[Any, int]: ...
+
+    def start_leaf(self, tree: Any, key: np.uint64) -> int: ...
+
+    def leaf_items(self, tree: Any, leaf: int
+                   ) -> tuple[np.ndarray, Optional[np.ndarray]]: ...
+
+    def next_leaves(self, tree: Any) -> np.ndarray: ...
+
+    def num_keys(self, tree: Any) -> int: ...
+
+    def check(self, tree: Any) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# BS backend (uncompressed gapped nodes, stores values)
+# ---------------------------------------------------------------------------
+
+
+class _BSBackend:
+    name = "bs"
+    supports_values = True
+    tree_cls = BSTreeArrays
+
+    def build(self, keys, vals, spec: IndexSpec):
+        if vals is None:
+            vals = _default_vals(keys)  # same default as insert()
+        return _bs.bulk_load(keys, vals, n=spec.n, alpha=spec.alpha,
+                             slack=spec.slack)
+
+    def lookup_device(self, tree, q_hi, q_lo):
+        return _bs.lookup_batch(tree, q_hi, q_lo)
+
+    def insert(self, tree, keys, vals):
+        if vals is None:
+            vals = _default_vals(keys)
+        return _bs.insert_batch(tree, keys, vals)
+
+    def delete(self, tree, keys):
+        return _bs.delete_batch(tree, keys)
+
+    def start_leaf(self, tree, key):
+        hi, lo = split_u64(np.array([key], np.uint64))
+        return int(_bs.descend(tree, jnp.asarray(hi), jnp.asarray(lo))[0])
+
+    def leaf_items(self, tree, leaf):
+        row_hi, row_lo = tree.leaf_hi[leaf], tree.leaf_lo[leaf]
+        used = np.asarray(used_mask(row_hi, row_lo))
+        keys = join_u64(np.asarray(row_hi), np.asarray(row_lo))
+        vals = np.asarray(tree.leaf_val[leaf])
+        return keys[used], vals[used]
+
+    def next_leaves(self, tree):
+        return np.asarray(tree.next_leaf)
+
+    def num_keys(self, tree):
+        from .layout import slot_use
+
+        L = int(tree.num_leaves)
+        return int(jnp.sum(slot_use(tree.leaf_hi[:L], tree.leaf_lo[:L])))
+
+    def check(self, tree):
+        _bs.check_invariants(tree)
+
+
+# ---------------------------------------------------------------------------
+# CBS backend (FOR-compressed leaves, keys only)
+# ---------------------------------------------------------------------------
+
+
+class _CBSBackend:
+    name = "cbs"
+    supports_values = False
+    tree_cls = _cbs.CBSTreeArrays
+
+    def build(self, keys, vals, spec: IndexSpec):
+        return _cbs.cbs_bulk_load(keys, n=spec.n, alpha=spec.alpha,
+                                  slack=spec.slack)
+
+    def lookup_device(self, tree, q_hi, q_lo):
+        return _cbs_lookup_normalised(tree, q_hi, q_lo)
+
+    def insert(self, tree, keys, vals):
+        if vals is not None:
+            raise ValueError(
+                "cbs backend is keys-only (Index.supports_values is False); "
+                "drop the vals argument or build with backend='bs'"
+            )
+        return _cbs.cbs_insert_batch(tree, keys)
+
+    def delete(self, tree, keys):
+        return _cbs.cbs_delete_batch(tree, keys)
+
+    def start_leaf(self, tree, key):
+        hi, lo = split_u64(np.array([key], np.uint64))
+        _, leaf, _ = _cbs.cbs_lookup_batch(tree, jnp.asarray(hi),
+                                           jnp.asarray(lo))
+        return int(leaf[0])
+
+    def leaf_items(self, tree, leaf):
+        words = np.asarray(tree.leaf_words[leaf])
+        tag = int(tree.leaf_tag[leaf])
+        k0 = join_u64(np.asarray(tree.leaf_k0_hi[leaf]),
+                      np.asarray(tree.leaf_k0_lo[leaf]))
+        keys = _cbs._leaf_keys_host(words, tag, k0, tree.node_width)
+        return keys, None
+
+    def next_leaves(self, tree):
+        return np.asarray(tree.next_leaf)
+
+    def num_keys(self, tree):
+        return len(_cbs.cbs_items(tree))
+
+    def check(self, tree):
+        keys = _cbs.cbs_items(tree)
+        assert (keys[:-1] < keys[1:]).all(), "leaf chain out of order"
+
+
+@jax.jit
+def _cbs_lookup_normalised(tree, q_hi, q_lo):
+    """One fused dispatch: cbs kernel + the (found, leaf, rank) ->
+    (found, record position) normalisation, position = leaf * 4n + rank
+    (rank-is-the-record, module docstring of compress)."""
+    found, leaf, rank = _cbs.cbs_lookup_batch(tree, q_hi, q_lo)
+    cap = 4 * tree.node_width
+    pos = (leaf.astype(jnp.uint32) * jnp.uint32(cap)
+           + rank.astype(jnp.uint32))
+    return found, jnp.where(found, pos, 0)
+
+
+def _default_vals(keys: np.ndarray) -> np.ndarray:
+    """Value stored when the caller gives none — the key's low 32 bits
+    (deterministic, recomputable from the key itself, and identical for
+    build and insert so a no-op re-insert never changes a value)."""
+    return (np.asarray(keys, np.uint64) & np.uint64(0xFFFFFFFF)).astype(
+        np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> None:
+    """Register a node representation under ``backend.name``."""
+    _BACKENDS[backend.name] = backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown index backend {name!r}; registered: "
+            f"{sorted(_BACKENDS)}"
+        ) from None
+
+
+def backend_for_tree(tree: Any) -> Backend:
+    """The registered backend whose array container ``tree`` is."""
+    for impl in _BACKENDS.values():
+        if isinstance(tree, impl.tree_cls):
+            return impl
+    raise KeyError(
+        f"no registered backend owns tree type {type(tree).__name__}; "
+        f"registered: {sorted(_BACKENDS)}"
+    )
+
+
+def resolve_backend(name: str, keys: np.ndarray, n: int, *,
+                    has_values: bool = False) -> str:
+    """Resolve ``"auto"`` to a concrete backend name — the single home of
+    the paper §6 decision rule, shared by ``Index.build`` and the sharded
+    builder.  ``has_values`` restricts auto to value-bearing backends."""
+    if name != "auto":
+        return name
+    if has_values:
+        return "bs"
+    return "cbs" if _cbs.decide(keys, n) else "bs"
+
+
+register_backend(_BSBackend())
+register_backend(_CBSBackend())
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Index:
+    """One index, any backend.  Immutable pytree — jit/shard/donate freely.
+
+    ``tree`` is the backend's array container; ``backend`` is the
+    *resolved* backend name (``"auto"`` is resolved at build time and
+    never stored).  ``spec`` keeps the build configuration for functional
+    rebuilds.
+    """
+
+    tree: Any
+    backend: str = dataclasses.field(metadata=dict(static=True))
+    spec: IndexSpec = dataclasses.field(metadata=dict(static=True))
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def build(cls, keys: np.ndarray, vals: Optional[np.ndarray] = None,
+              spec: Optional[IndexSpec] = None, **spec_kw) -> "Index":
+        """Build an index from u64 keys (sorted or not; duplicates keep
+        the last value).  ``spec.backend="auto"`` applies the paper §6
+        decision mechanism; when ``vals`` are supplied, auto restricts
+        itself to value-bearing backends.  A missing ``vals`` on a
+        value-bearing backend stores each key's low 32 bits — the same
+        default as :meth:`insert`.
+        """
+        if spec is None:
+            spec = IndexSpec(**spec_kw)
+        elif spec_kw:
+            spec = dataclasses.replace(spec, **spec_kw)
+        keys = np.asarray(keys, dtype=np.uint64)
+        order = np.argsort(keys, kind="stable")
+        keys_s = keys[order]
+        last = np.ones(len(keys_s), bool)
+        if len(keys_s) > 1:
+            last[:-1] = keys_s[:-1] != keys_s[1:]
+        keys_u = keys_s[last]
+        vals_u = None
+        if vals is not None:
+            vals_u = np.asarray(vals, dtype=np.uint32)[order][last]
+
+        name = resolve_backend(spec.backend, keys_u, spec.n,
+                               has_values=vals is not None)
+        impl = get_backend(name)
+        if vals_u is not None and not impl.supports_values:
+            raise ValueError(
+                f"backend {name!r} is keys-only; drop vals or use 'bs'")
+        return cls(tree=impl.build(keys_u, vals_u, spec), backend=name,
+                   spec=spec)
+
+    @classmethod
+    def wrap(cls, tree: Any, spec: Optional[IndexSpec] = None) -> "Index":
+        """Adopt an existing backend tree (type infers the backend via
+        the registry; unknown tree types raise ``KeyError``)."""
+        name = backend_for_tree(tree).name
+        if spec is None:
+            spec = IndexSpec(n=tree.node_width, backend=name)
+        return cls(tree=tree, backend=name, spec=spec)
+
+    # -- capabilities ----------------------------------------------------
+    @property
+    def impl(self) -> Backend:
+        return get_backend(self.backend)
+
+    @property
+    def supports_values(self) -> bool:
+        return self.impl.supports_values
+
+    # -- reads -----------------------------------------------------------
+    def lookup(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched equality search.  Returns ``(found (B,) bool,
+        vals (B,) uint32)``; on a keys-only backend ``vals`` is the stable
+        record position ``leaf * 4n + rank`` (0 where not found)."""
+        hi, lo = split_u64(np.asarray(keys, dtype=np.uint64))
+        found, vals = self.impl.lookup_device(
+            self.tree, jnp.asarray(hi), jnp.asarray(lo))
+        return np.asarray(found), np.asarray(vals)
+
+    def lookup_batch(self, q_hi: jnp.ndarray, q_lo: jnp.ndarray):
+        """Device-level lookup on u32 key planes (for jit pipelines and
+        benchmarks); same normalised ``(found, vals)`` contract."""
+        return self.impl.lookup_device(self.tree, q_hi, q_lo)
+
+    def _range_leaves(self, lo: np.uint64, hi: np.uint64):
+        """Yield per-leaf ``(keys, vals|None)`` already masked to
+        ``[lo, hi]`` — the shared walk under range_scan/count_range."""
+        impl = self.impl
+        nxt = impl.next_leaves(self.tree)
+        leaf = impl.start_leaf(self.tree, lo)
+        while leaf != -1:
+            ks, vs = impl.leaf_items(self.tree, leaf)
+            sel = (ks >= lo) & (ks <= hi)
+            yield ks[sel], (vs[sel] if vs is not None else None)
+            if len(ks) and ks[-1] > hi:
+                return
+            leaf = int(nxt[leaf])
+
+    def range_scan(self, lo, hi) -> tuple[np.ndarray, Optional[np.ndarray]]:
+        """All keys in ``[lo, hi]`` (inclusive), in order, with their
+        values (``None`` on keys-only backends).  Host convenience —
+        device descent to the start leaf, then a leaf-chain walk."""
+        lo, hi = np.uint64(lo), np.uint64(hi)
+        out_k, out_v = [], []
+        if lo <= hi:
+            for ks, vs in self._range_leaves(lo, hi):
+                out_k.append(ks)
+                if vs is not None:
+                    out_v.append(vs)
+        keys = (np.concatenate(out_k) if out_k else np.zeros(0, np.uint64))
+        if not self.supports_values:
+            return keys, None
+        vals = (np.concatenate(out_v) if out_v else np.zeros(0, np.uint32))
+        return keys, vals
+
+    def count_range(self, lo, hi) -> int:
+        """Exact number of keys in ``[lo, hi]`` (inclusive); counts
+        during the walk without materialising the range."""
+        lo, hi = np.uint64(lo), np.uint64(hi)
+        if lo > hi:
+            return 0
+        return sum(len(ks) for ks, _ in self._range_leaves(lo, hi))
+
+    def items(self) -> tuple[np.ndarray, Optional[np.ndarray]]:
+        """All (key, value) pairs in key order (values ``None`` on
+        keys-only backends).  Host-side full walk."""
+        return self.range_scan(np.uint64(0), MAXKEY - np.uint64(1))
+
+    # -- writes (functional) ---------------------------------------------
+    def insert(self, keys: np.ndarray, vals: Optional[np.ndarray] = None
+               ) -> tuple["Index", dict]:
+        """Batched upsert.  Returns ``(new Index, stats)`` where stats has
+        exactly the unified schema ``{requested, inserted, present,
+        deferred, rounds}``.  On value-bearing backends a missing ``vals``
+        stores each key's low 32 bits; on keys-only backends passing
+        ``vals`` raises ``ValueError``."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        tree, stats = self.impl.insert(self.tree, keys, vals)
+        assert set(stats) == INSERT_STATS_KEYS, sorted(stats)
+        return dataclasses.replace(self, tree=tree), stats
+
+    def delete(self, keys: np.ndarray) -> tuple["Index", dict]:
+        """Batched delete.  Returns ``(new Index, {requested, deleted})``."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        tree, n = self.impl.delete(self.tree, keys)
+        return (dataclasses.replace(self, tree=tree),
+                {"requested": int(len(keys)), "deleted": int(n)})
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> dict:
+        """Cheap structural summary (num_keys does one host pass)."""
+        t = self.tree
+        return {
+            "backend": self.backend,
+            "supports_values": self.supports_values,
+            "node_width": t.node_width,
+            "height": t.height,
+            "num_leaves": int(t.num_leaves),
+            "num_inner": int(t.num_inner),
+            "num_keys": self.impl.num_keys(t),
+            "memory_bytes": self.memory_bytes(),
+        }
+
+    def memory_bytes(self) -> int:
+        return self.tree.memory_bytes()
+
+    def check_invariants(self) -> None:
+        self.impl.check(self.tree)
+
+    def __len__(self) -> int:
+        return self.impl.num_keys(self.tree)

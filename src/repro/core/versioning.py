@@ -27,7 +27,9 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Generic, Optional, TypeVar
+
+T = TypeVar("T")
 
 
 @dataclass
@@ -37,10 +39,17 @@ class _Version:
     refs: int = 0
 
 
-class VersionedIndex:
-    """Thread-safe MVCC wrapper around an immutable index pytree."""
+class VersionedIndex(Generic[T]):
+    """Thread-safe MVCC wrapper around an immutable index pytree.
 
-    def __init__(self, initial: Any):
+    The canonical payload is the backend-agnostic
+    :class:`repro.core.index.Index` facade — e.g.
+    ``VersionedIndex(Index.build(keys, spec=spec))`` with updates like
+    ``vi.update(lambda ix: ix.insert(batch)[0])`` — but any immutable
+    pytree value works (the wrapper never inspects it).
+    """
+
+    def __init__(self, initial: T):
         self._lock = threading.Lock()
         self._current = _Version(initial, 0)
         self._pinned: dict[int, _Version] = {}
@@ -51,7 +60,7 @@ class VersionedIndex:
             return self._current.version
 
     # -- readers ---------------------------------------------------------
-    def pin(self) -> tuple[int, Any]:
+    def pin(self) -> tuple[int, T]:
         """Acquire a consistent snapshot; pair with :meth:`unpin`."""
         with self._lock:
             v = self._current
@@ -85,7 +94,7 @@ class VersionedIndex:
         return VersionedIndex._Snapshot(self)
 
     # -- writers ---------------------------------------------------------
-    def commit(self, base_version: int, new_value: Any) -> bool:
+    def commit(self, base_version: int, new_value: T) -> bool:
         """Optimistic commit: succeeds iff ``base_version`` is current."""
         with self._lock:
             if self._current.version != base_version:
@@ -98,10 +107,10 @@ class VersionedIndex:
 
     def update(
         self,
-        fn: Callable[[Any], Any],
+        fn: Callable[[T], T],
         *,
         max_retries: int = 8,
-    ) -> tuple[int, Any]:
+    ) -> tuple[int, T]:
         """OLC-style optimistic update loop: apply ``fn`` to the current
         value; on conflict (concurrent commit) rebase and retry — the
         functional analogue of 'roll back and retry from the root'."""

@@ -4,43 +4,43 @@ A real in-memory-index workload inside the framework: the engine maps
 ``request_id (u64) -> slot`` (KV-cache slot / page-table root) with
 admissions (inserts), completions (deletes) and lookups on every step —
 exactly the read/write mix of the paper's Workload E.  Backed by the
-versioned functional BS-tree, so concurrent readers (e.g. metric scrapes)
-pin consistent snapshots while the engine commits new versions (§7 OLC
-adaptation)."""
+versioned, backend-agnostic ``Index`` facade, so concurrent readers
+(e.g. metric scrapes) pin consistent snapshots while the engine commits
+new versions (§7 OLC adaptation)."""
 from __future__ import annotations
 
 from typing import Optional
 
 import numpy as np
 
-from repro.core import bstree
+from repro.core.index import Index, IndexSpec
 from repro.core.versioning import VersionedIndex
 
 
 class RequestIndex:
-    def __init__(self, *, node_width: int = 16):
+    def __init__(self, *, node_width: int = 16, backend: str = "bs"):
+        spec = IndexSpec(n=node_width, backend=backend)
+        empty = Index.build(np.zeros(0, np.uint64), spec=spec)
+        if not empty.supports_values:
+            raise ValueError(
+                "RequestIndex maps id -> slot and needs a value-bearing "
+                f"backend; {empty.backend!r} is keys-only")
         self.n = node_width
-        empty = bstree.bulk_load(np.zeros(0, np.uint64), n=node_width)
-        self.idx = VersionedIndex(empty)
+        self.idx: VersionedIndex[Index] = VersionedIndex(empty)
 
     def admit(self, request_ids: np.ndarray, slots: np.ndarray) -> None:
         ids = np.asarray(request_ids, dtype=np.uint64)
         slots = np.asarray(slots, dtype=np.uint32)
-
-        def fn(tree):
-            tree, _ = bstree.insert_batch(tree, ids, slots)
-            return tree
-
-        self.idx.update(fn)
+        self.idx.update(lambda ix: ix.insert(ids, slots)[0])
 
     def complete(self, request_ids: np.ndarray) -> int:
         ids = np.asarray(request_ids, dtype=np.uint64)
         removed = []
 
-        def fn(tree):
-            tree, n = bstree.delete_batch(tree, ids)
-            removed.append(n)
-            return tree
+        def fn(ix: Index) -> Index:
+            ix, stats = ix.delete(ids)
+            removed.append(stats["deleted"])
+            return ix
 
         self.idx.update(fn)
         return removed[-1]
@@ -48,8 +48,9 @@ class RequestIndex:
     def lookup(self, request_ids: np.ndarray):
         ids = np.asarray(request_ids, dtype=np.uint64)
         with self.idx.snapshot() as s:
-            return bstree.lookup_u64(s.value, ids)
+            return s.value.lookup(ids)
 
     def __len__(self) -> int:
         with self.idx.snapshot() as s:
-            return len(bstree.check_invariants(s.value))
+            s.value.check_invariants()
+            return len(s.value)

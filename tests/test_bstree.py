@@ -47,7 +47,7 @@ def test_upsert_semantics(rng, keys_10k):
     sub = keys_10k[100:200]
     newv = np.full(len(sub), 777, dtype=np.uint32)
     t, stats = B.insert_batch(t, sub, newv)
-    assert stats["upserted"] == len(sub)
+    assert stats["present"] == len(sub)
     found, vals = B.lookup_u64(t, sub)
     assert found.all() and (vals == 777).all()
 

@@ -61,11 +61,17 @@ def test_cbs_updates_vs_model(rng):
     ("books", "bs"), ("osm", "bs"), ("fb", "cbs"), ("genome", "cbs"),
     ("planet", "cbs"),
 ])
-def test_build_auto_on_paper_distributions(dist, expect):
+def test_backend_decision_on_paper_distributions(dist, expect):
     # paper §8.2: the mechanism picks BS for BOOKS/OSM, CBS for the rest
+    from repro.core import Index, IndexSpec
+
     keys = gen_keys(dist, 30000, seed=1)
-    kind, tree = C.build_auto(keys, n=128)
-    assert kind == expect, f"{dist}: decided {kind}, paper behaviour {expect}"
+    idx = Index.build(keys, spec=IndexSpec(n=128, backend="auto"))
+    assert idx.backend == expect, (
+        f"{dist}: decided {idx.backend}, paper behaviour {expect}")
+    # the deprecated build_auto shim agrees with the facade
+    kind, _ = C.build_auto(keys, n=128)
+    assert kind == expect
 
 
 def test_cbs_memory_smaller_on_compressible(rng):

@@ -1,0 +1,226 @@
+"""Backend conformance suite for the unified ``Index`` facade.
+
+One battery of build / lookup / insert / delete / range / count cases
+runs identically over ``backend in ("bs", "cbs", "auto")``, cross-checked
+against the scalar ``ReferenceBSTree`` oracle.  Capability differences
+(values vs keys-only) are exercised through ``Index.supports_values``,
+never through divergent call shapes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    INSERT_STATS_KEYS,
+    Index,
+    IndexSpec,
+    ReferenceBSTree,
+    decide,
+)
+from repro.core import bstree as B
+from repro.core import compress as C
+from conftest import rand_keys
+
+BACKENDS = ("bs", "cbs", "auto")
+N = 16
+
+
+def clustered(rng, n_clusters=120, per=40, spread=30000):
+    """Compressible keys: every backend (incl. cbs u16/u32 tags) is viable."""
+    base = np.sort(
+        rng.integers(0, 2**40, n_clusters, dtype=np.uint64)
+    ) * np.uint64(2**20)
+    keys = base[:, None] + rng.integers(
+        0, spread, (n_clusters, per), dtype=np.uint64)
+    return np.unique(keys.ravel())
+
+
+@pytest.fixture(params=BACKENDS)
+def backend(request):
+    return request.param
+
+
+@pytest.fixture
+def loaded(rng, backend):
+    keys = clustered(rng)
+    vals = np.arange(len(keys), dtype=np.uint32)
+    use_vals = backend == "bs"  # keys-only backends build without vals
+    idx = Index.build(keys, vals if use_vals else None,
+                      spec=IndexSpec(n=N, backend=backend))
+    oracle = ReferenceBSTree.bulk_load(keys, vals, n=N)
+    return idx, oracle, keys, vals
+
+
+def test_build_resolves_backend(loaded, backend, rng):
+    idx, _, keys, _ = loaded
+    if backend == "auto":
+        want = "cbs" if decide(keys, N) else "bs"
+        assert idx.backend == want
+    else:
+        assert idx.backend == backend
+    assert idx.supports_values == (idx.backend == "bs")
+    assert len(idx) == len(keys)
+    idx.check_invariants()
+
+
+def test_lookup_conformance(loaded, rng):
+    idx, oracle, keys, vals = loaded
+    absent = rand_keys(rng, 2000)
+    absent = absent[~np.isin(absent, keys)]
+    queries = np.concatenate([keys[::7], absent])
+    found, got = idx.lookup(queries)
+    want = [oracle.lookup(int(k)) for k in queries]
+    np.testing.assert_array_equal(found, [w is not None for w in want])
+    if idx.supports_values:
+        got_present = got[found]
+        assert got_present.tolist() == [w for w in want if w is not None]
+
+
+def test_insert_conformance(loaded, rng):
+    idx, oracle, keys, _ = loaded
+    # near keys (in-frame for cbs), far keys (host rebuild path), one
+    # batch-internal duplicate and one already-present key
+    near = keys[100:200] + np.uint64(1)
+    near = near[~np.isin(near, keys)]
+    far = rand_keys(rng, 30)
+    far = far[~np.isin(far, keys)]
+    batch = np.concatenate([near, far, far[:1], keys[:5]])
+    vals = (np.arange(len(batch), dtype=np.uint32) + 7
+            if idx.supports_values else None)
+    idx2, stats = idx.insert(batch, vals)
+    assert set(stats) == INSERT_STATS_KEYS
+    assert stats["requested"] == len(batch)
+    n_unique_new = len(np.unique(np.concatenate([near, far])))
+    assert stats["inserted"] == n_unique_new
+    assert stats["present"] == 5
+    # requested - inserted - present = batch-internal duplicates
+    assert stats["requested"] - stats["inserted"] - stats["present"] == 1
+    found, _ = idx2.lookup(batch)
+    assert found.all()
+    assert len(idx2) == len(keys) + n_unique_new
+    idx2.check_invariants()
+    # the original index is untouched (functional update)
+    found0, _ = idx.lookup(near)
+    assert not found0.any()
+
+
+def test_delete_conformance(loaded, rng):
+    idx, oracle, keys, _ = loaded
+    dels = rng.choice(keys, 300, replace=False)
+    missing = rand_keys(rng, 50)
+    missing = missing[~np.isin(missing, keys)]
+    batch = np.concatenate([dels, missing])
+    idx2, stats = idx.delete(batch)
+    assert stats == {"requested": len(batch), "deleted": len(dels)}
+    found, _ = idx2.lookup(dels)
+    assert not found.any()
+    keep = keys[~np.isin(keys, dels)]
+    found, _ = idx2.lookup(keep)
+    assert found.all()
+    idx2.check_invariants()
+
+
+def test_range_and_count_conformance(loaded, rng):
+    idx, oracle, keys, _ = loaded
+    for _ in range(15):
+        i = int(rng.integers(0, len(keys) - 1))
+        j = min(len(keys) - 1, i + int(rng.integers(0, 500)))
+        lo, hi = keys[i], keys[j]
+        got_k, got_v = idx.range_scan(lo, hi)
+        want_ids = oracle.range_query(int(lo), int(hi))
+        np.testing.assert_array_equal(got_k, keys[want_ids])
+        if idx.supports_values:
+            np.testing.assert_array_equal(got_v, want_ids)
+        else:
+            assert got_v is None
+        assert idx.count_range(lo, hi) == len(want_ids)
+    # empty + inverted ranges
+    assert idx.count_range(keys[5] + np.uint64(1), keys[5] + np.uint64(1)) \
+        in (0, 1)
+    assert idx.count_range(keys[9], keys[2]) == 0
+
+
+def test_items_match_oracle(loaded):
+    idx, oracle, keys, _ = loaded
+    got_k, got_v = idx.items()
+    np.testing.assert_array_equal(got_k, keys)
+    if idx.supports_values:
+        np.testing.assert_array_equal(
+            got_v, [v for _, v in oracle.items()])
+
+
+def test_build_from_unsorted_with_duplicates(rng, backend):
+    keys = clustered(rng, n_clusters=40, per=20)
+    shuffled = np.concatenate([keys, keys[::3]])
+    rng.shuffle(shuffled)
+    if backend == "bs":
+        # duplicate keys keep the last value in batch order
+        vals = np.arange(len(shuffled), dtype=np.uint32)
+        idx = Index.build(shuffled, vals,
+                          spec=IndexSpec(n=N, backend=backend))
+    else:
+        idx = Index.build(shuffled, spec=IndexSpec(n=N, backend=backend))
+    got_k, _ = idx.items()
+    np.testing.assert_array_equal(got_k, keys)
+
+
+def test_values_capability_is_a_flag_not_a_signature(rng, backend):
+    keys = clustered(rng, n_clusters=30, per=20)
+    idx = Index.build(keys, spec=IndexSpec(n=N, backend=backend))
+    if idx.supports_values:
+        # default values are the key's low 32 bits
+        idx2, _ = idx.insert(np.array([12345], np.uint64))
+        found, vals = idx2.lookup(np.array([12345], np.uint64))
+        assert found[0] and vals[0] == 12345
+    else:
+        with pytest.raises(ValueError, match="keys-only"):
+            idx.insert(keys[:3], np.zeros(3, np.uint32))
+        with pytest.raises(ValueError, match="keys-only"):
+            Index.build(keys, np.zeros(len(keys), np.uint32),
+                        spec=IndexSpec(n=N, backend=idx.backend))
+
+
+def test_stats_and_memory(loaded):
+    idx, _, keys, _ = loaded
+    s = idx.stats()
+    assert s["backend"] == idx.backend
+    assert s["num_keys"] == len(keys)
+    assert s["node_width"] == N
+    assert s["memory_bytes"] == idx.memory_bytes() > 0
+    assert s["height"] >= 1 and s["num_leaves"] >= 1
+
+
+def test_wrap_adopts_existing_trees(rng):
+    keys = np.sort(rand_keys(rng, 2000))
+    bs = Index.wrap(B.bulk_load(keys, n=N))
+    assert bs.backend == "bs" and len(bs) == len(keys)
+    cbs = Index.wrap(C.cbs_bulk_load(keys, n=N))
+    assert cbs.backend == "cbs" and len(cbs) == len(keys)
+
+
+def test_low_level_stats_schemas_are_identical(rng):
+    """Satellite: bstree.insert_batch and cbs_insert_batch emit the same
+    unified stats schema, including requested-vs-applied accounting of
+    batch-internal duplicates."""
+    keys = clustered(rng, n_clusters=30, per=20)
+    t = B.bulk_load(keys, n=N)
+    c = C.cbs_bulk_load(keys, n=N)
+    batch = np.concatenate([keys[:4], keys[:4], keys[-1:] + np.uint64(1)])
+    _, bs_stats = B.insert_batch(
+        t, batch, np.arange(len(batch), dtype=np.uint32))
+    _, cbs_stats = C.cbs_insert_batch(c, batch)
+    assert set(bs_stats) == set(cbs_stats) == INSERT_STATS_KEYS
+    for s in (bs_stats, cbs_stats):
+        assert s["requested"] == 9
+        assert s["inserted"] == 1
+        assert s["present"] == 4
+        assert s["requested"] - s["inserted"] - s["present"] == 4  # dupes
+
+
+def test_auto_with_values_picks_value_backend(rng):
+    keys = clustered(rng, n_clusters=30, per=20)  # compressible
+    vals = np.arange(len(keys), dtype=np.uint32)
+    idx = Index.build(keys, vals, spec=IndexSpec(n=N, backend="auto"))
+    assert idx.backend == "bs"  # auto restricted to value-bearing backends
+    found, got = idx.lookup(keys[:50])
+    assert found.all()
+    np.testing.assert_array_equal(got, vals[:50])

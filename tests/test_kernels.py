@@ -3,6 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import Index, IndexSpec
 from repro.core import bstree as B, compress as C
 from repro.core.layout import split_u64
 from repro.kernels import ops, ref as kref
@@ -46,7 +47,7 @@ def test_succ_u32_and_u16_sweep(rng, n, strict):
 @pytest.mark.parametrize("n", [8, 16])
 def test_tree_search_kernel(rng, n):
     keys = np.sort(rand_keys(rng, 8000))
-    t = B.bulk_load(keys, n=n)
+    t = Index.build(keys, spec=IndexSpec(n=n, backend="bs")).tree
     qs = np.concatenate([keys[::11], rand_keys(rng, 500)])
     qh, ql = split_u64(qs)
     got = ops.tree_search(t, jnp.asarray(qh), jnp.asarray(ql))
@@ -58,7 +59,7 @@ def test_tree_search_kernel(rng, n):
 
 def test_tree_search_height_zero(rng):
     keys = np.sort(rand_keys(rng, 5))
-    t = B.bulk_load(keys, n=16)
+    t = Index.build(keys, spec=IndexSpec(n=16, backend="bs")).tree
     assert t.height == 0
     qh, ql = split_u64(keys)
     got = ops.tree_search(t, jnp.asarray(qh), jnp.asarray(ql))
@@ -68,7 +69,7 @@ def test_tree_search_height_zero(rng):
 @pytest.mark.parametrize("n", [8, 16, 128])
 def test_leaf_insert_delete_kernels(rng, n):
     keys = np.sort(rand_keys(rng, 2000))
-    t = B.bulk_load(keys, n=n)
+    t = Index.build(keys, spec=IndexSpec(n=n, backend="bs")).tree
     h = B.to_host(t)
     L = int(t.num_leaves)
     rows = h["leaf_keys"][:L]
@@ -105,7 +106,7 @@ def test_for_block_kernel(rng, n):
     keys = np.unique(
         (base[:, None] + rng.integers(0, 60000, size=(120, 50),
                                       dtype=np.uint64)).ravel())
-    t = C.cbs_bulk_load(keys, n=n)
+    t = Index.build(keys, spec=IndexSpec(n=n, backend="cbs")).tree
     qs = np.concatenate([keys[::7], rand_keys(rng, 1500)])
     qh, ql = split_u64(qs)
     qh, ql = jnp.asarray(qh), jnp.asarray(ql)

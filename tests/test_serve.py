@@ -36,9 +36,7 @@ def test_request_index_snapshot_isolation(rng):
         before = snap.version
         idx.complete(ids[:10])  # concurrent writer
         # the pinned snapshot still sees all keys
-        from repro.core import bstree as B
-
-        found, _ = B.lookup_u64(snap.value, ids)
+        found, _ = snap.value.lookup(ids)
         assert found.all()
     assert idx.idx.version == before + 1
 

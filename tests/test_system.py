@@ -1,10 +1,10 @@
 """End-to-end behaviour tests: the paper's workloads A-E run against the
-public API, plus a tiny full training integration."""
+public ``Index`` facade (backend-agnostic), plus a tiny full training
+integration."""
 import numpy as np
 import pytest
 
-from repro.core import bstree as B
-from repro.core.compress import build_auto, cbs_insert_batch, cbs_delete_batch, cbs_lookup_u64
+from repro.core import Index, IndexSpec
 from repro.data.keys import gen_keys
 
 
@@ -13,41 +13,43 @@ def loaded():
     keys = gen_keys("osm", 30_000, seed=0)
     build = np.sort(keys[:20_000])
     workload = np.random.default_rng(1).permutation(keys)[:8_000]
-    tree = B.bulk_load(build, n=128)
-    return tree, build, workload
+    idx = Index.build(build, np.arange(len(build), dtype=np.uint32),
+                      spec=IndexSpec(n=128, backend="bs"))
+    return idx, build, workload
 
 
 def test_workload_a_read_only(loaded):
-    tree, build, workload = loaded
-    found, vals = B.lookup_u64(tree, workload)
+    idx, build, workload = loaded
+    found, vals = idx.lookup(workload)
     present = np.isin(workload, build)
     np.testing.assert_array_equal(found, present)
 
 
 def test_workload_b_write_only(loaded):
-    tree, build, workload = loaded
-    tree, stats = B.insert_batch(
-        tree, workload, np.arange(len(workload), dtype=np.uint32))
-    found, _ = B.lookup_u64(tree, workload)
+    idx, build, workload = loaded
+    idx, stats = idx.insert(
+        workload, np.arange(len(workload), dtype=np.uint32))
+    assert stats["requested"] == len(workload)
+    found, _ = idx.lookup(workload)
     assert found.all()
-    B.check_invariants(tree)
+    idx.check_invariants()
 
 
 def test_workload_e_mixed(loaded):
-    tree, build, workload = loaded
+    idx, build, workload = loaded
     rng = np.random.default_rng(2)
     model = {int(k): i for i, k in enumerate(build)}
     reads = workload[:4000]
     writes = workload[4000:6500]
     dels = rng.choice(build, 500, replace=False)
-    tree, _ = B.insert_batch(
-        tree, writes, (writes % np.uint64(2**31)).astype(np.uint32))
+    idx, _ = idx.insert(
+        writes, (writes % np.uint64(2**31)).astype(np.uint32))
     for k in writes.tolist():
         model[k] = k % 2**31
-    tree, nd = B.delete_batch(tree, dels)
+    idx, _ = idx.delete(dels)
     for k in np.unique(dels).tolist():
         model.pop(k, None)
-    found, vals = B.lookup_u64(tree, reads)
+    found, vals = idx.lookup(reads)
     for k, f, v in zip(reads.tolist(), found.tolist(), vals.tolist()):
         assert f == (k in model)
         if f:
@@ -56,18 +58,18 @@ def test_workload_e_mixed(loaded):
 
 def test_cbs_full_workload_on_compressible():
     keys = gen_keys("genome", 25_000, seed=3)
-    kind, tree = build_auto(keys, n=128)
-    assert kind == "cbs"
+    idx = Index.build(keys, spec=IndexSpec(n=128, backend="auto"))
+    assert idx.backend == "cbs"  # §6 decision on a compressible dataset
     rng = np.random.default_rng(4)
     newk = keys[:500] + np.uint64(1)
     newk = newk[~np.isin(newk, keys)]
-    tree, _ = cbs_insert_batch(tree, newk)
-    found, _, _ = cbs_lookup_u64(tree, newk)
+    idx, _ = idx.insert(newk)
+    found, _ = idx.lookup(newk)
     assert found.all()
     dels = rng.choice(keys, 400, replace=False)
-    tree, nd = cbs_delete_batch(tree, dels)
-    assert nd == len(np.unique(dels))
-    found, _, _ = cbs_lookup_u64(tree, np.unique(dels))
+    idx, dstats = idx.delete(dels)
+    assert dstats["deleted"] == len(np.unique(dels))
+    found, _ = idx.lookup(np.unique(dels))
     assert not found.any()
 
 
