@@ -1,4 +1,7 @@
-"""Figures 5-9 analogue: workloads A-E throughput (batched, Mops/s).
+"""Figures 5-9 analogue: workloads A-E throughput (batched, Mops/s),
+plus two structural-maintenance rows: wlF_skew (deferred-heavy skewed
+insert — batched k-way splits / targeted CBS repack) and wlG_compact
+(mass delete + ``compact()`` reclaim).
 
 One backend-agnostic code path through the ``Index`` facade — pick the
 tree with ``--backend {bs,cbs,auto,all}`` instead of duplicated BS/CBS
@@ -8,10 +11,12 @@ workload A.
 
 ``--json PATH`` additionally records every row machine-readably
 (per-backend op timings + run metadata) so the perf trajectory
-accumulates across commits:
+accumulates across commits; ``--repeat 3`` reports per-row minima over
+full-suite passes (what the CI gate compares, see
+``benchmarks/compare_bench.py``):
 
     PYTHONPATH=src python -m benchmarks.bench_workloads \
-        --backend all --json BENCH_workloads.json
+        --backend all --repeat 3 --json BENCH_workloads.json
 """
 from __future__ import annotations
 
@@ -50,7 +55,7 @@ def _emit(rows: list, name: str, us: float, derived: str, **tags):
 def run_backend(backend: str, dist: str, build: np.ndarray,
                 fresh: np.ndarray, reads: np.ndarray, ops: int,
                 rows: list) -> None:
-    """Workloads A-E for one backend — the same facade calls whatever the
+    """Workloads A-G for one backend — the same facade calls whatever the
     node representation underneath."""
     rng = np.random.default_rng(1)
     vals0 = np.arange(len(build), dtype=np.uint32)
@@ -64,17 +69,25 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
         _emit(rows, f"{name}/{tag}/{dist}", us, derived,
               backend=backend, resolved=resolved, dist=dist, workload=wl)
 
+    def timed(fn):
+        """Wall time of one workload section (single shot — steady-state
+        sampling happens one level up: main() runs the whole suite
+        ``--repeat`` times and keeps each row's minimum, which both drops
+        the compile-heavy first pass and decorrelates CI-runner noise
+        bursts that a back-to-back repeat would not escape)."""
+        t0 = time.perf_counter()
+        out = fn()
+        return (time.perf_counter() - t0) * 1e6, out
+
     # Workload A: 100% reads (device-level facade path, one dispatch)
     us = time_fn(lambda: idx.lookup_batch(qh, ql))
     t("wlA", us, f"{ops/us:.2f}Mops", "A")
 
-    # Workload B: 100% writes.  Keys-only backends pay full-leaf host
-    # rebuilds that amortise poorly on CPU — smaller batch, same metric.
+    # Workload B: 100% writes.  Keys-only backends pay host repacks that
+    # amortise poorly on CPU — smaller batch, same metric.
     n_w = ops if idx.supports_values else ops // 5
     newv = np.arange(n_w, dtype=np.uint32) if idx.supports_values else None
-    t0 = time.perf_counter()
-    _, stats = idx.insert(fresh[:n_w], newv)
-    dt = (time.perf_counter() - t0) * 1e6
+    dt, (_, stats) = timed(lambda: idx.insert(fresh[:n_w], newv))
     t("wlB", dt,
       f"{n_w/dt:.2f}Mops_def{stats['deferred']}_r{stats['rounds']}_n{n_w}",
       "B")
@@ -82,10 +95,12 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
     # Workload C: 50/50 read-write
     half = ops // 2
     newv = np.arange(half, dtype=np.uint32) if idx.supports_values else None
-    t0 = time.perf_counter()
-    ix3, _ = idx.insert(fresh[:half], newv)
-    jax.block_until_ready(ix3.lookup_batch(qh[:half], ql[:half])[0])
-    dt = (time.perf_counter() - t0) * 1e6
+
+    def wl_c():
+        ix3, _ = idx.insert(fresh[:half], newv)
+        jax.block_until_ready(ix3.lookup_batch(qh[:half], ql[:half])[0])
+
+    dt, _ = timed(wl_c)
     t("wlC", dt, f"{ops/dt:.2f}Mops", "C")
 
     # Workload D: short ranges + 5% writes.  Ranges go through the
@@ -98,22 +113,54 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
     lospan = build[i]
     hispan = build[np.minimum(i + 150, len(build) - 1)]
     newv = np.arange(500, dtype=np.uint32) if idx.supports_values else None
-    t0 = time.perf_counter()
-    got = sum(idx.count_range(a, b) for a, b in zip(lospan, hispan))
-    idx.insert(fresh[:500], newv)
-    dt = (time.perf_counter() - t0) * 1e6
+
+    def wl_d():
+        got = sum(idx.count_range(a, b) for a, b in zip(lospan, hispan))
+        idx.insert(fresh[:500], newv)
+        return got
+
+    dt, got = timed(wl_d)
     t("wlD_host", dt, f"{(nr+500)/dt:.2f}Mops_{got/nr:.0f}keys_per_range",
       "D_host")
 
     # Workload E: 60/35/5 read/write/delete
     n_ins, n_del, n_rd = int(ops * 0.35), int(ops * 0.05), int(ops * 0.6)
     newv = np.arange(n_ins, dtype=np.uint32) if idx.supports_values else None
-    t0 = time.perf_counter()
-    ix5, _ = idx.insert(fresh[:n_ins], newv)
-    ix5, _ = ix5.delete(rng.choice(build, n_del))
-    jax.block_until_ready(ix5.lookup_batch(qh[:n_rd], ql[:n_rd])[0])
-    dt = (time.perf_counter() - t0) * 1e6
+    e_dels = rng.choice(build, n_del)
+
+    def wl_e():
+        ix5, _ = idx.insert(fresh[:n_ins], newv)
+        ix5, _ = ix5.delete(e_dels)
+        jax.block_until_ready(ix5.lookup_batch(qh[:n_rd], ql[:n_rd])[0])
+
+    dt, _ = timed(wl_e)
     t("wlE", dt, f"{ops/dt:.2f}Mops", "E")
+
+    # Workload F: deferred-heavy skewed insert — a dense batch aimed at a
+    # handful of leaves, so (nearly) every key overflows its segment and
+    # rides the host maintenance pass (batched k-way splits / CBS repack).
+    # This row is the structural-maintenance headline: it used to pay one
+    # scalar traversal per key (BS) or a whole-tree rebuild (CBS).
+    # batch length == workload C's insert length so the already-compiled
+    # merge dispatch is reused and the row times maintenance, not XLA
+    n_f = ops // 2
+    base = build[len(build) // 2]
+    skew = base + (np.arange(1, 2 * n_f + 1, dtype=np.uint64)) * np.uint64(3)
+    skew = skew[~np.isin(skew, build)][:n_f]
+    newv = (np.arange(len(skew), dtype=np.uint32)
+            if idx.supports_values else None)
+    dt, (_, fstats) = timed(lambda: idx.insert(skew, newv))
+    t("wlF_skew", dt,
+      f"{len(skew)/dt:.2f}Mops_def{fstats['deferred']}"
+      f"_ls{fstats['maintenance']['leaf_splits']}", "F_skew")
+
+    # Maintenance workload: mass delete then compact() reclaims the chain
+    dels = rng.choice(build, min(len(build) // 2, 4 * ops), replace=False)
+    ix6, _ = idx.delete(dels)
+    dt, (_, comp) = timed(lambda: ix6.compact(force=True))
+    t("wlG_compact", dt,
+      f"{comp['keys']/dt:.2f}Mkeys_l{comp['leaves_before']}"
+      f"to{comp['leaves_after']}", "G_compact")
 
 
 def main(argv=None) -> None:
@@ -125,42 +172,60 @@ def main(argv=None) -> None:
     ap.add_argument("--build", type=int, default=BUILD)
     ap.add_argument("--ops", type=int, default=OPS)
     ap.add_argument("--dists", default="books,fb")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="full-suite passes; each row reports its MINIMUM "
+                         "wall time across passes.  Functional updates make "
+                         "re-running sound; the min drops the compile-heavy "
+                         "first pass, and spreading a row's samples minutes "
+                         "apart decorrelates CI-runner noise bursts that "
+                         "back-to-back repeats sit inside.  CI uses 3.")
     args = ap.parse_args(argv)
     backends = ("bs", "cbs") if args.backend == "all" else (args.backend,)
 
-    rows: list[dict] = []
-    rng = np.random.default_rng(0)
-    for dist in args.dists.split(","):
-        keys = gen_keys(dist, args.build + args.ops, seed=0)
-        perm = rng.permutation(len(keys))
-        build = np.sort(keys[perm[: args.build]])
-        fresh = keys[perm[args.build:]]
-        reads = rng.choice(build, args.ops)
+    merged: dict[str, dict] = {}
+    for p in range(max(1, args.repeat)):
+        if args.repeat > 1:
+            print(f"# pass {p + 1}/{args.repeat}")
+        rows: list[dict] = []
+        rng = np.random.default_rng(0)
+        for dist in args.dists.split(","):
+            keys = gen_keys(dist, args.build + args.ops, seed=0)
+            perm = rng.permutation(len(keys))
+            build = np.sort(keys[perm[: args.build]])
+            fresh = keys[perm[args.build:]]
+            reads = rng.choice(build, args.ops)
 
-        for backend in backends:
-            run_backend(backend, dist, build, fresh, reads, args.ops, rows)
+            for backend in backends:
+                run_backend(backend, dist, build, fresh, reads, args.ops,
+                            rows)
 
-        # sorted-array baseline (read-only competitor, workload A)
-        qh, ql = map(jnp.asarray, split_u64(reads))
-        bh, bl = map(jnp.asarray, split_u64(build))
-        us = time_fn(lambda: _baseline_lookup(bh, bl, qh, ql))
-        _emit(rows, f"wlA/sorted_array/{dist}", us, f"{args.ops/us:.2f}Mops",
-              backend="sorted_array", resolved="sorted_array", dist=dist,
-              workload="A")
+            # sorted-array baseline (read-only competitor, workload A)
+            qh, ql = map(jnp.asarray, split_u64(reads))
+            bh, bl = map(jnp.asarray, split_u64(build))
+            us = time_fn(lambda: _baseline_lookup(bh, bl, qh, ql))
+            _emit(rows, f"wlA/sorted_array/{dist}", us,
+                  f"{args.ops/us:.2f}Mops", backend="sorted_array",
+                  resolved="sorted_array", dist=dist, workload="A")
+        for r in rows:
+            cur = merged.get(r["name"])
+            if cur is None or r["us_per_call"] < cur["us_per_call"]:
+                merged[r["name"]] = r
 
     if args.json:
         payload = {
             "bench": "workloads",
             "build_keys": args.build,
             "ops": args.ops,
+            "repeat": args.repeat,
             "backends": list(backends),
             "jax_backend": jax.default_backend(),
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-            "rows": rows,
+            "rows": list(merged.values()),
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
-        print(f"# wrote {len(rows)} rows to {args.json}")
+        print(f"# wrote {len(merged)} rows to {args.json} "
+              f"(min over {args.repeat} pass(es))")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,111 @@
+"""Compare two ``bench_workloads --json`` files row by row; fail on
+wall-time regressions.
+
+CI usage (the ``bench`` lane)::
+
+    python -m benchmarks.compare_bench BENCH_workloads.json \
+        BENCH_workloads.new.json --threshold 1.5
+
+Rows are matched by ``name``.  Each row's wall-time ratio
+(candidate/baseline) is first normalised by the **median ratio across all
+rows**: the committed baseline was produced on different hardware (and
+shared CI runners drift), so a uniform machine-speed shift moves every
+row together and must not trip the gate — only a row that slows down
+*relative to the rest of the suite* is a code regression.  A row then
+fails when its normalised ratio exceeds ``--threshold`` AND the candidate
+row is slower than ``--min-us`` (an absolute noise floor:
+microsecond-scale rows jitter far more than 1.5x and would cry wolf).
+The trade-off is explicit: a change that slows *every* row uniformly is
+invisible to this gate (and indistinguishable from a slow runner); the
+raw ratios are printed so humans can spot it in the job log.
+
+Rows present in only one file are reported but never fail the gate — new
+benchmarks must be able to land together with their first baseline.
+Exit code 1 iff at least one row regresses.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def load_rows(path: str) -> tuple[dict, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload, {r["name"]: r for r in payload["rows"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_workloads.json")
+    ap.add_argument("candidate", help="freshly produced JSON")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when candidate/baseline exceeds this ratio")
+    ap.add_argument("--min-us", type=float, default=10000.0,
+                    help="gate only rows slower than this (absolute noise "
+                         "floor).  Millisecond-scale rows (wlA reads) "
+                         "jitter 1.5x+ from scheduling alone on 2-4 core "
+                         "runners; they stay informational in the artifact "
+                         "while read-path regressions surface through the "
+                         "composite rows (wlC/wlD/wlE), which are gated")
+    args = ap.parse_args(argv)
+
+    base_meta, base = load_rows(args.baseline)
+    cand_meta, cand = load_rows(args.candidate)
+    for k in ("build_keys", "ops", "repeat"):
+        if base_meta.get(k) != cand_meta.get(k):
+            print(f"FATAL: workload mismatch on {k}: baseline "
+                  f"{base_meta.get(k)} vs candidate {cand_meta.get(k)} — "
+                  f"regenerate the baseline with the CI workload size")
+            return 1
+
+    shared = sorted(set(base) & set(cand))
+    ratios = {}
+    for name in shared:
+        b = float(base[name]["us_per_call"])
+        c = float(cand[name]["us_per_call"])
+        ratios[name] = c / b if b > 0 else float("inf")
+    speed = float(np.median(list(ratios.values()))) if ratios else 1.0
+    print(f"machine-speed factor (median ratio over {len(shared)} rows): "
+          f"{speed:.2f}\n")
+
+    regressions = []
+    print(f"{'row':44s} {'base_us':>12s} {'cand_us':>12s} {'ratio':>7s} "
+          f"{'norm':>6s}")
+    for name in sorted(set(base) | set(cand)):
+        if name not in cand:
+            print(f"{name:44s} {base[name]['us_per_call']:12.1f} "
+                  f"{'MISSING':>12s}       -      -")
+            continue
+        if name not in base:
+            print(f"{name:44s} {'NEW':>12s} "
+                  f"{cand[name]['us_per_call']:12.1f}       -      -")
+            continue
+        b = float(base[name]["us_per_call"])
+        c = float(cand[name]["us_per_call"])
+        ratio = ratios[name]
+        norm = ratio / speed if speed > 0 else float("inf")
+        flag = ""
+        if norm > args.threshold and c > args.min_us:
+            flag = "  << REGRESSION"
+            regressions.append((name, b, c, norm))
+        print(f"{name:44s} {b:12.1f} {c:12.1f} {ratio:7.2f} {norm:6.2f}"
+              f"{flag}")
+
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed beyond "
+              f"{args.threshold}x relative to the suite (above the "
+              f"{args.min_us:.0f}us noise floor):")
+        for name, b, c, norm in regressions:
+            print(f"  {name}: {b:.0f}us -> {c:.0f}us "
+                  f"({norm:.2f}x normalised)")
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

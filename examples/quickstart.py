@@ -45,6 +45,15 @@ def main():
     idx, dstats = idx.delete(fresh[:2000])
     print(f"delete batch: {dstats['deleted']} deleted")
 
+    # structural maintenance: deletes are lazy (emptied nodes stay in the
+    # chain); after a mass deletion compact() merges under-occupied
+    # leaves and hands the slack back
+    idx, _ = idx.delete(keys[::2])
+    idx, comp = idx.compact()
+    print(f"compact: occupancy {comp['mean_occupancy']:.2f}, "
+          f"{comp['leaves_before']} -> {comp['leaves_after']} leaves, "
+          f"{comp['reclaimed_bytes']} bytes reclaimed")
+
     # range scan / count (Algorithm 4 with the gap-aware continuation)
     lo, hi = np.sort(rng.choice(keys, 2))
     rkeys, rvals = idx.range_scan(lo, hi)

@@ -12,6 +12,8 @@ Modules:
   reference   host-side scalar oracle (paper Algorithms 3-6)
   bstree      vectorised functional BS-tree (bulk load, search, updates)
   compress    FOR-compressed CBS-tree (paper §5-6)
+  maintenance batched structural maintenance shared by both backends
+              (k-way splits, targeted CBS repack, parent patching)
   distributed range-partitioned sharded index (shard_map + all_to_all)
   versioning  MVCC snapshots (OLC adaptation, paper §7)
 """
@@ -34,6 +36,7 @@ from .succ import (  # noqa: F401
 )
 from .bstree import (  # noqa: F401
     bulk_load,
+    compact,
     delete_batch,
     descend,
     insert_batch,
@@ -45,6 +48,7 @@ from .compress import (  # noqa: F401
     CBSTreeArrays,
     build_auto,
     cbs_bulk_load,
+    cbs_compact,
     cbs_delete_batch,
     cbs_insert_batch,
     cbs_lookup_batch,
@@ -93,6 +97,7 @@ __all__ = [
     "succ_gt_plane",
     # low-level BS-tree (stable contracts; prefer Index)
     "bulk_load",
+    "compact",
     "delete_batch",
     "descend",
     "insert_batch",
@@ -102,6 +107,7 @@ __all__ = [
     # low-level CBS-tree (stable contracts; prefer Index)
     "build_auto",
     "cbs_bulk_load",
+    "cbs_compact",
     "cbs_delete_batch",
     "cbs_insert_batch",
     "cbs_lookup_batch",

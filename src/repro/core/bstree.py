@@ -70,6 +70,7 @@ __all__ = [
     "descend",
     "insert_batch",
     "delete_batch",
+    "compact",
     "range_scan",
     "count_range",
     "to_host",
@@ -685,21 +686,24 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
     A single segmented-merge dispatch applies every key whose leaf has
     room for its whole segment (no per-round host syncs); segments that
     exceed their leaf's free gaps are deferred whole to a host maintenance
-    pass that performs paper-faithful splits (proactive gapping) and parent
-    separator insertion.
+    pass that performs batched k-way splits and level-by-level parent
+    separator insertion (:mod:`repro.core.maintenance`).
 
     Stable low-level contract — the stats dict has exactly the unified
     schema shared with ``cbs_insert_batch``: ``requested`` (raw batch
     length, before dedup), ``inserted`` (new keys added), ``present``
     (keys that already existed; their value is overwritten), ``deferred``
-    (keys routed through the host split pass) and ``rounds`` (device
-    dispatches).  ``requested - inserted - present`` = batch-internal
-    duplicates (last occurrence wins).
+    (keys routed through the host split pass), ``rounds`` (device
+    dispatches) and ``maintenance`` (structural counters — see
+    ``maintenance.new_counters``).  ``requested - inserted - present`` =
+    batch-internal duplicates (last occurrence wins).
     """
+    from .maintenance import new_counters
+
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
     vals = np.asarray(vals, dtype=np.uint32)
     stats = {"requested": int(len(keys_u64)), "inserted": 0, "present": 0,
-             "deferred": 0, "rounds": 0}
+             "deferred": 0, "rounds": 0, "maintenance": new_counters()}
     order = np.argsort(keys_u64, kind="stable")
     keys_u64, vals = keys_u64[order], vals[order]
     # batch-internal duplicates: keep the last occurrence (upsert semantics)
@@ -723,7 +727,7 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
         idx = np.nonzero(d)[0]
         stats["deferred"] = len(idx)
         tree, h_ins, h_ups = _host_insert_with_splits(
-            tree, keys_u64[idx], vals[idx]
+            tree, keys_u64[idx], vals[idx], counters=stats["maintenance"]
         )
         stats["inserted"] += h_ins
         stats["present"] += h_ups
@@ -811,31 +815,87 @@ class _HostView(ref.ReferenceBSTree):
         return self.num_inner - 1
 
 
-def _host_insert_with_splits(tree: BSTreeArrays, keys: np.ndarray, vals: np.ndarray):
-    """Insert deferred keys with paper-faithful splits.  Returns
-    (tree', n_inserted, n_upserted) — upserts are keys that already existed
-    (ReferenceBSTree.insert returns False for them)."""
+def _host_insert_with_splits(tree: BSTreeArrays, keys: np.ndarray,
+                             vals: np.ndarray, counters: Optional[dict] = None):
+    """Insert deferred keys with batched k-way splits.  Returns
+    (tree', n_inserted, n_upserted) — upserts are keys that already
+    existed (their value is overwritten).
+
+    The whole batch is one vectorised descent + one merge/split per
+    affected leaf + one parent-patch pass per tree level
+    (:func:`repro.core.maintenance.bs_batched_split_insert`) — O(levels)
+    vectorised passes, not O(keys) scalar traversals."""
+    from .maintenance import bs_batched_split_insert, new_counters
+
+    if counters is None:
+        counters = new_counters()
+    keys = np.asarray(keys, dtype=np.uint64)
+    vals = np.asarray(vals, dtype=np.uint32)
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], vals[order]
+    if len(keys) > 1:  # defensive dedup (last occurrence wins)
+        last = np.concatenate([keys[1:] != keys[:-1], [True]])
+        keys, vals = keys[last], vals[last]
     h = to_host(tree)
-    view = _HostView(h)
-    n_ins = n_ups = 0
-    for k, v in zip(keys, vals):
-        if view.insert(int(k), int(v)):
-            n_ins += 1
-        else:
-            n_ups += 1
+    n_ins, n_ups = bs_batched_split_insert(h, keys, vals, counters)
     tree = from_host(
-        leaf_keys=view.leaf_keys,
-        leaf_vals=view.leaf_vals,
-        next_leaf=view.next_leaf,
-        inner_keys=view.inner_keys,
-        inner_child=view.inner_child,
-        root=view.root,
-        num_leaves=view.num_leaves,
-        num_inner=view.num_inner,
-        height=view.height,
-        n=view.n,
+        leaf_keys=h["leaf_keys"],
+        leaf_vals=h["leaf_vals"],
+        next_leaf=h["next_leaf"],
+        inner_keys=h["inner_keys"],
+        inner_child=h["inner_child"],
+        root=h["root"],
+        num_leaves=h["num_leaves"],
+        num_inner=h["num_inner"],
+        height=h["height"],
+        n=h["n"],
     )
     return tree, n_ins, n_ups
+
+
+# ---------------------------------------------------------------------------
+# Compaction: reclaim lazily-deleted slack (paper §5 leaves emptied nodes
+# in the chain; this is the amortised maintenance pass that cleans up)
+# ---------------------------------------------------------------------------
+
+
+def compact(tree: BSTreeArrays, *, min_occupancy: float = 0.5,
+            alpha: float = DEFAULT_ALPHA, force: bool = False):
+    """Merge under-occupied / emptied leaves and reclaim slack.
+
+    Deletes never restructure (the paper handles them lazily), so a
+    delete-heavy tree accumulates empty leaves in the chain and
+    half-empty rows everywhere.  ``compact`` measures occupancy over the
+    live leaves and, when the mean drops below ``min_occupancy`` or any
+    leaf is fully empty (or ``force``), re-packs every surviving key at
+    bulk-load occupancy in one vectorised pass — leaves merge, the chain
+    shrinks, the height can drop, and slack rows return to the allocator.
+
+    Returns ``(tree', counters)`` with counters
+    ``{keys, leaves_before, leaves_after, empty_leaves, mean_occupancy,
+    compacted, reclaimed_bytes}``.  When no compaction is needed the
+    input tree is returned unchanged (``compacted`` False).
+    """
+    from .maintenance import compaction_plan, rows_used_mask
+
+    h = to_host(tree)
+    n = h["n"]
+    nl = int(h["num_leaves"])
+    used = rows_used_mask(h["leaf_keys"][:nl])
+    per_leaf = used.sum(axis=1)
+    counters, needed = compaction_plan(
+        per_leaf, per_leaf / n, min_occupancy=min_occupancy, force=force)
+    if not needed:
+        return tree, counters
+    ks = h["leaf_keys"][:nl][used]
+    vs = h["leaf_vals"][:nl][used]
+    order = np.argsort(ks, kind="stable")
+    new = bulk_load(ks[order], vs[order], n=n, alpha=alpha)
+    counters["leaves_after"] = int(new.num_leaves)
+    counters["compacted"] = True
+    counters["reclaimed_bytes"] = max(
+        0, tree.memory_bytes() - new.memory_bytes())
+    return new, counters
 
 
 # ---------------------------------------------------------------------------

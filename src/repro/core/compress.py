@@ -66,6 +66,7 @@ __all__ = [
     "cbs_lookup_u64",
     "cbs_insert_batch",
     "cbs_delete_batch",
+    "cbs_compact",
     "build_auto",
     "cbs_range_scan",
     "cbs_decode_spans",
@@ -173,6 +174,27 @@ def _pack_leaf(keys: np.ndarray, tag: int, n: int, alpha: float) -> np.ndarray:
     return np.concatenate([hi, lo])
 
 
+def _for_chunks(keys: np.ndarray, n: int, alpha: float):
+    """Greedy narrowest-fit split of sorted u64 keys into FOR leaves — the
+    paper §5 construction rule, shared by bulk load and the targeted
+    repack (``maintenance.cbs_batched_repack``) so both encode leaves
+    identically.  Yields ``(tag, packed_words, k0, count)``."""
+    caps = _leaf_caps(n)
+    i = 0
+    while i < len(keys):
+        for tag, width_max in ((TAG_U16, 0xFFFF), (TAG_U32, 0xFFFFFFFF),
+                               (TAG_U64, None)):
+            take = max(1, int(round(alpha * caps[tag])))
+            chunk = keys[i : i + take]
+            k0 = chunk[0]
+            spread = int(chunk[-1] - k0)
+            if width_max is None or spread < width_max:  # maxd reserved
+                deltas = (chunk - k0).astype(np.uint64)
+                yield tag, _pack_leaf(deltas, tag, n, alpha), k0, len(chunk)
+                i += len(chunk)
+                break
+
+
 def cbs_bulk_load(
     keys: np.ndarray,
     *,
@@ -183,25 +205,8 @@ def cbs_bulk_load(
     """One pass over sorted keys; each leaf takes the narrowest delta width
     that fits 75%-occupancy-many keys (paper §5 Tree construction)."""
     keys = np.asarray(keys, dtype=np.uint64)
-    caps = _leaf_caps(n)
-    leaves: list[tuple[int, np.ndarray, np.uint64]] = []  # (tag, words, k0)
-
-    i = 0
-    while i < len(keys):
-        placed = False
-        for tag, width_max in ((TAG_U16, 0xFFFF), (TAG_U32, 0xFFFFFFFF), (TAG_U64, None)):
-            take = max(1, int(round(alpha * caps[tag])))
-            chunk = keys[i : i + take]
-            k0 = chunk[0]
-            spread = int(chunk[-1] - k0)
-            if width_max is None or spread < width_max:  # maxd reserved
-                deltas = (chunk - k0).astype(np.uint64)
-                words = _pack_leaf(deltas, tag, n, alpha)
-                leaves.append((tag, words, k0))
-                i += len(chunk)
-                placed = True
-                break
-        assert placed
+    leaves = [(tag, words, k0)
+              for tag, words, k0, _ in _for_chunks(keys, n, alpha)]
     if not leaves:
         leaves.append(
             (TAG_U64, _pack_leaf(np.zeros(0, np.uint64), TAG_U64, n, alpha), np.uint64(0))
@@ -553,14 +558,18 @@ def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
     schema shared with ``bstree.insert_batch``: ``requested`` (raw batch
     length, before dedup), ``inserted`` (new keys added), ``present``
     (keys already in the tree; no-ops on this keys-only backend),
-    ``deferred`` (keys routed through the host rebuild) and ``rounds``
-    (device dispatches).  ``requested - inserted - present`` =
-    batch-internal duplicates, so requested-vs-applied accounting always
-    balances.
+    ``deferred`` (keys routed through the host repack), ``rounds``
+    (device dispatches) and ``maintenance`` (structural counters).
+    ``requested - inserted - present`` = batch-internal duplicates, so
+    requested-vs-applied accounting always balances — the repack path
+    re-checks presence against the decoded leaf contents instead of
+    assuming deferred keys are new.
     """
+    from .maintenance import new_counters
+
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
     stats = {"requested": int(len(keys_u64)), "inserted": 0, "present": 0,
-             "deferred": 0, "rounds": 0}
+             "deferred": 0, "rounds": 0, "maintenance": new_counters()}
     keys_u64 = np.unique(keys_u64)
     if len(keys_u64) == 0:
         return tree, stats
@@ -579,8 +588,10 @@ def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
     if d.any():
         idx = np.nonzero(d)[0]
         stats["deferred"] = len(idx)
-        tree = _cbs_host_rebuild(tree, keys_u64[idx])
-        stats["inserted"] += len(idx)  # deferred keys are all new (not present)
+        tree, r_ins, r_ups = _cbs_host_repack(
+            tree, keys_u64[idx], counters=stats["maintenance"])
+        stats["inserted"] += r_ins
+        stats["present"] += r_ups
     return tree, stats
 
 
@@ -697,8 +708,112 @@ def _cbs_delete_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf):
 
 
 # ---------------------------------------------------------------------------
-# Host fallback: rebuild affected leaves with fresh narrowest tags
+# Host maintenance: targeted repack of affected leaves (fresh narrowest
+# tags), compaction, and the full-rebuild fallback
 # ---------------------------------------------------------------------------
+
+def cbs_to_host(tree: CBSTreeArrays) -> dict:
+    """Pull the CBS tree to writable numpy for host maintenance.  Inner
+    fields use the same names as ``bstree.to_host`` so the shared
+    maintenance machinery applies to both backends."""
+    return dict(
+        leaf_words=np.array(tree.leaf_words),
+        leaf_tag=np.array(tree.leaf_tag),
+        leaf_k0=join_u64(np.asarray(tree.leaf_k0_hi),
+                         np.asarray(tree.leaf_k0_lo)),
+        next_leaf=np.array(tree.next_leaf),
+        inner_keys=join_u64(np.asarray(tree.inner_hi),
+                            np.asarray(tree.inner_lo)),
+        inner_child=np.array(tree.inner_child),
+        root=int(tree.root),
+        num_leaves=int(tree.num_leaves),
+        num_inner=int(tree.num_inner),
+        height=tree.height,
+        n=tree.node_width,
+    )
+
+
+def cbs_from_host(h: dict) -> CBSTreeArrays:
+    k0_hi, k0_lo = split_u64(h["leaf_k0"])
+    ihi, ilo = split_u64(h["inner_keys"])
+    return CBSTreeArrays(
+        leaf_words=jnp.asarray(h["leaf_words"]),
+        leaf_k0_hi=jnp.asarray(k0_hi),
+        leaf_k0_lo=jnp.asarray(k0_lo),
+        leaf_tag=jnp.asarray(h["leaf_tag"]),
+        next_leaf=jnp.asarray(h["next_leaf"]),
+        inner_hi=jnp.asarray(ihi),
+        inner_lo=jnp.asarray(ilo),
+        inner_child=jnp.asarray(h["inner_child"]),
+        root=jnp.asarray(h["root"], jnp.int32),
+        num_leaves=jnp.asarray(h["num_leaves"], jnp.int32),
+        num_inner=jnp.asarray(h["num_inner"], jnp.int32),
+        height=int(h["height"]),
+        node_width=h["n"],
+    )
+
+
+def _cbs_host_repack(tree: CBSTreeArrays, new_keys: np.ndarray, *,
+                     alpha: float = DEFAULT_ALPHA,
+                     counters: Optional[dict] = None):
+    """Targeted slow path: re-FOR-encode only the leaves the deferred keys
+    land in (fresh narrowest tags, k-way when the merged set outgrows one
+    block) and patch parents level by level.  The root grows incrementally
+    — the tree is never rebuilt wholesale.  Returns (tree', n_inserted,
+    n_present): presence is re-checked against the decoded leaf contents,
+    so already-present deferred keys are honest no-ops."""
+    from .maintenance import cbs_batched_repack, new_counters
+
+    if counters is None:
+        counters = new_counters()
+    new_keys = np.unique(np.asarray(new_keys, dtype=np.uint64))
+    h = cbs_to_host(tree)
+    n_ins, n_ups = cbs_batched_repack(h, new_keys, alpha, counters)
+    return cbs_from_host(h), n_ins, n_ups
+
+
+def cbs_compact(tree: CBSTreeArrays, *, min_occupancy: float = 0.5,
+                alpha: float = DEFAULT_ALPHA, force: bool = False):
+    """Merge under-occupied / emptied compressed leaves and reclaim slack.
+
+    CBS deletes overwrite dup-runs in place and never retype or merge, so
+    delete-heavy trees accumulate empty blocks in the chain.  When the
+    mean logical occupancy of live leaves falls below ``min_occupancy``
+    or any leaf is empty (or ``force``), every surviving key re-packs at
+    bulk-load occupancy with fresh narrowest tags.  Returns
+    ``(tree', counters)`` — same counters schema as ``bstree.compact``.
+    """
+    from .maintenance import compaction_plan
+
+    n = tree.node_width
+    words = np.asarray(tree.leaf_words)
+    tags = np.asarray(tree.leaf_tag)
+    k0 = join_u64(np.asarray(tree.leaf_k0_hi), np.asarray(tree.leaf_k0_lo))
+    caps = _leaf_caps(n)
+    nl = int(tree.num_leaves)
+    per_leaf = np.zeros(nl, dtype=np.int64)
+    occ = np.zeros(nl, dtype=np.float64)
+    decoded = []  # keep the decoded keys: the re-pack below reuses them
+    for li in range(nl):
+        ks = _leaf_keys_host(words[li], int(tags[li]), k0[li], n)
+        decoded.append(ks)
+        per_leaf[li] = len(ks)
+        occ[li] = len(ks) / caps[int(tags[li])]
+    counters, needed = compaction_plan(
+        per_leaf, occ, min_occupancy=min_occupancy, force=force)
+    if not needed:
+        return tree, counters
+    # leaves partition the key space, so sorting the concatenation equals
+    # the chain walk (without decoding every leaf a second time)
+    keys = (np.sort(np.concatenate(decoded)) if decoded
+            else np.zeros(0, np.uint64))
+    new = cbs_bulk_load(keys, n=n, alpha=alpha)
+    counters["leaves_after"] = int(new.num_leaves)
+    counters["compacted"] = True
+    counters["reclaimed_bytes"] = max(
+        0, tree.memory_bytes() - new.memory_bytes())
+    return new, counters
+
 
 def cbs_items(tree: CBSTreeArrays) -> np.ndarray:
     """All keys in order (host-side, via the leaf chain)."""
@@ -742,11 +857,11 @@ def _leaf_keys_host(words: np.ndarray, tag: int, k0: np.uint64, n: int) -> np.nd
 
 
 def _cbs_host_rebuild(tree: CBSTreeArrays, new_keys: np.ndarray) -> CBSTreeArrays:
-    """Slow path: merge deferred keys into the full sorted key set and
-    rebuild.  Splitting only the affected leaves and patching parents is
-    the paper's in-place path; a bulk re-pack is the batched equivalent —
-    deferred keys are rare (out-of-frame or full leaf), and rebuild cost
-    amortises exactly like split chains (documented in DESIGN.md §8)."""
+    """Whole-tree rebuild: merge ``new_keys`` into the full sorted key set
+    and bulk-load from scratch.  No longer on the insert path — deferred
+    keys go through :func:`_cbs_host_repack`, which touches only the
+    affected leaves and grows the root incrementally.  Kept as a recovery
+    utility (tests assert the insert path never calls it)."""
     keys = cbs_items(tree)
     merged = np.unique(np.concatenate([keys, new_keys.astype(np.uint64)]))
     return cbs_bulk_load(merged, n=tree.node_width)

@@ -46,7 +46,7 @@ from .index import (
     get_backend,
     resolve_backend,
 )
-from .layout import MAXKEY, join_u64, split_u64
+from .layout import DEFAULT_ALPHA, MAXKEY, join_u64, split_u64
 from .succ import succ_gt
 
 AxisName = Union[str, tuple[str, ...]]
@@ -69,6 +69,15 @@ class ShardedBSTree:
     fence_lo: jnp.ndarray  # (S,) uint32
     num_shards: int = dataclasses.field(metadata=dict(static=True))
     backend: str = dataclasses.field(default="bs", metadata=dict(static=True))
+    #: build-time occupancy, preserved so per-shard maintenance (compact,
+    #: CBS repack) re-packs at the occupancy the shards were built with
+    alpha: float = dataclasses.field(default=DEFAULT_ALPHA,
+                                     metadata=dict(static=True))
+
+    def _spec(self) -> IndexSpec:
+        """The IndexSpec the shards were built with (for facade calls)."""
+        return IndexSpec(n=self.trees.node_width, alpha=self.alpha,
+                         backend=self.backend)
 
     @property
     def supports_values(self) -> bool:
@@ -199,7 +208,7 @@ def build_sharded(
     fhi, flo = split_u64(fences)
     return ShardedBSTree(
         trees=trees, fence_hi=jnp.asarray(fhi), fence_lo=jnp.asarray(flo),
-        num_shards=num_shards, backend=backend,
+        num_shards=num_shards, backend=backend, alpha=alpha,
     )
 
 
@@ -353,14 +362,16 @@ def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray,
     through the ``Index`` facade.  Returns (ShardedBSTree, total stats)
     with the unified ``{requested, inserted, present, deferred, rounds}``
     schema.  Host path — see module docstring."""
+    from .maintenance import merge_counters, new_counters
+
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
     if vals is not None:
         vals = np.asarray(vals, dtype=np.uint32)
     tgt = _route(st, keys_u64)
-    spec = IndexSpec(n=st.trees.node_width, backend=st.backend)
+    spec = st._spec()
     parts = [_shard_tree(st, s) for s in range(st.num_shards)]
     stats = {"requested": int(len(keys_u64)), "inserted": 0, "present": 0,
-             "deferred": 0, "rounds": 0}
+             "deferred": 0, "rounds": 0, "maintenance": new_counters()}
     for s in range(st.num_shards):
         mask = tgt == s
         if not mask.any():
@@ -371,6 +382,7 @@ def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray,
         parts[s] = idx.tree
         for k in ("inserted", "present", "deferred", "rounds"):
             stats[k] += s_stats[k]
+        merge_counters(stats["maintenance"], s_stats["maintenance"])
     return dataclasses.replace(st, trees=_stack_trees(parts)), stats
 
 
@@ -378,7 +390,7 @@ def delete_sharded(st: ShardedBSTree, keys_u64: np.ndarray):
     """Route deletions by fence; returns (ShardedBSTree, n_deleted)."""
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
     tgt = _route(st, keys_u64)
-    spec = IndexSpec(n=st.trees.node_width, backend=st.backend)
+    spec = st._spec()
     parts = [_shard_tree(st, s) for s in range(st.num_shards)]
     deleted = 0
     for s in range(st.num_shards):
@@ -390,3 +402,25 @@ def delete_sharded(st: ShardedBSTree, keys_u64: np.ndarray):
         parts[s] = idx.tree
         deleted += d_stats["deleted"]
     return dataclasses.replace(st, trees=_stack_trees(parts)), deleted
+
+
+def compact_sharded(st: ShardedBSTree, *, min_occupancy: float = 0.5,
+                    force: bool = False):
+    """Per-shard structural maintenance through the facade: every shard
+    runs ``Index.compact`` locally (the key partition is untouched, so no
+    exchange is needed) and the stacked container is rebuilt with the
+    shards' new — possibly smaller — uniform shapes.  Returns
+    ``(ShardedBSTree, counters)`` where int counters sum over shards and
+    ``compacted`` counts the shards that actually re-packed."""
+    spec = st._spec()
+    parts = [_shard_tree(st, s) for s in range(st.num_shards)]
+    total: dict = {"compacted": 0, "shards": st.num_shards}
+    for s in range(st.num_shards):
+        idx = Index(tree=parts[s], backend=st.backend, spec=spec)
+        idx, c = idx.compact(min_occupancy=min_occupancy, force=force)
+        parts[s] = idx.tree
+        for k in ("keys", "leaves_before", "leaves_after", "empty_leaves",
+                  "reclaimed_bytes"):
+            total[k] = total.get(k, 0) + c[k]
+        total["compacted"] += int(c["compacted"])
+    return dataclasses.replace(st, trees=_stack_trees(parts)), total

@@ -67,8 +67,11 @@ __all__ = [
 
 #: The unified insert-stats schema every backend must emit (satellite of
 #: the facade contract; asserted by tests/test_index_api.py).
+#: ``maintenance`` is the structural-counters sub-dict
+#: (:func:`repro.core.maintenance.new_counters`): splits, allocations and
+#: root growth performed by the host maintenance pass for this batch.
 INSERT_STATS_KEYS = frozenset(
-    {"requested", "inserted", "present", "deferred", "rounds"}
+    {"requested", "inserted", "present", "deferred", "rounds", "maintenance"}
 )
 
 
@@ -111,6 +114,9 @@ class Backend(Protocol):
 
     def delete(self, tree: Any, keys: np.ndarray) -> tuple[Any, int]: ...
 
+    def compact(self, tree: Any, spec: "IndexSpec", *, min_occupancy: float,
+                force: bool) -> tuple[Any, dict]: ...
+
     def start_leaf(self, tree: Any, key: np.uint64) -> int: ...
 
     def leaf_items(self, tree: Any, leaf: int
@@ -149,6 +155,10 @@ class _BSBackend:
 
     def delete(self, tree, keys):
         return _bs.delete_batch(tree, keys)
+
+    def compact(self, tree, spec, *, min_occupancy, force):
+        return _bs.compact(tree, min_occupancy=min_occupancy,
+                           alpha=spec.alpha, force=force)
 
     def start_leaf(self, tree, key):
         hi, lo = split_u64(np.array([key], np.uint64))
@@ -201,6 +211,10 @@ class _CBSBackend:
 
     def delete(self, tree, keys):
         return _cbs.cbs_delete_batch(tree, keys)
+
+    def compact(self, tree, spec, *, min_occupancy, force):
+        return _cbs.cbs_compact(tree, min_occupancy=min_occupancy,
+                                alpha=spec.alpha, force=force)
 
     def start_leaf(self, tree, key):
         hi, lo = split_u64(np.array([key], np.uint64))
@@ -447,6 +461,20 @@ class Index:
         tree, n = self.impl.delete(self.tree, keys)
         return (dataclasses.replace(self, tree=tree),
                 {"requested": int(len(keys)), "deleted": int(n)})
+
+    def compact(self, *, min_occupancy: float = 0.5, force: bool = False
+                ) -> tuple["Index", dict]:
+        """Structural maintenance: merge under-occupied / emptied leaves
+        and reclaim slack left behind by the lazy delete path (the paper
+        leaves emptied nodes in the chain, §5).  A no-op unless mean leaf
+        occupancy drops below ``min_occupancy`` or an empty leaf exists
+        (``force`` overrides).  Returns ``(new Index, counters)`` with
+        ``{keys, leaves_before, leaves_after, empty_leaves,
+        mean_occupancy, compacted, reclaimed_bytes}``; functional like
+        every other write."""
+        tree, counters = self.impl.compact(
+            self.tree, self.spec, min_occupancy=min_occupancy, force=force)
+        return dataclasses.replace(self, tree=tree), counters
 
     # -- introspection ---------------------------------------------------
     def stats(self) -> dict:

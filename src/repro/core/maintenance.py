@@ -1,0 +1,482 @@
+"""Batched structural maintenance shared by both backends.
+
+Splits, repacks and compaction are the *slow* path of the BS-tree design:
+the device handles every in-node update in one segmented-merge dispatch
+(:mod:`repro.core.bstree`), and structural changes are amortised host
+events.  Before this module they were also *scalar* host events — one
+root-to-leaf traversal per deferred key, or a whole-tree rebuild per CBS
+out-of-frame batch.  This module makes the slow path batched too:
+
+* :func:`host_descend_paths` — ONE vectorised numpy descent for the whole
+  deferred batch (``O(levels)`` gather/compare passes, recording the
+  root-to-leaf path of every key);
+
+* per-leaf **k-way splits** — deferred keys group into per-leaf segments
+  (contiguous, because the batch is sorted); each overflowing leaf merges
+  its whole segment once and emits all of its children in a single
+  ``ceil(c / per)``-way split instead of a chain of 2-way splits;
+
+* :func:`patch_parents` — separator/child insertion walks the tree **level
+  by level**: all pending ``(separator, right_child)`` pairs of one level
+  are merged into their parents in one pass, overflowing parents split
+  k-way, and the root grows incrementally (new levels are added on top;
+  the tree is never rebuilt from scratch);
+
+* the CBS variant (:func:`cbs_batched_repack`) re-FOR-encodes only the
+  *affected* leaves, choosing the narrowest fitting tag width per emitted
+  leaf (paper §5 construction rule), and patches parents through the same
+  machinery — inner nodes share one uncompressed layout across backends.
+
+Every entry point reports what it did through a ``maintenance`` counters
+dict (:func:`new_counters`) that rides inside the unified insert-stats
+schema and the ``compact()`` result.
+
+All functions mutate a plain *host dict* ``h`` of numpy arrays (the
+``to_host`` form of a tree) in place; callers re-wrap with ``from_host``.
+Both backends share the inner-node fields ``{inner_keys, inner_child,
+root, height, num_inner, n}``; leaf fields differ and are handled by the
+backend-specific passes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .layout import MAXKEY, spread_positions
+
+__all__ = [
+    "new_counters",
+    "merge_counters",
+    "compaction_plan",
+    "host_descend_paths",
+    "rows_used_mask",
+    "ancestors_from_paths",
+    "patch_parents",
+    "bs_batched_split_insert",
+    "cbs_batched_repack",
+    "SPLIT_OCCUPANCY",
+]
+
+#: Post-split occupancy target (paper splits leave nodes half full so the
+#: next inserts hit gaps, §4.2).
+SPLIT_OCCUPANCY = 0.5
+
+
+def new_counters() -> dict:
+    """Zeroed maintenance counters — the schema reported under the
+    ``"maintenance"`` key of every insert-stats dict and by ``compact``."""
+    return {
+        "leaf_splits": 0,        # leaves that overflowed and split k-way
+        "leaves_allocated": 0,   # new leaf rows taken from slack
+        "leaves_repacked": 0,    # leaves rewritten in place (no split)
+        "inner_splits": 0,       # inner nodes that overflowed and split
+        "inner_allocated": 0,    # new inner rows taken from slack
+        "height_growth": 0,      # levels added above the old root
+    }
+
+
+def merge_counters(acc: dict, extra: dict) -> dict:
+    """Accumulate one counters dict into another (sharded aggregation)."""
+    for k, v in extra.items():
+        acc[k] = acc.get(k, 0) + v
+    return acc
+
+
+def compaction_plan(per_leaf: np.ndarray, occupancy: np.ndarray, *,
+                    min_occupancy: float, force: bool) -> tuple[dict, bool]:
+    """The shared ``compact()`` gate: given per-leaf key counts and
+    logical occupancies, build the counters skeleton and decide whether a
+    re-pack is warranted (mean occupancy below threshold, any fully empty
+    leaf, or ``force``).  Callers fill ``leaves_after`` / ``compacted`` /
+    ``reclaimed_bytes`` when they do re-pack."""
+    nl = len(per_leaf)
+    empty = int((per_leaf == 0).sum())
+    mean_occ = float(occupancy.mean()) if nl else 0.0
+    counters = {
+        "keys": int(per_leaf.sum()),
+        "leaves_before": nl,
+        "leaves_after": nl,
+        "empty_leaves": empty,
+        "mean_occupancy": round(mean_occ, 4),
+        "compacted": False,
+        "reclaimed_bytes": 0,
+    }
+    return counters, force or empty > 0 or mean_occ < min_occupancy
+
+
+# ---------------------------------------------------------------------------
+# Vectorised descent + ancestry
+# ---------------------------------------------------------------------------
+
+def host_descend_paths(h: dict, keys: np.ndarray):
+    """Root-to-leaf descent for the whole batch in ``O(levels)`` numpy
+    passes.  Returns ``(paths (B, height) int64 — inner node per level,
+    root first; leaf (B,) int64)``.  Works on any backend's host dict:
+    inner nodes share the uncompressed ``(keys, child)`` layout."""
+    b = len(keys)
+    height = h["height"]
+    paths = np.zeros((b, height), dtype=np.int64)
+    node = np.full(b, h["root"], dtype=np.int64)
+    ik, ic = h["inner_keys"], h["inner_child"]
+    for lvl in range(height):
+        paths[:, lvl] = node
+        rows = ik[node]  # (B, n)
+        c = np.sum(keys[:, None] >= rows, axis=1)  # succ_gt, branchless
+        node = ic[node, c]
+    return paths, node
+
+
+def rows_used_mask(rows: np.ndarray) -> np.ndarray:
+    """Used-slot mask for ``(..., n)`` u64 rows per the gap-duplication
+    invariant: slot i is used iff it differs from slot i+1 (last slot iff
+    not MAXKEY)."""
+    pad = np.full(rows.shape[:-1] + (1,), MAXKEY, dtype=np.uint64)
+    nxt = np.concatenate([rows[..., 1:], pad], axis=-1)
+    return (rows != nxt) & (rows != MAXKEY)
+
+
+def ancestors_from_paths(paths: np.ndarray) -> dict:
+    """``child inner node -> parent inner node`` over all recorded paths
+    (the root maps to nothing — ``dict.get`` returns ``None``)."""
+    anc: dict[int, int] = {}
+    for lvl in range(paths.shape[1] - 1):
+        pairs = np.unique(paths[:, lvl : lvl + 2], axis=0)
+        for p, c in pairs:
+            anc[int(c)] = int(p)
+    return anc
+
+
+# ---------------------------------------------------------------------------
+# Capacity management (slack rows; geometric growth when slack runs out)
+# ---------------------------------------------------------------------------
+
+def _ensure_capacity(arr: np.ndarray, needed: int, fill) -> np.ndarray:
+    cap = arr.shape[0]
+    if needed <= cap:
+        return arr
+    new_cap = max(needed, cap + (cap >> 1) + 4)
+    extra = np.full((new_cap - cap,) + arr.shape[1:], fill, dtype=arr.dtype)
+    return np.concatenate([arr, extra], axis=0)
+
+
+def _alloc_inner(h: dict, counters: dict) -> int:
+    need = int(h["num_inner"]) + 1
+    h["inner_keys"] = _ensure_capacity(h["inner_keys"], need, MAXKEY)
+    h["inner_child"] = _ensure_capacity(h["inner_child"], need, 0)
+    nid = need - 1
+    h["inner_keys"][nid] = MAXKEY
+    h["inner_child"][nid] = 0
+    h["num_inner"] = need
+    counters["inner_allocated"] += 1
+    return nid
+
+
+# ---------------------------------------------------------------------------
+# Inner-node entry extraction / packing (reference-equivalent, vectorised)
+# ---------------------------------------------------------------------------
+
+def _inner_entries(h: dict, node: int):
+    """Used ``(separators, children)`` of one inner row.  Mirrors the
+    scalar collection in ``ReferenceBSTree._split_inner``: the child right
+    of separator slot i lives at child slot i+1; gap slots are skipped."""
+    n = h["n"]
+    row = h["inner_keys"][node]
+    used = rows_used_mask(row[None, :])[0][: n - 1]  # slot n-1 is the pad
+    seps = row[: n - 1][used]
+    kid_mask = np.zeros(n, dtype=bool)
+    kid_mask[0] = True
+    kid_mask[1:n] = used
+    kids = h["inner_child"][node][kid_mask][: len(seps) + 1]
+    return seps, kids.astype(np.int64)
+
+
+def _write_inner(h: dict, node: int, seps: np.ndarray, kids: np.ndarray):
+    """Rewrite one inner row packed from slot 0 (trailing MAXKEY gaps
+    satisfy the invariant; slot n-1 stays the MAXKEY pad)."""
+    n = h["n"]
+    assert len(seps) <= n - 1 and len(kids) == len(seps) + 1
+    row = np.full(n, MAXKEY, dtype=np.uint64)
+    ch = np.zeros(n, dtype=np.int32)
+    row[: len(seps)] = seps
+    ch[: len(kids)] = kids
+    h["inner_keys"][node] = row
+    h["inner_child"][node] = ch
+
+
+def _merge_pairs(seps, kids, pairs):
+    """Merge new ``(sep, right_child)`` pairs into an inner node's used
+    entries.  Pair representation: child ``kids[0]`` is the left anchor and
+    every separator pairs with the child to its right, so a sorted merge of
+    the pair lists is exactly separator insertion."""
+    pairs = sorted(pairs)
+    new_seps = np.array([s for s, _ in pairs], dtype=np.uint64)
+    new_kids = np.array([c for _, c in pairs], dtype=np.int64)
+    all_seps = np.concatenate([seps, new_seps])
+    all_right = np.concatenate([kids[1:], new_kids])
+    order = np.argsort(all_seps, kind="stable")
+    mseps = all_seps[order]
+    mkids = np.concatenate([kids[:1], all_right[order]])
+    return mseps, mkids
+
+
+# ---------------------------------------------------------------------------
+# Level-by-level parent patching (the shared upward pass)
+# ---------------------------------------------------------------------------
+
+def patch_parents(h: dict, pending: dict, anc: dict, counters: dict) -> None:
+    """Insert all pending ``(separator, right_child)`` pairs, one
+    vectorised pass per tree level.
+
+    ``pending`` maps a parent inner node to the pairs produced by its
+    children's splits; the key ``None`` marks pairs whose split node was
+    the root itself (the root then grows — incrementally, never a
+    rebuild).  Overflowing parents split k-way and push their own pairs
+    one level up.  Mutates ``h`` (including ``root``/``height`` on
+    growth)."""
+    n = h["n"]
+    while pending:
+        if set(pending) == {None}:
+            _grow_root(h, pending[None], counters)
+            return
+        nxt: dict = {}
+        for parent, pairs in pending.items():
+            seps, kids = _inner_entries(h, parent)
+            mseps, mkids = _merge_pairs(seps, kids, pairs)
+            if len(mseps) <= n - 1:
+                _write_inner(h, parent, mseps, mkids)
+                continue
+            # k-way split: even child groups at the split occupancy
+            counters["inner_splits"] += 1
+            per = max(2, int(round(SPLIT_OCCUPANCY * (n - 1))))
+            m = -(-len(mkids) // per)
+            bounds = [len(mkids) * g // m for g in range(m + 1)]
+            ids = [parent] + [_alloc_inner(h, counters) for _ in range(m - 1)]
+            for g in range(m):
+                a, b = bounds[g], bounds[g + 1]
+                _write_inner(h, ids[g], mseps[a : b - 1], mkids[a:b])
+            up = [(np.uint64(mseps[bounds[g + 1] - 1]), ids[g + 1])
+                  for g in range(m - 1)]
+            nxt.setdefault(anc.get(parent), []).extend(up)
+        pending = nxt
+
+
+def _grow_root(h: dict, pairs, counters: dict) -> None:
+    """Add levels above the old root until one node holds everything.
+    ``pairs`` are the (sep, right_child) spill of the old root's split;
+    the old root id stays valid as the leftmost child."""
+    n = h["n"]
+    pairs = sorted(pairs)
+    seps = np.array([s for s, _ in pairs], dtype=np.uint64)
+    kids = np.array([int(h["root"])] + [c for _, c in pairs], dtype=np.int64)
+    while True:
+        counters["height_growth"] += 1
+        per = n - 1  # new root levels pack (gaps live at the leaves)
+        m = -(-len(kids) // per)
+        bounds = [len(kids) * g // m for g in range(m + 1)]
+        ids = [_alloc_inner(h, counters) for _ in range(m)]
+        for g in range(m):
+            a, b = bounds[g], bounds[g + 1]
+            _write_inner(h, ids[g], seps[a : b - 1], kids[a:b])
+        h["height"] = int(h["height"]) + 1
+        if m == 1:
+            h["root"] = ids[0]
+            return
+        seps = np.array([seps[bounds[g + 1] - 1] for g in range(m - 1)],
+                        dtype=np.uint64)
+        kids = np.array(ids, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# BS backend: batched deferred-key insertion with k-way leaf splits
+# ---------------------------------------------------------------------------
+
+def _segment_runs(leaf: np.ndarray):
+    """(start, end) of each contiguous destination-leaf run in a sorted
+    batch (keys of one leaf are contiguous because leaves partition the
+    key space)."""
+    if len(leaf) == 0:
+        return []
+    cuts = np.flatnonzero(np.concatenate([[True], leaf[1:] != leaf[:-1]]))
+    ends = np.append(cuts[1:], len(leaf))
+    return list(zip(cuts.tolist(), ends.tolist()))
+
+
+def _backfill_row(row: np.ndarray, *vrows: np.ndarray) -> None:
+    """Gap fill one row in place: every MAXKEY placeholder takes the first
+    subsequent real key (suffix-scan, vectorised)."""
+    n = len(row)
+    iota = np.arange(n, dtype=np.int64)
+    idx = np.where(row != MAXKEY, iota, n)
+    nxt = np.minimum.accumulate(idx[::-1])[::-1]
+    safe = np.minimum(nxt, n - 1)
+    has = nxt < n
+    row[:] = np.where(has, row[safe], MAXKEY)
+    for v in vrows:
+        v[:] = np.where(has, v[safe], 0).astype(v.dtype)
+
+
+def _alloc_bs_leaf(h: dict, counters: dict) -> int:
+    need = int(h["num_leaves"]) + 1
+    h["leaf_keys"] = _ensure_capacity(h["leaf_keys"], need, MAXKEY)
+    h["leaf_vals"] = _ensure_capacity(h["leaf_vals"], need, 0)
+    h["next_leaf"] = _ensure_capacity(h["next_leaf"], need, -1)
+    lid = need - 1
+    h["leaf_keys"][lid] = MAXKEY
+    h["leaf_vals"][lid] = 0
+    h["next_leaf"][lid] = -1
+    h["num_leaves"] = need
+    counters["leaves_allocated"] += 1
+    return lid
+
+
+def _write_bs_leaf(h: dict, lid: int, mk: np.ndarray, mv: np.ndarray,
+                   occupancy: float) -> None:
+    n = h["n"]
+    row = np.full(n, MAXKEY, dtype=np.uint64)
+    vr = np.zeros(n, dtype=np.uint32)
+    pos = spread_positions(len(mk), n, occupancy)
+    row[pos] = mk
+    vr[pos] = mv
+    _backfill_row(row, vr)
+    h["leaf_keys"][lid] = row
+    h["leaf_vals"][lid] = vr
+
+
+def bs_batched_split_insert(h: dict, keys: np.ndarray, vals: np.ndarray,
+                            counters: dict):
+    """Insert a sorted-unique deferred batch into the BS host dict with
+    k-way splits: one vectorised descent, one merge + split per affected
+    leaf, one parent-patch pass per level.  Returns ``(n_inserted,
+    n_present)``; present keys get their value overwritten (upsert)."""
+    n = h["n"]
+    keys = np.asarray(keys, dtype=np.uint64)
+    vals = np.asarray(vals, dtype=np.uint32)
+    if len(keys) == 0:
+        return 0, 0
+    paths, leaf = host_descend_paths(h, keys)
+    anc = ancestors_from_paths(paths)
+    n_ins = n_ups = 0
+    pending: dict = {}
+    per = max(1, int(round(SPLIT_OCCUPANCY * n)))
+    for a, b in _segment_runs(leaf):
+        lid = int(leaf[a])
+        seg_k, seg_v = keys[a:b], vals[a:b]
+        row = h["leaf_keys"][lid]
+        used = rows_used_mask(row[None, :])[0]
+        ex_k = row[used].copy()
+        ex_v = h["leaf_vals"][lid][used].copy()
+        if len(ex_k):
+            pos = np.searchsorted(ex_k, seg_k)
+            posc = np.minimum(pos, len(ex_k) - 1)
+            present = (pos < len(ex_k)) & (ex_k[posc] == seg_k)
+            ex_v[pos[present]] = seg_v[present]  # upsert over the dup-run
+        else:
+            present = np.zeros(len(seg_k), dtype=bool)
+        n_ups += int(present.sum())
+        new_mask = ~present
+        n_ins += int(new_mask.sum())
+        mk = np.concatenate([ex_k, seg_k[new_mask]])
+        mv = np.concatenate([ex_v, seg_v[new_mask]])
+        order = np.argsort(mk, kind="stable")
+        mk, mv = mk[order], mv[order]
+        if len(mk) <= n:
+            _write_bs_leaf(h, lid, mk, mv, SPLIT_OCCUPANCY)
+            counters["leaves_repacked"] += 1
+            continue
+        # k-way split: m even chunks at the split occupancy
+        counters["leaf_splits"] += 1
+        m = -(-len(mk) // per)
+        bounds = [len(mk) * g // m for g in range(m + 1)]
+        ids = [lid] + [_alloc_bs_leaf(h, counters) for _ in range(m - 1)]
+        old_next = int(h["next_leaf"][lid])
+        for g in range(m):
+            _write_bs_leaf(h, ids[g], mk[bounds[g] : bounds[g + 1]],
+                           mv[bounds[g] : bounds[g + 1]], SPLIT_OCCUPANCY)
+            if g:
+                h["next_leaf"][ids[g - 1]] = ids[g]
+        h["next_leaf"][ids[-1]] = old_next
+        parent = int(paths[a, -1]) if h["height"] else None
+        pend = pending.setdefault(parent, [])
+        for g in range(1, m):
+            pend.append((np.uint64(mk[bounds[g]]), ids[g]))
+    patch_parents(h, pending, anc, counters)
+    return n_ins, n_ups
+
+
+# ---------------------------------------------------------------------------
+# CBS backend: targeted repack of affected leaves only
+# ---------------------------------------------------------------------------
+
+def _alloc_cbs_leaf(h: dict, counters: dict) -> int:
+    from .compress import TAG_U64
+
+    need = int(h["num_leaves"]) + 1
+    h["leaf_words"] = _ensure_capacity(h["leaf_words"], need, 0xFFFFFFFF)
+    h["leaf_tag"] = _ensure_capacity(h["leaf_tag"], need, TAG_U64)
+    h["leaf_k0"] = _ensure_capacity(h["leaf_k0"], need, 0)
+    h["next_leaf"] = _ensure_capacity(h["next_leaf"], need, -1)
+    lid = need - 1
+    h["leaf_words"][lid] = 0xFFFFFFFF  # empty u64 block = all-MAXKEY planes
+    h["leaf_tag"][lid] = TAG_U64
+    h["leaf_k0"][lid] = 0
+    h["next_leaf"][lid] = -1
+    h["num_leaves"] = need
+    counters["leaves_allocated"] += 1
+    return lid
+
+
+def cbs_batched_repack(h: dict, keys: np.ndarray, alpha: float,
+                       counters: dict):
+    """Merge deferred keys into the CBS host dict by re-FOR-encoding only
+    the affected leaves (fresh narrowest tags, k-way when the merged set
+    outgrows one block) and patching parents level by level.  Returns
+    ``(n_inserted, n_present)`` — present keys are honest no-ops, NOT
+    counted as inserted (keys-only backend)."""
+    from .compress import _for_chunks, _leaf_keys_host
+
+    n = h["n"]
+    keys = np.asarray(keys, dtype=np.uint64)
+    if len(keys) == 0:
+        return 0, 0
+    paths, leaf = host_descend_paths(h, keys)
+    anc = ancestors_from_paths(paths)
+    n_ins = n_ups = 0
+    pending: dict = {}
+    for a, b in _segment_runs(leaf):
+        lid = int(leaf[a])
+        seg = keys[a:b]
+        ex = _leaf_keys_host(h["leaf_words"][lid], int(h["leaf_tag"][lid]),
+                             h["leaf_k0"][lid], n)
+        if len(ex):
+            pos = np.searchsorted(ex, seg)
+            posc = np.minimum(pos, len(ex) - 1)
+            present = (pos < len(ex)) & (ex[posc] == seg)
+        else:
+            present = np.zeros(len(seg), dtype=bool)
+        n_ups += int(present.sum())
+        fresh = seg[~present]
+        n_ins += len(fresh)
+        if len(fresh) == 0:
+            continue
+        mk = np.concatenate([ex, fresh])
+        mk.sort()
+        chunks = list(_for_chunks(mk, n, alpha))
+        ids = [lid] + [_alloc_cbs_leaf(h, counters)
+                       for _ in range(len(chunks) - 1)]
+        old_next = int(h["next_leaf"][lid])
+        for g, (tag, words, k0, _cnt) in enumerate(chunks):
+            h["leaf_words"][ids[g]] = words
+            h["leaf_tag"][ids[g]] = tag
+            h["leaf_k0"][ids[g]] = k0
+            if g:
+                h["next_leaf"][ids[g - 1]] = ids[g]
+        h["next_leaf"][ids[-1]] = old_next
+        if len(chunks) > 1:
+            counters["leaf_splits"] += 1
+            parent = int(paths[a, -1]) if h["height"] else None
+            pend = pending.setdefault(parent, [])
+            for g in range(1, len(chunks)):
+                pend.append((np.uint64(chunks[g][2]), ids[g]))
+        else:
+            counters["leaves_repacked"] += 1
+    patch_parents(h, pending, anc, counters)
+    return n_ins, n_ups

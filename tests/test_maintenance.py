@@ -1,0 +1,323 @@
+"""Adversarial structural-maintenance tests (batched splits, targeted CBS
+repack, compaction) cross-checked against the scalar oracle.
+
+The scenarios are chosen to stress exactly what the batched maintenance
+layer replaced: all deferred keys landing in ONE leaf (the skew case that
+used to pay one traversal per key), splits cascading through every inner
+level into root growth, CBS repack at each tag width (the case that used
+to rebuild the whole tree), and ``compact()`` after mass deletion (the
+paper's lazily-emptied nodes, reclaimed)."""
+import numpy as np
+import pytest
+
+from repro.core import Index, IndexSpec, ReferenceBSTree
+from repro.core import bstree as B
+from repro.core import compress as C
+from repro.core import maintenance as M
+from repro.core.distributed import (
+    build_sharded,
+    compact_sharded,
+    delete_sharded,
+    insert_sharded,
+)
+from conftest import rand_keys
+
+N = 16
+
+
+def oracle_with(keys, vals, batch, bvals, n=N):
+    ref = ReferenceBSTree.bulk_load(keys, vals, n=n)
+    for k, v in zip(batch, bvals):
+        ref.insert(int(k), int(v))
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# BS: batched k-way splits
+# ---------------------------------------------------------------------------
+
+
+def test_all_deferred_keys_in_one_leaf(rng):
+    """The skew worst case: thousands of new keys between two existing
+    neighbours — one leaf takes the entire deferred batch in one k-way
+    split instead of a 2-way split chain."""
+    keys = np.sort(rand_keys(rng, 3000))
+    vals = np.arange(len(keys), dtype=np.uint32)
+    t = B.bulk_load(keys, vals, n=N)
+    base = keys[100]
+    dense = base + np.arange(1, 2001, dtype=np.uint64) * np.uint64(3)
+    dense = dense[~np.isin(dense, keys)]
+    bvals = np.arange(len(dense), dtype=np.uint32) + 7
+    t2, stats = B.insert_batch(t, dense, bvals)
+    assert stats["deferred"] == len(dense)
+    assert stats["inserted"] == len(dense)
+    m = stats["maintenance"]
+    assert m["leaf_splits"] == 1  # ONE k-way split, not a chain
+    assert m["leaves_allocated"] > 100
+    ref = oracle_with(keys, vals, dense, bvals)
+    assert B.check_invariants(t2) == ref.items()
+
+
+def test_splits_cascade_to_new_root(rng):
+    """A single-leaf tree swallowing thousands of keys must grow multiple
+    levels in one batch (root growth is incremental, never a rebuild)."""
+    keys = np.arange(5, dtype=np.uint64) * 1000
+    vals = np.arange(5, dtype=np.uint32)
+    t = B.bulk_load(keys, vals, n=N)
+    assert t.height == 0
+    batch = np.arange(1, 5001, dtype=np.uint64) * 7 + 3
+    bvals = np.arange(len(batch), dtype=np.uint32)
+    t2, stats = B.insert_batch(t, batch, bvals)
+    assert t2.height >= 3
+    assert stats["maintenance"]["height_growth"] == t2.height
+    ref = oracle_with(keys, vals, batch, bvals)
+    assert B.check_invariants(t2) == ref.items()
+    f, _ = B.lookup_u64(t2, batch)
+    assert f.all()
+
+
+def test_scattered_overflow_many_parents(rng):
+    """Deferred segments spread over many leaves under many parents:
+    inner splits propagate level by level and stay consistent."""
+    keys = np.sort(rand_keys(rng, 20000))
+    vals = np.arange(len(keys), dtype=np.uint32)
+    t = B.bulk_load(keys, vals, n=N)
+    adds = (keys[:-1:12][:, None]
+            + np.arange(1, 6, dtype=np.uint64)[None, :]).ravel()
+    adds = np.unique(adds)
+    adds = adds[~np.isin(adds, keys)]
+    avals = np.arange(len(adds), dtype=np.uint32)
+    t2, stats = B.insert_batch(t, adds, avals)
+    assert stats["maintenance"]["leaf_splits"] > 100
+    assert stats["maintenance"]["inner_splits"] > 10
+    ref = oracle_with(keys, vals, adds, avals)
+    assert B.check_invariants(t2) == ref.items()
+
+
+def test_host_split_pass_is_batched_not_scalar(rng, monkeypatch):
+    """Structural guarantee: the deferred path never falls back to the
+    scalar per-key oracle insert (O(deferred) traversals)."""
+    keys = np.sort(rand_keys(rng, 2000))
+    t = B.bulk_load(keys, np.arange(len(keys), dtype=np.uint32), n=N)
+
+    def boom(self, k, v):  # pragma: no cover - failure path
+        raise AssertionError("scalar per-key insert on the deferred path")
+
+    monkeypatch.setattr(ReferenceBSTree, "insert", boom)
+    dense = keys[50] + np.arange(1, 501, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    t2, stats = B.insert_batch(t, dense,
+                               np.arange(len(dense), dtype=np.uint32))
+    assert stats["deferred"] == len(dense)
+    f, _ = B.lookup_u64(t2, dense)
+    assert f.all()
+
+
+def test_deferred_upserts_counted_and_applied(rng):
+    """Present keys inside an overflowing segment are upserts: value
+    rewritten, counted as present, requested-vs-applied balances."""
+    keys = np.sort(rand_keys(rng, 1000))
+    vals = np.arange(len(keys), dtype=np.uint32)
+    t = B.bulk_load(keys, vals, n=N)
+    lo, hi = keys[10], keys[11]
+    dense = np.unique(
+        np.linspace(int(lo) + 1, int(hi) - 1, 200).astype(np.uint64))
+    dense = dense[~np.isin(dense, keys)]
+    batch = np.concatenate([dense, keys[10:12]])  # 2 present neighbours
+    bvals = np.arange(len(batch), dtype=np.uint32) + 10_000
+    t2, stats = B.insert_batch(t, batch, bvals)
+    assert stats["present"] == 2
+    assert stats["inserted"] == len(dense)
+    assert (stats["requested"]
+            == stats["inserted"] + stats["present"])
+    f, got = B.lookup_u64(t2, keys[10:12])
+    assert f.all() and (got >= 10_000).all()  # upsert rewrote the values
+
+
+# ---------------------------------------------------------------------------
+# CBS: targeted repack (never a whole-tree rebuild)
+# ---------------------------------------------------------------------------
+
+
+def _cbs_keys_for_tag(rng, tag):
+    """Key sets whose bulk load lands (mostly) in the given tag width."""
+    if tag == C.TAG_U16:
+        return np.unique(
+            np.uint64(1 << 30) + rng.integers(0, 3000, 400,
+                                              dtype=np.uint64) * 7)
+    if tag == C.TAG_U32:
+        return np.unique(
+            np.uint64(1 << 40)
+            + rng.integers(0, 2**31, 400, dtype=np.uint64) * 3)
+    return np.unique(rng.integers(0, 2**62, 400, dtype=np.uint64))
+
+
+@pytest.mark.parametrize("tag", [C.TAG_U16, C.TAG_U32, C.TAG_U64])
+def test_cbs_repack_per_tag_width(rng, tag, monkeypatch):
+    """Deferred keys repack only the affected leaves at every tag width;
+    the whole-tree rebuild is never invoked (root unchanged or not)."""
+    keys = _cbs_keys_for_tag(rng, tag)
+    t = C.cbs_bulk_load(keys, n=N)
+    tags = np.asarray(t.leaf_tag)[: int(t.num_leaves)]
+    assert (tags == tag).any()
+
+    monkeypatch.setattr(
+        C, "_cbs_host_rebuild",
+        lambda *a, **k: pytest.fail("whole-tree rebuild on insert path"))
+
+    # out-of-frame / overflowing batch: far keys + a dense cluster
+    far = np.unique(rng.integers(2**62, 2**63, 80, dtype=np.uint64))
+    dense = keys[0] + np.arange(1, 200, dtype=np.uint64)
+    batch = np.unique(np.concatenate([far, dense]))
+    batch = batch[~np.isin(batch, keys)]
+    t2, stats = C.cbs_insert_batch(t, batch)
+    assert stats["deferred"] > 0
+    want = np.unique(np.concatenate([keys, batch]))
+    np.testing.assert_array_equal(C.cbs_items(t2), want)
+    f, _, _ = C.cbs_lookup_u64(t2, want)
+    assert f.all()
+    # repacked leaves re-chose narrowest fitting tags (dense cluster fits
+    # a narrow tag; far keys force wide leaves)
+    tags2 = np.asarray(t2.leaf_tag)[: int(t2.num_leaves)]
+    assert len(np.unique(tags2)) >= len(np.unique(tags))
+
+
+def test_cbs_repack_reports_present_honestly(rng):
+    """Satellite bugfix: deferred keys that already exist are counted as
+    present, not inserted — requested-vs-applied balances."""
+    keys = _cbs_keys_for_tag(rng, C.TAG_U16)
+    t = C.cbs_bulk_load(keys, n=N)
+    # direct repack call with a mix of present and new keys
+    batch = np.unique(np.concatenate([
+        keys[:7],
+        np.array([keys[-1] + np.uint64(10**9)], np.uint64),
+    ]))
+    t2, ins, ups = C._cbs_host_repack(t, batch)
+    assert ins == 1 and ups == 7
+    np.testing.assert_array_equal(
+        C.cbs_items(t2), np.unique(np.concatenate([keys, batch])))
+    # end-to-end: a deferred-heavy batch still balances
+    far = np.unique(rng.integers(2**61, 2**62, 50, dtype=np.uint64))
+    batch = np.concatenate([far, far[:5], keys[:3]])  # dupes + present
+    t3, stats = C.cbs_insert_batch(t, batch)
+    assert stats["present"] == 3
+    assert stats["inserted"] == len(far)
+    assert (stats["requested"] - stats["inserted"] - stats["present"]
+            == 5)  # batch-internal duplicates
+
+
+def test_cbs_root_growth_without_rebuild(rng, monkeypatch):
+    """Enough deferred keys to cascade into new root levels — still no
+    whole-tree rebuild (the root grows incrementally)."""
+    keys = np.unique(np.uint64(1 << 30)
+                     + np.arange(200, dtype=np.uint64) * 5)
+    t = C.cbs_bulk_load(keys, n=N)
+    h0 = t.height
+    monkeypatch.setattr(
+        C, "_cbs_host_rebuild",
+        lambda *a, **k: pytest.fail("whole-tree rebuild on insert path"))
+    batch = np.unique(rng.integers(0, 2**62, 4000, dtype=np.uint64))
+    batch = batch[~np.isin(batch, keys)]
+    t2, stats = C.cbs_insert_batch(t, batch)
+    assert t2.height > h0
+    assert stats["maintenance"]["height_growth"] >= 1
+    want = np.unique(np.concatenate([keys, batch]))
+    np.testing.assert_array_equal(C.cbs_items(t2), want)
+
+
+# ---------------------------------------------------------------------------
+# compact(): reclaiming the lazily-deleted chain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["bs", "cbs"])
+def test_compact_after_mass_deletion(rng, backend):
+    keys = np.sort(rand_keys(rng, 5000))
+    vals = np.arange(len(keys), dtype=np.uint32)
+    use_vals = backend == "bs"
+    idx = Index.build(keys, vals if use_vals else None,
+                      spec=IndexSpec(n=N, backend=backend))
+    dels = rng.choice(keys, 4500, replace=False)
+    idx, _ = idx.delete(dels)
+    before = idx.stats()
+    idx2, cc = idx.compact()
+    assert cc["compacted"]
+    assert cc["leaves_after"] < cc["leaves_before"] == before["num_leaves"]
+    assert cc["empty_leaves"] > 0
+    assert cc["reclaimed_bytes"] > 0
+    # cross-check content against the oracle with the same history
+    ref = ReferenceBSTree.bulk_load(keys, vals, n=N)
+    for k in dels:
+        ref.delete(int(k))
+    got_k, got_v = idx2.items()
+    want = ref.items()
+    np.testing.assert_array_equal(got_k, [k for k, _ in want])
+    if use_vals:
+        np.testing.assert_array_equal(got_v, [v for _, v in want])
+    idx2.check_invariants()
+    # compaction is maintenance, not mutation: the old index still works
+    f, _ = idx.lookup(got_k)
+    assert f.all()
+
+
+@pytest.mark.parametrize("backend", ["bs", "cbs"])
+def test_compact_noop_on_healthy_tree(rng, backend):
+    keys = np.sort(rand_keys(rng, 3000))
+    idx = Index.build(keys, spec=IndexSpec(n=N, backend=backend))
+    idx2, cc = idx.compact()
+    assert not cc["compacted"]
+    assert cc["leaves_after"] == cc["leaves_before"]
+    assert idx2.tree is idx.tree  # unchanged, no copy
+
+
+def test_compact_survives_lookup_after_emptied_leaves(rng):
+    """Deleting every key of several middle leaves then compacting must
+    keep ranges and lookups exact (the empty-leaf chain case)."""
+    keys = np.arange(1, 2001, dtype=np.uint64) * 10
+    idx = Index.build(keys, spec=IndexSpec(n=N, backend="bs"))
+    idx, _ = idx.delete(keys[300:900])
+    idx, cc = idx.compact()
+    assert cc["compacted"]
+    keep = np.concatenate([keys[:300], keys[900:]])
+    f, _ = idx.lookup(keep)
+    assert f.all()
+    ks, _ = idx.range_scan(keys[0], keys[-1])
+    np.testing.assert_array_equal(ks, keep)
+
+
+# ---------------------------------------------------------------------------
+# Facade / sharded surface
+# ---------------------------------------------------------------------------
+
+
+def test_insert_stats_carry_maintenance_counters(rng):
+    keys = np.sort(rand_keys(rng, 2000))
+    idx = Index.build(keys, spec=IndexSpec(n=N, backend="bs"))
+    _, stats = idx.insert(rand_keys(rng, 10))
+    assert set(stats["maintenance"]) == set(M.new_counters())
+    # quiet insert: all counters zero
+    if stats["deferred"] == 0:
+        assert all(v == 0 for v in stats["maintenance"].values())
+
+
+def test_sharded_compact_and_maintenance_aggregation(rng):
+    keys = np.sort(rand_keys(rng, 6000))
+    st = build_sharded(keys, 4, n=N)
+    dense = keys[100] + np.arange(1, 1500, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    st, stats = insert_sharded(st, dense)
+    assert stats["maintenance"]["leaf_splits"] >= 1
+    st, n_del = delete_sharded(st, keys[:5000])
+    st, cc = compact_sharded(st)
+    assert cc["compacted"] >= 1
+    assert cc["leaves_after"] <= cc["leaves_before"]
+    # contents survive the per-shard repack
+    keep = keys[5000:]
+    from repro.core.distributed import _shard_tree
+    got = []
+    for s in range(st.num_shards):
+        tree = _shard_tree(st, s)
+        got.append(B.check_invariants(tree))
+    flat = sorted(k for part in got for k, _ in part)
+    want = sorted(np.concatenate([keep, dense]).tolist())
+    assert flat == want
