@@ -1,7 +1,9 @@
 """Figures 5-9 analogue: workloads A-E throughput (batched, Mops/s),
-plus two structural-maintenance rows: wlF_skew (deferred-heavy skewed
-insert — batched k-way splits / targeted CBS repack) and wlG_compact
-(mass delete + ``compact()`` reclaim).
+plus three structural-maintenance rows: wlF_skew (deferred-heavy skewed
+insert — batched k-way splits / targeted CBS repack), wlG_compact (mass
+delete + ``compact()`` reclaim) and wlH_device_maint (deferred batch
+absorbed by the on-device split pass into preallocated slack — zero
+full-tree device<->host copies).
 
 One backend-agnostic code path through the ``Index`` facade — pick the
 tree with ``--backend {bs,cbs,auto,all}`` instead of duplicated BS/CBS
@@ -161,6 +163,23 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
     t("wlG_compact", dt,
       f"{comp['keys']/dt:.2f}Mkeys_l{comp['leaves_before']}"
       f"to{comp['leaves_after']}", "G_compact")
+
+    # Workload H: device-resident maintenance — a deferred-heavy batch
+    # whose splits land in the preallocated slack rows, so the whole
+    # split/parent-patch pass runs on device with zero full-tree
+    # transfers (PR 4 tentpole).  `dev` counts device-absorbed batches,
+    # `rg` on-device capacity regrows (0 = the slack budget held).
+    n_h = ops // 10
+    base_h = build[len(build) // 4]
+    skew_h = base_h + np.arange(1, 2 * n_h + 1, dtype=np.uint64) * np.uint64(5)
+    skew_h = skew_h[~np.isin(skew_h, build)][:n_h]
+    newv = (np.arange(len(skew_h), dtype=np.uint32)
+            if idx.supports_values else None)
+    dt, (_, hstats) = timed(lambda: idx.insert(skew_h, newv))
+    hm = hstats["maintenance"]
+    t("wlH_device_maint", dt,
+      f"{len(skew_h)/dt:.2f}Mops_dev{hm['device_batches']}"
+      f"_rg{hm['slack_regrows']}_ig{hm['inner_rows_gathered']}", "H_device")
 
 
 def main(argv=None) -> None:

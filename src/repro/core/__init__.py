@@ -12,8 +12,9 @@ Modules:
   reference   host-side scalar oracle (paper Algorithms 3-6)
   bstree      vectorised functional BS-tree (bulk load, search, updates)
   compress    FOR-compressed CBS-tree (paper §5-6)
-  maintenance batched structural maintenance shared by both backends
-              (k-way splits, targeted CBS repack, parent patching)
+  maintenance device-resident structural maintenance shared by both
+              backends (k-way split scatter into slack rows, targeted
+              CBS repack, touched-rows parent patching, compaction)
   distributed range-partitioned sharded index (shard_map + all_to_all)
   versioning  MVCC snapshots (OLC adaptation, paper §7)
 """

@@ -128,7 +128,9 @@ def bulk_load(
 
     per_leaf = max(1, int(round(alpha * n)))
     num_leaves = max(1, -(-len(keys) // per_leaf))
-    lcap = max(num_leaves + 4, int(num_leaves * slack))
+    from .maintenance import _grown_cap
+
+    lcap = _grown_cap(num_leaves, slack)
 
     leaf_keys = np.full((lcap, n), MAXKEY, dtype=np.uint64)
     leaf_vals = np.zeros((lcap, n), dtype=np.uint32)
@@ -197,7 +199,9 @@ def bulk_load(
         for ik, _ in levels:
             offs.append(total)
             total += ik.shape[0]
-        icap = max(total + 4, int(total * slack))
+        from .maintenance import _grown_cap
+
+        icap = _grown_cap(total, slack)
         inner_keys = np.full((icap, n), MAXKEY, dtype=np.uint64)
         inner_child = np.zeros((icap, n), dtype=np.int32)
         for lvl, (ik, ic) in enumerate(levels):
@@ -680,14 +684,19 @@ def _insert_merge(tree: BSTreeArrays, k_hi, k_lo, v, leaf):
     return t, n_ins, n_ups, overflow
 
 
-def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
+def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray,
+                 *, slack: float = 1.5):
     """Batched upsert.  Returns (tree', stats dict).
 
     A single segmented-merge dispatch applies every key whose leaf has
     room for its whole segment (no per-round host syncs); segments that
-    exceed their leaf's free gaps are deferred whole to a host maintenance
-    pass that performs batched k-way splits and level-by-level parent
-    separator insertion (:mod:`repro.core.maintenance`).
+    exceed their leaf's free gaps are deferred whole to the *device*
+    maintenance pass (:func:`repro.core.maintenance.bs_device_split_insert`)
+    which performs batched k-way splits into preallocated slack rows and
+    level-by-level parent separator insertion without ever copying the
+    tree to the host.  ``slack`` is the geometric headroom factor used
+    when the preallocated rows run out and capacity must grow (on
+    device).
 
     Stable low-level contract — the stats dict has exactly the unified
     schema shared with ``cbs_insert_batch``: ``requested`` (raw batch
@@ -724,10 +733,13 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray):
 
     d = np.asarray(overflow)
     if d.any():
+        from .maintenance import bs_device_split_insert
+
         idx = np.nonzero(d)[0]
         stats["deferred"] = len(idx)
-        tree, h_ins, h_ups = _host_insert_with_splits(
-            tree, keys_u64[idx], vals[idx], counters=stats["maintenance"]
+        tree, h_ins, h_ups = bs_device_split_insert(
+            tree, keys_u64[idx], vals[idx], stats["maintenance"],
+            slack=slack,
         )
         stats["inserted"] += h_ins
         stats["present"] += h_ups
@@ -817,14 +829,13 @@ class _HostView(ref.ReferenceBSTree):
 
 def _host_insert_with_splits(tree: BSTreeArrays, keys: np.ndarray,
                              vals: np.ndarray, counters: Optional[dict] = None):
-    """Insert deferred keys with batched k-way splits.  Returns
-    (tree', n_inserted, n_upserted) — upserts are keys that already
-    existed (their value is overwritten).
-
-    The whole batch is one vectorised descent + one merge/split per
-    affected leaf + one parent-patch pass per tree level
-    (:func:`repro.core.maintenance.bs_batched_split_insert`) — O(levels)
-    vectorised passes, not O(keys) scalar traversals."""
+    """Full-host variant of the deferred-key split pass: pull the whole
+    tree with ``to_host``, run the batched k-way split machinery on numpy,
+    push it back.  **No longer on the insert path** — deferred keys go
+    through :func:`repro.core.maintenance.bs_device_split_insert`, which
+    keeps the tree on device (tests monkeypatch ``to_host``/``from_host``
+    to prove it).  Kept as a recovery utility and cross-check oracle.
+    Returns (tree', n_inserted, n_upserted)."""
     from .maintenance import bs_batched_split_insert, new_counters
 
     if counters is None:
@@ -860,42 +871,31 @@ def _host_insert_with_splits(tree: BSTreeArrays, keys: np.ndarray,
 
 
 def compact(tree: BSTreeArrays, *, min_occupancy: float = 0.5,
-            alpha: float = DEFAULT_ALPHA, force: bool = False):
-    """Merge under-occupied / emptied leaves and reclaim slack.
+            alpha: float = DEFAULT_ALPHA, force: bool = False,
+            slack: float = 1.5):
+    """Merge under-occupied / emptied leaves and reclaim slack — on
+    device.
 
     Deletes never restructure (the paper handles them lazily), so a
     delete-heavy tree accumulates empty leaves in the chain and
     half-empty rows everywhere.  ``compact`` measures occupancy over the
     live leaves and, when the mean drops below ``min_occupancy`` or any
     leaf is fully empty (or ``force``), re-packs every surviving key at
-    bulk-load occupancy in one vectorised pass — leaves merge, the chain
-    shrinks, the height can drop, and slack rows return to the allocator.
+    bulk-load occupancy via one flat device gather in chain order
+    (:func:`repro.core.maintenance.bs_device_compact`) — leaves merge,
+    the chain shrinks, the height can drop, and slack rows return to the
+    allocator, with only per-leaf counts and the separator keys crossing
+    to the host.
 
     Returns ``(tree', counters)`` with counters
     ``{keys, leaves_before, leaves_after, empty_leaves, mean_occupancy,
     compacted, reclaimed_bytes}``.  When no compaction is needed the
     input tree is returned unchanged (``compacted`` False).
     """
-    from .maintenance import compaction_plan, rows_used_mask
+    from .maintenance import bs_device_compact
 
-    h = to_host(tree)
-    n = h["n"]
-    nl = int(h["num_leaves"])
-    used = rows_used_mask(h["leaf_keys"][:nl])
-    per_leaf = used.sum(axis=1)
-    counters, needed = compaction_plan(
-        per_leaf, per_leaf / n, min_occupancy=min_occupancy, force=force)
-    if not needed:
-        return tree, counters
-    ks = h["leaf_keys"][:nl][used]
-    vs = h["leaf_vals"][:nl][used]
-    order = np.argsort(ks, kind="stable")
-    new = bulk_load(ks[order], vs[order], n=n, alpha=alpha)
-    counters["leaves_after"] = int(new.num_leaves)
-    counters["compacted"] = True
-    counters["reclaimed_bytes"] = max(
-        0, tree.memory_bytes() - new.memory_bytes())
-    return new, counters
+    return bs_device_compact(tree, min_occupancy=min_occupancy,
+                             alpha=alpha, force=force, slack=slack)
 
 
 # ---------------------------------------------------------------------------

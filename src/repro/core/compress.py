@@ -100,6 +100,14 @@ class CBSTreeArrays:
     height: int = dataclasses.field(metadata=dict(static=True))
     node_width: int = dataclasses.field(metadata=dict(static=True))
 
+    @property
+    def leaf_capacity(self) -> int:
+        return self.leaf_words.shape[0]
+
+    @property
+    def inner_capacity(self) -> int:
+        return self.inner_hi.shape[0]
+
     def memory_bytes(self) -> int:
         total = 0
         for f in dataclasses.fields(self):
@@ -177,8 +185,9 @@ def _pack_leaf(keys: np.ndarray, tag: int, n: int, alpha: float) -> np.ndarray:
 def _for_chunks(keys: np.ndarray, n: int, alpha: float):
     """Greedy narrowest-fit split of sorted u64 keys into FOR leaves — the
     paper §5 construction rule, shared by bulk load and the targeted
-    repack (``maintenance.cbs_batched_repack``) so both encode leaves
-    identically.  Yields ``(tag, packed_words, k0, count)``."""
+    repack (``maintenance.cbs_device_maintenance``'s out-of-frame
+    fallback) so both encode leaves identically.  Yields
+    ``(tag, packed_words, k0, count)``."""
     caps = _leaf_caps(n)
     i = 0
     while i < len(keys):
@@ -213,7 +222,9 @@ def cbs_bulk_load(
         )
 
     num_leaves = len(leaves)
-    lcap = max(num_leaves + 4, int(num_leaves * slack))
+    from .maintenance import _grown_cap
+
+    lcap = _grown_cap(num_leaves, slack)
     leaf_words = np.zeros((lcap, 2 * n), dtype=np.uint32)
     leaf_words[num_leaves:] = 0xFFFFFFFF
     leaf_tag = np.full((lcap,), TAG_U64, dtype=np.int32)
@@ -288,7 +299,9 @@ def _build_inner_over(
     for ik, _ in levels:
         offs.append(total)
         total += ik.shape[0]
-    icap = max(total + 4, int(total * slack))
+    from .maintenance import _grown_cap
+
+    icap = _grown_cap(total, slack)
     inner_keys = np.full((icap, n), MAXKEY, dtype=np.uint64)
     inner_child = np.zeros((icap, n), dtype=np.int32)
     for lvl, (ik, ic) in enumerate(levels):
@@ -544,15 +557,18 @@ def _pack_tag(d_hi, d_lo, tag_const: int, n: int):
     return jnp.concatenate([d_hi, d_lo], axis=-1).astype(jnp.uint32)
 
 
-def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
+def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray, *,
+                     alpha: float = DEFAULT_ALPHA, slack: float = 1.5):
     """Batched insert into the CBS-tree, as ONE segmented-merge dispatch.
 
     Each leaf's whole in-frame key segment is merged into its unpacked
     logical planes in a single pass (unpack -> segmented merge -> repack at
-    every tag width, predicated by tag); the rest (out-of-frame deltas,
-    segments exceeding the leaf's free gaps) go through the host rebuild
-    path, which re-splits the affected leaves choosing fresh narrowest
-    tags (paper §5 Insert).
+    every tag width, predicated by tag); the rest go through the device
+    maintenance pass (:func:`repro.core.maintenance.cbs_device_maintenance`):
+    in-frame overflow segments split k-way *on device* at their existing
+    tag width into preallocated slack rows, and only out-of-frame
+    segments fall back to a touched-leaf-blocks host re-encode at fresh
+    narrowest tags (paper §5 Insert) — never a full-tree copy.
 
     Stable low-level contract — the stats dict has exactly the unified
     schema shared with ``bstree.insert_batch``: ``requested`` (raw batch
@@ -586,10 +602,13 @@ def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
 
     d = np.asarray(deferred)
     if d.any():
+        from .maintenance import cbs_device_maintenance
+
         idx = np.nonzero(d)[0]
         stats["deferred"] = len(idx)
-        tree, r_ins, r_ups = _cbs_host_repack(
-            tree, keys_u64[idx], counters=stats["maintenance"])
+        tree, r_ins, r_ups = cbs_device_maintenance(
+            tree, keys_u64[idx], stats["maintenance"], alpha=alpha,
+            slack=slack)
         stats["inserted"] += r_ins
         stats["present"] += r_ups
     return tree, stats
@@ -756,20 +775,20 @@ def cbs_from_host(h: dict) -> CBSTreeArrays:
 def _cbs_host_repack(tree: CBSTreeArrays, new_keys: np.ndarray, *,
                      alpha: float = DEFAULT_ALPHA,
                      counters: Optional[dict] = None):
-    """Targeted slow path: re-FOR-encode only the leaves the deferred keys
-    land in (fresh narrowest tags, k-way when the merged set outgrows one
-    block) and patch parents level by level.  The root grows incrementally
-    — the tree is never rebuilt wholesale.  Returns (tree', n_inserted,
-    n_present): presence is re-checked against the decoded leaf contents,
-    so already-present deferred keys are honest no-ops."""
-    from .maintenance import cbs_batched_repack, new_counters
+    """Targeted slow path: absorb deferred keys without a full-tree host
+    copy (see :func:`repro.core.maintenance.cbs_device_maintenance`) —
+    in-frame overflow splits k-way on device at existing tag widths; only
+    out-of-frame segments gather their leaf blocks to the host for a
+    fresh narrowest-tag re-encode.  The root grows incrementally — the
+    tree is never rebuilt wholesale.  Returns (tree', n_inserted,
+    n_present): presence is re-checked against the leaf contents, so
+    already-present deferred keys are honest no-ops."""
+    from .maintenance import cbs_device_maintenance, new_counters
 
     if counters is None:
         counters = new_counters()
     new_keys = np.unique(np.asarray(new_keys, dtype=np.uint64))
-    h = cbs_to_host(tree)
-    n_ins, n_ups = cbs_batched_repack(h, new_keys, alpha, counters)
-    return cbs_from_host(h), n_ins, n_ups
+    return cbs_device_maintenance(tree, new_keys, counters, alpha=alpha)
 
 
 def cbs_compact(tree: CBSTreeArrays, *, min_occupancy: float = 0.5,

@@ -27,7 +27,15 @@ The ``pod`` axis composes two ways (DESIGN.md §5):
 
 Updates take the host-orchestrated bulk path per shard through the
 ``Index`` facade (amortised, like splits); lookups are the fully-SPMD hot
-path.
+path.  Since the on-device maintenance refactor the update path no
+longer gathers the shards to the host: per-shard splits run on device
+against each shard's preallocated slack rows, BS compaction re-packs via
+a device gather, and the re-stack (``_stack_trees``) pads and stacks
+with jnp ops — only routing metadata and scalar counters cross the
+boundary (:func:`shard_stats` reports each shard's remaining slack
+budget).  The one remaining full transfer is CBS *compaction*, which
+still decodes/re-encodes blocks on host to re-choose narrowest tags
+(see ROADMAP).
 """
 from __future__ import annotations
 
@@ -73,11 +81,15 @@ class ShardedBSTree:
     #: CBS repack) re-packs at the occupancy the shards were built with
     alpha: float = dataclasses.field(default=DEFAULT_ALPHA,
                                      metadata=dict(static=True))
+    #: build-time slack factor, preserved so on-device capacity regrows
+    #: (splits, height lifts) use the headroom the shards were built with
+    slack: float = dataclasses.field(default=1.5,
+                                     metadata=dict(static=True))
 
     def _spec(self) -> IndexSpec:
         """The IndexSpec the shards were built with (for facade calls)."""
         return IndexSpec(n=self.trees.node_width, alpha=self.alpha,
-                         backend=self.backend)
+                         backend=self.backend, slack=self.slack)
 
     @property
     def supports_values(self) -> bool:
@@ -87,40 +99,42 @@ class ShardedBSTree:
         return self.trees.memory_bytes() + 8 * self.num_shards
 
 
-def _lift_height(tree, target_height: int):
+def _lift_height(tree, target_height: int, *, slack: float = 1.5):
     """Add single-child root levels until the tree has the target height
     (keeps traversal static-shape-uniform across shards).  Works on any
-    backend: inner levels share the uncompressed (hi, lo, child) layout."""
+    backend: inner levels share the uncompressed (hi, lo, child) layout.
+    Runs as device-side row writes — the inner region never moves to the
+    host (only the root/num_inner scalars sync)."""
     if tree.height >= target_height:
         return tree
-    inner_hi = np.array(tree.inner_hi)
-    inner_lo = np.array(tree.inner_lo)
-    inner_child = np.array(tree.inner_child)
+    inner_hi, inner_lo = tree.inner_hi, tree.inner_lo
+    inner_child = tree.inner_child
     root = int(tree.root)
     num_inner = int(tree.num_inner)
     height = tree.height
     n = tree.node_width
+    levels = target_height - height
+    if num_inner + levels > inner_hi.shape[0]:
+        from .maintenance import _grow_rows_device, _grown_cap
+
+        cap = _grown_cap(num_inner + levels, slack)
+        inner_hi = _grow_rows_device(inner_hi, cap, np.uint32(0xFFFFFFFF))
+        inner_lo = _grow_rows_device(inner_lo, cap, np.uint32(0xFFFFFFFF))
+        inner_child = _grow_rows_device(inner_child, cap, 0)
+    ones_row = jnp.full((n,), 0xFFFFFFFF, jnp.uint32)
     while height < target_height:
-        if num_inner >= inner_hi.shape[0]:
-            grow = max(4, inner_hi.shape[0] // 2)
-            inner_hi = np.vstack(
-                [inner_hi, np.full((grow, n), 0xFFFFFFFF, np.uint32)])
-            inner_lo = np.vstack(
-                [inner_lo, np.full((grow, n), 0xFFFFFFFF, np.uint32)])
-            inner_child = np.vstack(
-                [inner_child, np.zeros((grow, n), np.int32)])
-        inner_hi[num_inner] = 0xFFFFFFFF
-        inner_lo[num_inner] = 0xFFFFFFFF
-        inner_child[num_inner] = 0
-        inner_child[num_inner, 0] = root
+        inner_hi = inner_hi.at[num_inner].set(ones_row)
+        inner_lo = inner_lo.at[num_inner].set(ones_row)
+        child_row = jnp.zeros((n,), jnp.int32).at[0].set(root)
+        inner_child = inner_child.at[num_inner].set(child_row)
         root = num_inner
         num_inner += 1
         height += 1
     return dataclasses.replace(
         tree,
-        inner_hi=jnp.asarray(inner_hi),
-        inner_lo=jnp.asarray(inner_lo),
-        inner_child=jnp.asarray(inner_child),
+        inner_hi=inner_hi,
+        inner_lo=inner_lo,
+        inner_child=inner_child,
         root=jnp.asarray(root, jnp.int32),
         num_inner=jnp.asarray(num_inner, jnp.int32),
         height=height,
@@ -137,27 +151,32 @@ def _pad_fill(name: str, dtype: np.dtype):
     return 0
 
 
-def _stack_trees(parts: list):
+def _stack_trees(parts: list, *, slack: float = 1.5):
     """Stack per-shard trees (same backend class) into one container with
-    a leading shard dim, lifting heights and padding capacities."""
+    a leading shard dim, lifting heights and padding capacities.
+
+    Device-resident: every pad/stack is a jnp op, so re-stacking after
+    per-shard maintenance (which itself runs on device) never gathers the
+    shards to the host — the fix that takes the host gather out of
+    ``insert_sharded`` / ``delete_sharded`` / ``compact_sharded``."""
     cls = type(parts[0])
     target_h = max(p.height for p in parts)
-    parts = [_lift_height(p, target_h) for p in parts]
+    parts = [_lift_height(p, target_h, slack=slack) for p in parts]
     kw = {}
     for f in dataclasses.fields(cls):
         if f.metadata.get("static"):
             continue
-        arrs = [np.asarray(getattr(p, f.name)) for p in parts]
+        arrs = [getattr(p, f.name) for p in parts]
         cap = max(a.shape[0] for a in arrs) if arrs[0].ndim else 0
-        fill = _pad_fill(f.name, arrs[0].dtype)
+        fill = _pad_fill(f.name, np.dtype(arrs[0].dtype))
         padded = []
         for a in arrs:
             if a.ndim and a.shape[0] < cap:
-                pad = np.full((cap - a.shape[0],) + a.shape[1:], fill,
-                              dtype=a.dtype)
-                a = np.concatenate([a, pad], axis=0)
+                pad = jnp.full((cap - a.shape[0],) + a.shape[1:], fill,
+                               dtype=a.dtype)
+                a = jnp.concatenate([a, pad], axis=0)
             padded.append(a)
-        kw[f.name] = jnp.asarray(np.stack(padded))
+        kw[f.name] = jnp.stack(padded)
     return cls(**kw, height=target_h, node_width=parts[0].node_width)
 
 
@@ -174,6 +193,7 @@ def build_sharded(
     n: int = 128,
     alpha: float = 0.75,
     backend: str = "bs",
+    slack: float = 1.5,
 ) -> ShardedBSTree:
     """Equal-count range partition of sorted unique u64 keys into
     ``num_shards`` local trees with uniform static shapes.
@@ -187,7 +207,7 @@ def build_sharded(
     impl = get_backend(backend)
     if vals is not None and not impl.supports_values:
         raise ValueError(f"backend {backend!r} is keys-only; drop vals")
-    spec = IndexSpec(n=n, alpha=alpha, backend=backend)
+    spec = IndexSpec(n=n, alpha=alpha, backend=backend, slack=slack)
     bounds = [len(keys) * s // num_shards for s in range(num_shards + 1)]
     parts = [
         impl.build(
@@ -197,7 +217,7 @@ def build_sharded(
         )
         for s in range(num_shards)
     ]
-    trees = _stack_trees(parts)
+    trees = _stack_trees(parts, slack=slack)
     fences = np.array(
         [keys[bounds[s]] if bounds[s] < len(keys) else MAXKEY
          for s in range(num_shards)],
@@ -209,6 +229,7 @@ def build_sharded(
     return ShardedBSTree(
         trees=trees, fence_hi=jnp.asarray(fhi), fence_lo=jnp.asarray(flo),
         num_shards=num_shards, backend=backend, alpha=alpha,
+        slack=slack,
     )
 
 
@@ -383,7 +404,7 @@ def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray,
         for k in ("inserted", "present", "deferred", "rounds"):
             stats[k] += s_stats[k]
         merge_counters(stats["maintenance"], s_stats["maintenance"])
-    return dataclasses.replace(st, trees=_stack_trees(parts)), stats
+    return dataclasses.replace(st, trees=_stack_trees(parts, slack=st.slack)), stats
 
 
 def delete_sharded(st: ShardedBSTree, keys_u64: np.ndarray):
@@ -401,7 +422,32 @@ def delete_sharded(st: ShardedBSTree, keys_u64: np.ndarray):
         idx, d_stats = idx.delete(keys_u64[mask])
         parts[s] = idx.tree
         deleted += d_stats["deleted"]
-    return dataclasses.replace(st, trees=_stack_trees(parts)), deleted
+    return dataclasses.replace(st, trees=_stack_trees(parts, slack=st.slack)), deleted
+
+
+def shard_stats(st: ShardedBSTree) -> list:
+    """Per-shard structural counters, one dict per shard: node counts,
+    capacities and the remaining **slack budget** (preallocated rows still
+    free for on-device maintenance).  One small host sync of the stacked
+    scalars; the tree arrays stay on device."""
+    nl = np.asarray(st.trees.num_leaves).reshape(-1)
+    ni = np.asarray(st.trees.num_inner).reshape(-1)
+    lcap = _shard_tree(st, 0).leaf_capacity
+    icap = _shard_tree(st, 0).inner_capacity
+    return [
+        {
+            "shard": s,
+            "backend": st.backend,
+            "height": st.trees.height,
+            "num_leaves": int(nl[s]),
+            "num_inner": int(ni[s]),
+            "leaf_capacity": lcap,
+            "inner_capacity": icap,
+            "leaf_slack": lcap - int(nl[s]),
+            "inner_slack": icap - int(ni[s]),
+        }
+        for s in range(st.num_shards)
+    ]
 
 
 def compact_sharded(st: ShardedBSTree, *, min_occupancy: float = 0.5,
@@ -423,4 +469,4 @@ def compact_sharded(st: ShardedBSTree, *, min_occupancy: float = 0.5,
                   "reclaimed_bytes"):
             total[k] = total.get(k, 0) + c[k]
         total["compacted"] += int(c["compacted"])
-    return dataclasses.replace(st, trees=_stack_trees(parts)), total
+    return dataclasses.replace(st, trees=_stack_trees(parts, slack=st.slack)), total

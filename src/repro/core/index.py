@@ -110,7 +110,8 @@ class Backend(Protocol):
                       q_lo: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
 
     def insert(self, tree: Any, keys: np.ndarray,
-               vals: Optional[np.ndarray]) -> tuple[Any, dict]: ...
+               vals: Optional[np.ndarray],
+               spec: Optional["IndexSpec"] = None) -> tuple[Any, dict]: ...
 
     def delete(self, tree: Any, keys: np.ndarray) -> tuple[Any, int]: ...
 
@@ -148,17 +149,18 @@ class _BSBackend:
     def lookup_device(self, tree, q_hi, q_lo):
         return _bs.lookup_batch(tree, q_hi, q_lo)
 
-    def insert(self, tree, keys, vals):
+    def insert(self, tree, keys, vals, spec=None):
         if vals is None:
             vals = _default_vals(keys)
-        return _bs.insert_batch(tree, keys, vals)
+        slack = spec.slack if spec is not None else 1.5
+        return _bs.insert_batch(tree, keys, vals, slack=slack)
 
     def delete(self, tree, keys):
         return _bs.delete_batch(tree, keys)
 
     def compact(self, tree, spec, *, min_occupancy, force):
         return _bs.compact(tree, min_occupancy=min_occupancy,
-                           alpha=spec.alpha, force=force)
+                           alpha=spec.alpha, force=force, slack=spec.slack)
 
     def start_leaf(self, tree, key):
         hi, lo = split_u64(np.array([key], np.uint64))
@@ -201,13 +203,16 @@ class _CBSBackend:
     def lookup_device(self, tree, q_hi, q_lo):
         return _cbs_lookup_normalised(tree, q_hi, q_lo)
 
-    def insert(self, tree, keys, vals):
+    def insert(self, tree, keys, vals, spec=None):
         if vals is not None:
             raise ValueError(
                 "cbs backend is keys-only (Index.supports_values is False); "
                 "drop the vals argument or build with backend='bs'"
             )
-        return _cbs.cbs_insert_batch(tree, keys)
+        if spec is None:
+            return _cbs.cbs_insert_batch(tree, keys)
+        return _cbs.cbs_insert_batch(tree, keys, alpha=spec.alpha,
+                                     slack=spec.slack)
 
     def delete(self, tree, keys):
         return _cbs.cbs_delete_batch(tree, keys)
@@ -451,7 +456,7 @@ class Index:
         stores each key's low 32 bits; on keys-only backends passing
         ``vals`` raises ``ValueError``."""
         keys = np.asarray(keys, dtype=np.uint64)
-        tree, stats = self.impl.insert(self.tree, keys, vals)
+        tree, stats = self.impl.insert(self.tree, keys, vals, self.spec)
         assert set(stats) == INSERT_STATS_KEYS, sorted(stats)
         return dataclasses.replace(self, tree=tree), stats
 
@@ -478,15 +483,24 @@ class Index:
 
     # -- introspection ---------------------------------------------------
     def stats(self) -> dict:
-        """Cheap structural summary (num_keys does one host pass)."""
+        """Cheap structural summary (num_keys does one host pass).
+
+        ``leaf_slack``/``inner_slack`` count the preallocated rows still
+        free for on-device structural maintenance (the slack budget —
+        when it hits zero the next split grows capacity on device)."""
         t = self.tree
+        num_leaves, num_inner = int(t.num_leaves), int(t.num_inner)
         return {
             "backend": self.backend,
             "supports_values": self.supports_values,
             "node_width": t.node_width,
             "height": t.height,
-            "num_leaves": int(t.num_leaves),
-            "num_inner": int(t.num_inner),
+            "num_leaves": num_leaves,
+            "num_inner": num_inner,
+            "leaf_capacity": t.leaf_capacity,
+            "inner_capacity": t.inner_capacity,
+            "leaf_slack": t.leaf_capacity - num_leaves,
+            "inner_slack": t.inner_capacity - num_inner,
             "num_keys": self.impl.num_keys(t),
             "memory_bytes": self.memory_bytes(),
         }

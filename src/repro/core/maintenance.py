@@ -1,56 +1,88 @@
-"""Batched structural maintenance shared by both backends.
+"""Batched structural maintenance shared by both backends — device-resident.
 
 Splits, repacks and compaction are the *slow* path of the BS-tree design:
 the device handles every in-node update in one segmented-merge dispatch
-(:mod:`repro.core.bstree`), and structural changes are amortised host
-events.  Before this module they were also *scalar* host events — one
-root-to-leaf traversal per deferred key, or a whole-tree rebuild per CBS
-out-of-frame batch.  This module makes the slow path batched too:
+(:mod:`repro.core.bstree`), and structural changes are amortised events.
+Through PR 3 they were amortised **host** events: every deferred batch
+paid a full-tree ``to_host``/``from_host`` round-trip.  That copy is
+exactly what the paper's gapped design avoids on the node level — gaps
+absorb change in place — so this module now applies the same idea one
+level up: **slack rows** preallocated at build time absorb structural
+change on device, and the tree's bulk never crosses the PCIe boundary.
 
-* :func:`host_descend_paths` — ONE vectorised numpy descent for the whole
-  deferred batch (``O(levels)`` gather/compare passes, recording the
-  root-to-leaf path of every key);
+The device pass, per deferred batch:
 
-* per-leaf **k-way splits** — deferred keys group into per-leaf segments
-  (contiguous, because the batch is sorted); each overflowing leaf merges
-  its whole segment once and emits all of its children in a single
-  ``ceil(c / per)``-way split instead of a chain of 2-way splits;
+* :func:`device_descend_paths` — ONE jitted level-synchronous descent for
+  the whole batch, recording the root-to-leaf path of every key (the only
+  per-key data that reaches the host: ``(B, height)`` node ids);
 
-* :func:`patch_parents` — separator/child insertion walks the tree **level
-  by level**: all pending ``(separator, right_child)`` pairs of one level
-  are merged into their parents in one pass, overflowing parents split
-  k-way, and the root grows incrementally (new levels are added on top;
-  the tree is never rebuilt from scratch);
+* per-key **leaf stats** on device (:func:`_bs_key_stats` /
+  :func:`_cbs_key_stats`): membership, used-rank and leaf occupancy as
+  branchless counts — ``O(B)`` ints to the host, never the rows;
 
-* the CBS variant (:func:`cbs_batched_repack`) re-FOR-encodes only the
-  *affected* leaves, choosing the narrowest fitting tag width per emitted
-  leaf (paper §5 construction rule), and patches parents through the same
-  machinery — inner nodes share one uncompressed layout across backends.
+* a host-side **plan** over that metadata (pure numpy, `B`-sized): which
+  leaves split k-way, which slack rows they take, and per-output-slot
+  gather tables mapping every slot of every emitted row to either a batch
+  key or a source-row used-rank;
+
+* one jitted **k-way split scatter** (:func:`_bs_apply_splits` /
+  :func:`_cbs_apply_splits`): gather the affected rows, resolve used-ranks
+  with an unrolled per-row binary search, and scatter the emitted rows
+  into the slack region — the tree's key/value planes never leave device;
+
+* **level-by-level parent patching** over a :class:`DeviceInner` store
+  that copies only the *touched* inner rows to the host (counted in
+  ``inner_rows_gathered``), merges separators with the shared
+  :func:`patch_parents` machinery, and scatters only the dirty rows back.
+  The root grows incrementally; the tree is never rebuilt.
+
+When slack runs out the pass does **not** fall back to a host round-trip:
+capacity grows geometrically *on device* (``slack_regrows`` counter) and
+the same pass continues.  The only remaining host fallback is the CBS
+re-tag path (out-of-frame deltas need a fresh frame-of-reference
+encoding), and it transfers *touched leaf blocks only*
+(``leaf_rows_gathered``), never the tree.
+
+The legacy full-host passes (:func:`bs_batched_split_insert`,
+:func:`cbs_batched_repack`) are kept as recovery utilities operating on
+``to_host`` dicts; they are off the insert path (tests assert it).
 
 Every entry point reports what it did through a ``maintenance`` counters
 dict (:func:`new_counters`) that rides inside the unified insert-stats
 schema and the ``compact()`` result.
-
-All functions mutate a plain *host dict* ``h`` of numpy arrays (the
-``to_host`` form of a tree) in place; callers re-wrap with ``from_host``.
-Both backends share the inner-node fields ``{inner_keys, inner_child,
-root, height, num_inner, n}``; leaf fields differ and are handled by the
-backend-specific passes.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .layout import MAXKEY, spread_positions
+from .layout import (
+    MAXKEY,
+    MAXKEY_HI,
+    MAXKEY_LO,
+    join_u64,
+    split_u64,
+    spread_positions,
+    used_mask,
+)
+from .succ import cmp_ge_u64, succ_gt
 
 __all__ = [
     "new_counters",
     "merge_counters",
     "compaction_plan",
     "host_descend_paths",
+    "device_descend_paths",
     "rows_used_mask",
     "ancestors_from_paths",
     "patch_parents",
+    "DeviceInner",
+    "bs_device_split_insert",
+    "bs_device_compact",
+    "cbs_device_maintenance",
     "bs_batched_split_insert",
     "cbs_batched_repack",
     "SPLIT_OCCUPANCY",
@@ -65,12 +97,16 @@ def new_counters() -> dict:
     """Zeroed maintenance counters — the schema reported under the
     ``"maintenance"`` key of every insert-stats dict and by ``compact``."""
     return {
-        "leaf_splits": 0,        # leaves that overflowed and split k-way
-        "leaves_allocated": 0,   # new leaf rows taken from slack
-        "leaves_repacked": 0,    # leaves rewritten in place (no split)
-        "inner_splits": 0,       # inner nodes that overflowed and split
-        "inner_allocated": 0,    # new inner rows taken from slack
-        "height_growth": 0,      # levels added above the old root
+        "leaf_splits": 0,          # leaves that overflowed and split k-way
+        "leaves_allocated": 0,     # new leaf rows taken from slack
+        "leaves_repacked": 0,      # leaves rewritten in place (no split)
+        "inner_splits": 0,         # inner nodes that overflowed and split
+        "inner_allocated": 0,      # new inner rows taken from slack
+        "height_growth": 0,        # levels added above the old root
+        "device_batches": 0,       # deferred batches absorbed on device
+        "slack_regrows": 0,        # on-device capacity growths (slack out)
+        "inner_rows_gathered": 0,  # touched inner rows copied to host
+        "leaf_rows_gathered": 0,   # touched leaf blocks copied to host
     }
 
 
@@ -109,9 +145,9 @@ def compaction_plan(per_leaf: np.ndarray, occupancy: np.ndarray, *,
 
 def host_descend_paths(h: dict, keys: np.ndarray):
     """Root-to-leaf descent for the whole batch in ``O(levels)`` numpy
-    passes.  Returns ``(paths (B, height) int64 — inner node per level,
-    root first; leaf (B,) int64)``.  Works on any backend's host dict:
-    inner nodes share the uncompressed ``(keys, child)`` layout."""
+    passes over a *host dict* (the legacy full-host passes).  Returns
+    ``(paths (B, height) int64 — inner node per level, root first;
+    leaf (B,) int64)``."""
     b = len(keys)
     height = h["height"]
     paths = np.zeros((b, height), dtype=np.int64)
@@ -123,6 +159,33 @@ def host_descend_paths(h: dict, keys: np.ndarray):
         c = np.sum(keys[:, None] >= rows, axis=1)  # succ_gt, branchless
         node = ic[node, c]
     return paths, node
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def _device_paths_jit(inner_hi, inner_lo, inner_child, root, k_hi, k_lo, *,
+                      height: int):
+    b = k_hi.shape[0]
+    node = jnp.full((b,), root, dtype=jnp.int32)
+    recs = []
+    for _ in range(height):
+        recs.append(node)
+        c = succ_gt(inner_hi[node], inner_lo[node], k_hi, k_lo)
+        node = inner_child[node, c]
+    paths = (jnp.stack(recs, axis=1) if recs
+             else jnp.zeros((b, 0), jnp.int32))
+    return paths, node
+
+
+def device_descend_paths(tree, k_hi, k_lo):
+    """Jitted root-to-leaf descent recording the path of every key.  Works
+    on any backend's tree (inner nodes share the uncompressed layout).
+    Returns host ``(paths (B, height) int64, leaf (B,) int64)`` — the
+    per-key routing metadata, not tree data."""
+    paths, leaf = _device_paths_jit(
+        tree.inner_hi, tree.inner_lo, tree.inner_child, tree.root,
+        k_hi, k_lo, height=tree.height)
+    return (np.asarray(paths).astype(np.int64),
+            np.asarray(leaf).astype(np.int64))
 
 
 def rows_used_mask(rows: np.ndarray) -> np.ndarray:
@@ -158,6 +221,23 @@ def _ensure_capacity(arr: np.ndarray, needed: int, fill) -> np.ndarray:
     return np.concatenate([arr, extra], axis=0)
 
 
+def _grow_rows_device(arr: jnp.ndarray, new_cap: int, fill) -> jnp.ndarray:
+    """Geometric on-device capacity growth: pad rows with ``fill`` —
+    a device-to-device copy, never a host transfer."""
+    if new_cap <= arr.shape[0]:
+        return arr
+    extra = jnp.full((new_cap - arr.shape[0],) + arr.shape[1:], fill,
+                     arr.dtype)
+    return jnp.concatenate([arr, extra], axis=0)
+
+
+def _grown_cap(need: int, slack: float) -> int:
+    """THE slack-budget formula — single home of the geometric headroom
+    rule, shared by bulk loading (bstree/compress) and every on-device
+    regrow site so build-time and regrow-time budgets never diverge."""
+    return max(need + 4, int(need * slack))
+
+
 def _alloc_inner(h: dict, counters: dict) -> int:
     need = int(h["num_inner"]) + 1
     h["inner_keys"] = _ensure_capacity(h["inner_keys"], need, MAXKEY)
@@ -171,35 +251,161 @@ def _alloc_inner(h: dict, counters: dict) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Inner-node stores: one parent-patch machinery, two row transports
+# ---------------------------------------------------------------------------
+
+
+class _DictInner:
+    """Adapter giving a full ``to_host`` dict the store interface the
+    parent-patch machinery speaks (the legacy full-host passes)."""
+
+    def __init__(self, h: dict, counters: dict):
+        self._h = h
+        self._c = counters
+
+    @property
+    def n(self) -> int:
+        return self._h["n"]
+
+    @property
+    def root(self) -> int:
+        return int(self._h["root"])
+
+    @root.setter
+    def root(self, v: int) -> None:
+        self._h["root"] = int(v)
+
+    @property
+    def height(self) -> int:
+        return int(self._h["height"])
+
+    @height.setter
+    def height(self, v: int) -> None:
+        self._h["height"] = int(v)
+
+    def get(self, node: int):
+        return self._h["inner_keys"][node], self._h["inner_child"][node]
+
+    def set(self, node: int, keys_row: np.ndarray, child_row: np.ndarray):
+        self._h["inner_keys"][node] = keys_row
+        self._h["inner_child"][node] = child_row
+
+    def alloc(self) -> int:
+        return _alloc_inner(self._h, self._c)
+
+
+class DeviceInner:
+    """Touched-rows-only host view of the device inner arrays.
+
+    ``get`` lazily copies a single inner row device->host (batched for the
+    ``prefetch`` set — normally every node on a recorded descent path, one
+    gather); ``set`` marks rows dirty; :meth:`flush` grows capacity on
+    device if allocations outran slack and scatters only the dirty rows
+    back.  The untouched bulk of the inner region never moves.
+    """
+
+    def __init__(self, inner_hi, inner_lo, inner_child, root, num_inner,
+                 height, n, counters, prefetch=None, *, slack: float = 1.5):
+        self._hi = inner_hi
+        self._lo = inner_lo
+        self._child = inner_child
+        self.n = int(n)
+        self.root = int(root)
+        self.height = int(height)
+        self.num_inner = int(num_inner)
+        self._base_inner = self.num_inner
+        self._slack = slack
+        self.counters = counters
+        self._rows: dict[int, list] = {}
+        self._dirty: set[int] = set()
+        if prefetch is not None and len(prefetch):
+            ids = np.unique(np.asarray(prefetch, dtype=np.int64))
+            ids = ids[(ids >= 0) & (ids < self.num_inner)]
+            if len(ids):
+                jidx = jnp.asarray(ids)
+                khi = np.asarray(self._hi[jidx])
+                klo = np.asarray(self._lo[jidx])
+                ch = np.asarray(self._child[jidx])
+                keys = join_u64(khi, klo)
+                for i, nid in enumerate(ids):
+                    self._rows[int(nid)] = [keys[i].copy(), ch[i].copy()]
+                counters["inner_rows_gathered"] += len(ids)
+
+    def get(self, node: int):
+        node = int(node)
+        if node not in self._rows:
+            khi = np.asarray(self._hi[node])
+            klo = np.asarray(self._lo[node])
+            ch = np.asarray(self._child[node])
+            self._rows[node] = [join_u64(khi, klo), np.array(ch)]
+            self.counters["inner_rows_gathered"] += 1
+        return self._rows[node]
+
+    def set(self, node: int, keys_row: np.ndarray, child_row: np.ndarray):
+        self._rows[int(node)] = [keys_row, child_row]
+        self._dirty.add(int(node))
+
+    def alloc(self) -> int:
+        nid = self.num_inner
+        self.num_inner += 1
+        self._rows[nid] = [np.full(self.n, MAXKEY, np.uint64),
+                           np.zeros(self.n, np.int32)]
+        self._dirty.add(nid)
+        self.counters["inner_allocated"] += 1
+        return nid
+
+    def flush(self):
+        """Scatter dirty rows back.  Returns the updated device arrays and
+        scalars ``(inner_hi, inner_lo, inner_child, root, num_inner,
+        height)``."""
+        hi, lo, ch = self._hi, self._lo, self._child
+        if self.num_inner > hi.shape[0]:
+            self.counters["slack_regrows"] += 1
+            cap = _grown_cap(self.num_inner, self._slack)
+            hi = _grow_rows_device(hi, cap, MAXKEY_HI)
+            lo = _grow_rows_device(lo, cap, MAXKEY_LO)
+            ch = _grow_rows_device(ch, cap, 0)
+        if self._dirty:
+            ids = np.array(sorted(self._dirty), dtype=np.int64)
+            keys = np.stack([self._rows[int(i)][0] for i in ids])
+            kids = np.stack([self._rows[int(i)][1] for i in ids])
+            khi, klo = split_u64(keys)
+            jidx = jnp.asarray(ids)
+            hi = hi.at[jidx].set(jnp.asarray(khi))
+            lo = lo.at[jidx].set(jnp.asarray(klo))
+            ch = ch.at[jidx].set(jnp.asarray(kids.astype(np.int32)))
+        return hi, lo, ch, self.root, self.num_inner, self.height
+
+
+# ---------------------------------------------------------------------------
 # Inner-node entry extraction / packing (reference-equivalent, vectorised)
 # ---------------------------------------------------------------------------
 
-def _inner_entries(h: dict, node: int):
+def _inner_entries(store, node: int):
     """Used ``(separators, children)`` of one inner row.  Mirrors the
     scalar collection in ``ReferenceBSTree._split_inner``: the child right
     of separator slot i lives at child slot i+1; gap slots are skipped."""
-    n = h["n"]
-    row = h["inner_keys"][node]
+    n = store.n
+    row, child = store.get(node)
     used = rows_used_mask(row[None, :])[0][: n - 1]  # slot n-1 is the pad
     seps = row[: n - 1][used]
     kid_mask = np.zeros(n, dtype=bool)
     kid_mask[0] = True
     kid_mask[1:n] = used
-    kids = h["inner_child"][node][kid_mask][: len(seps) + 1]
+    kids = child[kid_mask][: len(seps) + 1]
     return seps, kids.astype(np.int64)
 
 
-def _write_inner(h: dict, node: int, seps: np.ndarray, kids: np.ndarray):
+def _write_inner(store, node: int, seps: np.ndarray, kids: np.ndarray):
     """Rewrite one inner row packed from slot 0 (trailing MAXKEY gaps
     satisfy the invariant; slot n-1 stays the MAXKEY pad)."""
-    n = h["n"]
+    n = store.n
     assert len(seps) <= n - 1 and len(kids) == len(seps) + 1
     row = np.full(n, MAXKEY, dtype=np.uint64)
     ch = np.zeros(n, dtype=np.int32)
     row[: len(seps)] = seps
     ch[: len(kids)] = kids
-    h["inner_keys"][node] = row
-    h["inner_child"][node] = ch
+    store.set(node, row, ch)
 
 
 def _merge_pairs(seps, kids, pairs):
@@ -222,63 +428,68 @@ def _merge_pairs(seps, kids, pairs):
 # Level-by-level parent patching (the shared upward pass)
 # ---------------------------------------------------------------------------
 
-def patch_parents(h: dict, pending: dict, anc: dict, counters: dict) -> None:
+def patch_parents(store, pending: dict, anc: dict, counters: dict) -> None:
     """Insert all pending ``(separator, right_child)`` pairs, one
     vectorised pass per tree level.
 
+    ``store`` is an inner-node store (:class:`DeviceInner`, or a plain
+    ``to_host`` dict which is auto-wrapped for the legacy passes).
     ``pending`` maps a parent inner node to the pairs produced by its
     children's splits; the key ``None`` marks pairs whose split node was
     the root itself (the root then grows — incrementally, never a
     rebuild).  Overflowing parents split k-way and push their own pairs
-    one level up.  Mutates ``h`` (including ``root``/``height`` on
+    one level up.  Mutates the store (including ``root``/``height`` on
     growth)."""
-    n = h["n"]
+    if isinstance(store, dict):
+        store = _DictInner(store, counters)
+    n = store.n
     while pending:
         if set(pending) == {None}:
-            _grow_root(h, pending[None], counters)
+            _grow_root(store, pending[None], counters)
             return
         nxt: dict = {}
         for parent, pairs in pending.items():
-            seps, kids = _inner_entries(h, parent)
+            seps, kids = _inner_entries(store, parent)
             mseps, mkids = _merge_pairs(seps, kids, pairs)
             if len(mseps) <= n - 1:
-                _write_inner(h, parent, mseps, mkids)
+                _write_inner(store, parent, mseps, mkids)
                 continue
             # k-way split: even child groups at the split occupancy
             counters["inner_splits"] += 1
             per = max(2, int(round(SPLIT_OCCUPANCY * (n - 1))))
             m = -(-len(mkids) // per)
             bounds = [len(mkids) * g // m for g in range(m + 1)]
-            ids = [parent] + [_alloc_inner(h, counters) for _ in range(m - 1)]
+            ids = [parent] + [store.alloc() for _ in range(m - 1)]
             for g in range(m):
                 a, b = bounds[g], bounds[g + 1]
-                _write_inner(h, ids[g], mseps[a : b - 1], mkids[a:b])
+                _write_inner(store, ids[g], mseps[a : b - 1], mkids[a:b])
             up = [(np.uint64(mseps[bounds[g + 1] - 1]), ids[g + 1])
                   for g in range(m - 1)]
             nxt.setdefault(anc.get(parent), []).extend(up)
         pending = nxt
 
 
-def _grow_root(h: dict, pairs, counters: dict) -> None:
+def _grow_root(store, pairs, counters: dict) -> None:
     """Add levels above the old root until one node holds everything.
     ``pairs`` are the (sep, right_child) spill of the old root's split;
     the old root id stays valid as the leftmost child."""
-    n = h["n"]
+    n = store.n
     pairs = sorted(pairs)
     seps = np.array([s for s, _ in pairs], dtype=np.uint64)
-    kids = np.array([int(h["root"])] + [c for _, c in pairs], dtype=np.int64)
+    kids = np.array([int(store.root)] + [c for _, c in pairs],
+                    dtype=np.int64)
     while True:
         counters["height_growth"] += 1
         per = n - 1  # new root levels pack (gaps live at the leaves)
         m = -(-len(kids) // per)
         bounds = [len(kids) * g // m for g in range(m + 1)]
-        ids = [_alloc_inner(h, counters) for _ in range(m)]
+        ids = [store.alloc() for _ in range(m)]
         for g in range(m):
             a, b = bounds[g], bounds[g + 1]
-            _write_inner(h, ids[g], seps[a : b - 1], kids[a:b])
-        h["height"] = int(h["height"]) + 1
+            _write_inner(store, ids[g], seps[a : b - 1], kids[a:b])
+        store.height = int(store.height) + 1
         if m == 1:
-            h["root"] = ids[0]
+            store.root = ids[0]
             return
         seps = np.array([seps[bounds[g + 1] - 1] for g in range(m - 1)],
                         dtype=np.uint64)
@@ -286,7 +497,7 @@ def _grow_root(h: dict, pairs, counters: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
-# BS backend: batched deferred-key insertion with k-way leaf splits
+# Host-side split planning over device-computed metadata
 # ---------------------------------------------------------------------------
 
 def _segment_runs(leaf: np.ndarray):
@@ -299,6 +510,757 @@ def _segment_runs(leaf: np.ndarray):
     ends = np.append(cuts[1:], len(leaf))
     return list(zip(cuts.tolist(), ends.tolist()))
 
+
+def _pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def _split_plan(runs, leaf, present, rank, count, cap: int, per: int,
+                alloc_base: int):
+    """Plan the k-way splits for the given segment runs — pure numpy over
+    the B-sized device metadata.
+
+    Per segment: merged count ``cnt = used + new``; ``m = ceil(cnt/per)``
+    output rows (1 if it fits); new-key merged ranks ``r + j`` (used-rank
+    from the device + rank within the segment's new keys).  Returns
+    ``(segs, n_alloc)``; each seg dict carries everything the table
+    builder needs."""
+    segs = []
+    nxt = alloc_base
+    for a, b in runs:
+        newm = ~present[a:b]
+        n_new = int(newm.sum())
+        c = int(count[a])
+        cnt = c + n_new
+        if cnt == 0:
+            continue
+        j_excl = np.cumsum(newm) - newm
+        new_ranks = (rank[a:b] + j_excl)[newm].astype(np.int64)
+        new_bidx = np.arange(a, b, dtype=np.int64)[newm]
+        m = 1 if cnt <= cap else -(-cnt // per)
+        outs = [int(leaf[a])] + list(range(nxt, nxt + m - 1))
+        nxt += m - 1
+        pm = present[a:b]
+        segs.append({
+            "a": a, "src": int(leaf[a]), "outs": outs, "cnt": cnt,
+            "new_ranks": new_ranks, "new_bidx": new_bidx,
+            "ovr_ranks": rank[a:b][pm].astype(np.int64),
+            "ovr_bidx": np.arange(a, b, dtype=np.int64)[pm],
+            "n_new": n_new,
+        })
+    return segs, nxt - alloc_base
+
+
+def _split_tables(segs, cap: int, drop_sentinel: int):
+    """Per-output-slot gather tables for the jitted split scatter.
+
+    For output row ``g`` of a segment covering merged ranks ``[a, b)``,
+    slot ``i`` takes local rank ``ceil(i * (b-a) / cap)`` — the same
+    gapped re-spread as ``segmented_rows_upsert``, which reproduces the
+    gap-duplication invariant by construction.  Each rank resolves to a
+    batch key (``is_new``/``new_idx``) or a source-row used-rank
+    (``used_rank``); ``val_ovr`` points at the batch key whose value
+    overwrites an already-present key (BS upsert semantics).
+
+    Returns a dict of (R, cap)/(R,) numpy arrays plus the chain/pending
+    bookkeeping scaffolding rows (``row_seg``, ``row_g``)."""
+    rows = []
+    for si, s in enumerate(segs):
+        m = len(s["outs"])
+        cnt = s["cnt"]
+        bounds = [cnt * g // m for g in range(m + 1)]
+        for g in range(m):
+            rows.append((si, g, s["outs"][g], bounds[g], bounds[g + 1]))
+    R = len(rows)
+    iota = np.arange(cap, dtype=np.int64)
+    src_leaf = np.zeros(R, np.int32)
+    out_leaf = np.full(R, drop_sentinel, np.int32)
+    in_row = np.zeros((R, cap), bool)
+    is_new = np.zeros((R, cap), bool)
+    new_idx = np.zeros((R, cap), np.int32)
+    used_rank = np.zeros((R, cap), np.int32)
+    val_ovr = np.full((R, cap), -1, np.int32)
+    row_seg = np.zeros(R, np.int64)
+    row_g = np.zeros(R, np.int64)
+    for i, (si, g, oid, a, b) in enumerate(rows):
+        s = segs[si]
+        row_seg[i], row_g[i] = si, g
+        src_leaf[i] = s["src"]
+        out_leaf[i] = oid
+        cnt_row = b - a
+        t = (iota * cnt_row + cap - 1) // cap  # local merged rank
+        ir = t < cnt_row
+        tg = a + t
+        nr = s["new_ranks"]
+        q_r = np.searchsorted(nr, tg, side="right")
+        q_l = np.searchsorted(nr, tg, side="left")
+        isn = (q_r > q_l) & ir
+        if len(nr):
+            new_idx[i] = s["new_bidx"][np.clip(q_r - 1, 0, len(nr) - 1)]
+        ur = np.clip(tg - q_r, 0, None)
+        if len(s["ovr_ranks"]):
+            p = np.searchsorted(s["ovr_ranks"], ur)
+            pc = np.clip(p, 0, len(s["ovr_ranks"]) - 1)
+            hit = (p < len(s["ovr_ranks"])) & (s["ovr_ranks"][pc] == ur) \
+                & ir & ~isn
+            val_ovr[i] = np.where(hit, s["ovr_bidx"][pc], -1)
+        in_row[i], is_new[i] = ir, isn
+        used_rank[i] = np.clip(ur, 0, cap - 1)
+    return {
+        "src_leaf": src_leaf, "out_leaf": out_leaf, "in_row": in_row,
+        "is_new": is_new, "new_idx": new_idx, "used_rank": used_rank,
+        "val_ovr": val_ovr, "row_seg": row_seg, "row_g": row_g,
+    }
+
+
+def _pad_tables(t: dict, cap: int, drop_sentinel: int):
+    """Pad the table batch dim to the next power of two so the jitted
+    scatter compiles O(log R) programs, not one per batch."""
+    R = len(t["src_leaf"])
+    Rp = _pow2(R)
+    if Rp == R:
+        return t, R
+    pad = Rp - R
+    out = dict(t)
+    out["src_leaf"] = np.concatenate([t["src_leaf"],
+                                      np.zeros(pad, np.int32)])
+    out["out_leaf"] = np.concatenate([t["out_leaf"],
+                                      np.full(pad, drop_sentinel, np.int32)])
+    for k in ("in_row", "is_new"):
+        out[k] = np.concatenate(
+            [t[k], np.zeros((pad, t[k].shape[1]), bool)])
+    for k, fill in (("new_idx", 0), ("used_rank", 0), ("val_ovr", -1)):
+        out[k] = np.concatenate(
+            [t[k], np.full((pad, t[k].shape[1]), fill, np.int32)])
+    return out, R
+
+
+def _pad_batch(keys: np.ndarray, vals):
+    """Pad the deferred batch to a power of two with MAXKEY sentinels so
+    the jitted stats/scatter compile O(log B) programs."""
+    B = len(keys)
+    Bp = _pow2(B)
+    if Bp != B:
+        keys = np.concatenate(
+            [keys, np.full(Bp - B, MAXKEY, np.uint64)])
+        if vals is not None:
+            vals = np.concatenate([vals, np.zeros(Bp - B, vals.dtype)])
+    return keys, vals, B
+
+
+def _chain_updates(segs, old_next: dict):
+    """next-leaf chain rewiring for the split segments: ids[g-1] -> ids[g]
+    and ids[-1] -> old next of the source leaf."""
+    idx, val = [], []
+    for s in segs:
+        outs = s["outs"]
+        if len(outs) == 1:
+            continue
+        for g in range(1, len(outs)):
+            idx.append(outs[g - 1])
+            val.append(outs[g])
+        idx.append(outs[-1])
+        val.append(old_next[s["src"]])
+    return np.array(idx, np.int32), np.array(val, np.int32)
+
+
+def _pad_chain(idx: np.ndarray, val: np.ndarray, drop_sentinel: int):
+    Cp = _pow2(max(1, len(idx)))
+    if Cp != len(idx):
+        idx = np.concatenate([idx, np.full(Cp - len(idx), drop_sentinel,
+                                           np.int32)])
+        val = np.concatenate([val, np.full(Cp - len(val), -1, np.int32)])
+    return idx, val
+
+
+def _gather_old_next(next_leaf, segs) -> dict:
+    """Old chain successor of each split source leaf — a touched-rows
+    gather, one device op."""
+    src = sorted({s["src"] for s in segs if len(s["outs"]) > 1})
+    if not src:
+        return {}
+    got = np.asarray(next_leaf[jnp.asarray(np.array(src, np.int64))])
+    return {lid: int(nx) for lid, nx in zip(src, got)}
+
+
+def _pending_from_segs(segs, tables, seps_u64, paths, height: int):
+    """(parent -> [(separator, right_child)]) for every emitted row g>0,
+    with separators read from the scatter's returned slot-0 keys."""
+    pending: dict = {}
+    for i in range(len(tables["row_seg"])):
+        si, g = int(tables["row_seg"][i]), int(tables["row_g"][i])
+        if g == 0:
+            continue
+        s = segs[si]
+        parent = int(paths[s["a"], -1]) if height else None
+        pending.setdefault(parent, []).append(
+            (np.uint64(seps_u64[i]), int(tables["out_leaf"][i])))
+    return pending
+
+
+def _count_split_counters(segs, counters: dict) -> None:
+    for s in segs:
+        if len(s["outs"]) > 1:
+            counters["leaf_splits"] += 1
+            counters["leaves_allocated"] += len(s["outs"]) - 1
+        else:
+            counters["leaves_repacked"] += 1
+
+
+# ---------------------------------------------------------------------------
+# BS backend: device-resident deferred insertion with k-way splits
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _bs_key_stats(leaf_hi, leaf_lo, k_hi, k_lo, leaf):
+    """(member, used-rank, leaf used-count) per key — branchless counts on
+    device; only these small ints reach the host."""
+    rows_hi = leaf_hi[leaf]
+    rows_lo = leaf_lo[leaf]
+    used = used_mask(rows_hi, rows_lo)
+    run = (rows_hi == k_hi[:, None]) & (rows_lo == k_lo[:, None])
+    member = jnp.any(run, axis=1)  # gap copies alias used keys
+    lt = ~cmp_ge_u64(rows_hi, rows_lo, k_hi[:, None], k_lo[:, None])
+    r = jnp.sum((used & lt).astype(jnp.int32), axis=1)
+    c = jnp.sum(used.astype(jnp.int32), axis=1)
+    return member, r, c
+
+
+def _build_split_rows(rows_hi, rows_lo, rows_v, k_hi, k_lo, v,
+                      in_row, is_new, new_idx, used_rank, val_ovr):
+    """Emit the merged gapped rows from gathered source rows + tables —
+    the pure compute core of the split scatter (shared with the Pallas
+    kernel's jnp oracle; see ``kernels/leaf_split.py``)."""
+    from .bstree import _row_searchsorted
+
+    n = rows_hi.shape[1]
+    used = used_mask(rows_hi, rows_lo)
+    used_inc = jnp.cumsum(used.astype(jnp.int32), axis=1)
+    slot = jnp.clip(
+        _row_searchsorted(used_inc, jnp.clip(used_rank, 0, n - 1) + 1),
+        0, n - 1)
+    ex_hi = jnp.take_along_axis(rows_hi, slot, axis=1)
+    ex_lo = jnp.take_along_axis(rows_lo, slot, axis=1)
+    ex_v = jnp.take_along_axis(rows_v, slot, axis=1)
+    bmax = k_hi.shape[0] - 1
+    ni = jnp.clip(new_idx, 0, bmax)
+    out_hi = jnp.where(is_new, k_hi[ni], ex_hi)
+    out_lo = jnp.where(is_new, k_lo[ni], ex_lo)
+    ov = jnp.clip(val_ovr, 0, bmax)
+    out_v = jnp.where(is_new, v[ni],
+                      jnp.where(val_ovr >= 0, v[ov], ex_v))
+    out_hi = jnp.where(in_row, out_hi, MAXKEY_HI)
+    out_lo = jnp.where(in_row, out_lo, MAXKEY_LO)
+    out_v = jnp.where(in_row, out_v, 0).astype(rows_v.dtype)
+    return out_hi, out_lo, out_v
+
+
+@jax.jit
+def _bs_apply_splits(leaf_hi, leaf_lo, leaf_val, next_leaf,
+                     k_hi, k_lo, v, src_leaf, out_leaf, in_row, is_new,
+                     new_idx, used_rank, val_ovr, chain_idx, chain_val):
+    """One device dispatch: gather affected rows, build every emitted row,
+    scatter into the slack region and rewire the chain.  Returns the new
+    arrays plus each emitted row's slot-0 key planes (the separators)."""
+    rows_hi = leaf_hi[src_leaf]
+    rows_lo = leaf_lo[src_leaf]
+    rows_v = leaf_val[src_leaf]
+    out_hi, out_lo, out_v = _build_split_rows(
+        rows_hi, rows_lo, rows_v, k_hi, k_lo, v,
+        in_row, is_new, new_idx, used_rank, val_ovr)
+    new_hi = leaf_hi.at[out_leaf].set(out_hi, mode="drop")
+    new_lo = leaf_lo.at[out_leaf].set(out_lo, mode="drop")
+    new_v = leaf_val.at[out_leaf].set(out_v, mode="drop")
+    new_next = next_leaf.at[chain_idx].set(chain_val, mode="drop")
+    return new_hi, new_lo, new_v, new_next, out_hi[:, 0], out_lo[:, 0]
+
+
+def bs_device_split_insert(tree, keys: np.ndarray, vals: np.ndarray,
+                           counters: dict, *, slack: float = 1.5):
+    """Insert a deferred batch into the BS tree entirely on device:
+    jitted descent + stats, host planning over the metadata, one k-way
+    split scatter into preallocated slack rows, touched-rows parent
+    patching.  Never copies the tree to the host; when slack is exhausted
+    the capacity grows geometrically on device (``slack_regrows``).
+    Returns ``(tree', n_inserted, n_present)``."""
+    import dataclasses
+
+    keys = np.asarray(keys, dtype=np.uint64)
+    vals = np.asarray(vals, dtype=np.uint32)
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], vals[order]
+    if len(keys) > 1:  # defensive dedup (last occurrence wins)
+        last = np.concatenate([keys[1:] != keys[:-1], [True]])
+        keys, vals = keys[last], vals[last]
+    if len(keys) == 0:
+        return tree, 0, 0
+    counters["device_batches"] += 1
+    n = tree.node_width
+
+    pk, pv, B = _pad_batch(keys, vals)
+    hi, lo = split_u64(pk)
+    k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
+    v = jnp.asarray(pv)
+
+    paths, leaf = device_descend_paths(tree, k_hi, k_lo)
+    member, r, c = _bs_key_stats(tree.leaf_hi, tree.leaf_lo, k_hi, k_lo,
+                                 jnp.asarray(leaf))
+    paths, leaf = paths[:B], leaf[:B]
+    member = np.asarray(member)[:B]
+    r = np.asarray(r)[:B].astype(np.int64)
+    c = np.asarray(c)[:B].astype(np.int64)
+
+    per = max(1, int(round(SPLIT_OCCUPANCY * n)))
+    segs, n_alloc = _split_plan(_segment_runs(leaf), leaf, member, r, c,
+                                n, per, int(tree.num_leaves))
+    n_ins = int((~member).sum())
+    n_ups = int(member.sum())
+    _count_split_counters(segs, counters)
+
+    need = int(tree.num_leaves) + n_alloc
+    if need > tree.leaf_capacity:
+        counters["slack_regrows"] += 1
+        cap = _grown_cap(need, slack)
+        tree = dataclasses.replace(
+            tree,
+            leaf_hi=_grow_rows_device(tree.leaf_hi, cap, MAXKEY_HI),
+            leaf_lo=_grow_rows_device(tree.leaf_lo, cap, MAXKEY_LO),
+            leaf_val=_grow_rows_device(tree.leaf_val, cap, 0),
+            next_leaf=_grow_rows_device(tree.next_leaf, cap, -1),
+        )
+    sentinel = tree.leaf_capacity  # out-of-bounds => mode="drop"
+
+    old_next = _gather_old_next(tree.next_leaf, segs)
+    tables = _split_tables(segs, n, sentinel)
+    padded, R = _pad_tables(tables, n, sentinel)
+    ci, cv = _pad_chain(*_chain_updates(segs, old_next), sentinel)
+
+    new_hi, new_lo, new_v, new_next, sep_hi, sep_lo = _bs_apply_splits(
+        tree.leaf_hi, tree.leaf_lo, tree.leaf_val, tree.next_leaf,
+        k_hi, k_lo, v,
+        jnp.asarray(padded["src_leaf"]), jnp.asarray(padded["out_leaf"]),
+        jnp.asarray(padded["in_row"]), jnp.asarray(padded["is_new"]),
+        jnp.asarray(padded["new_idx"]), jnp.asarray(padded["used_rank"]),
+        jnp.asarray(padded["val_ovr"]), jnp.asarray(ci), jnp.asarray(cv))
+    tree = dataclasses.replace(
+        tree, leaf_hi=new_hi, leaf_lo=new_lo, leaf_val=new_v,
+        next_leaf=new_next, num_leaves=jnp.asarray(need, jnp.int32))
+
+    seps_u64 = join_u64(np.asarray(sep_hi)[:R], np.asarray(sep_lo)[:R])
+    pending = _pending_from_segs(segs, tables, seps_u64, paths, tree.height)
+    if pending:
+        tree = _patch_device_parents(tree, pending, paths, counters, slack)
+    return tree, n_ins, n_ups
+
+
+def _patch_device_parents(tree, pending, paths, counters, slack):
+    """Run the shared parent-patch machinery over a touched-rows store and
+    write the result back into the tree container."""
+    import dataclasses
+
+    anc = ancestors_from_paths(paths)
+    store = DeviceInner(
+        tree.inner_hi, tree.inner_lo, tree.inner_child, int(tree.root),
+        int(tree.num_inner), tree.height, tree.node_width, counters,
+        prefetch=np.unique(paths) if paths.size else None, slack=slack)
+    patch_parents(store, pending, anc, counters)
+    ihi, ilo, ich, root, num_inner, height = store.flush()
+    return dataclasses.replace(
+        tree, inner_hi=ihi, inner_lo=ilo, inner_child=ich,
+        root=jnp.asarray(root, jnp.int32),
+        num_inner=jnp.asarray(num_inner, jnp.int32), height=height)
+
+
+# ---------------------------------------------------------------------------
+# BS device compaction: sort + re-spread on device, tiny separator transfer
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _compact_take(leaf_hi, leaf_lo, leaf_val, src, in_row):
+    """New leaf planes: slot (l, i) takes the used slot at flat index
+    ``src[l, i]`` (host-computed from the chain + derived bitmap)."""
+    out_hi = jnp.where(in_row, leaf_hi.reshape(-1)[src], MAXKEY_HI)
+    out_lo = jnp.where(in_row, leaf_lo.reshape(-1)[src], MAXKEY_LO)
+    out_v = jnp.where(in_row, leaf_val.reshape(-1)[src], 0)
+    return out_hi, out_lo, out_v.astype(leaf_val.dtype)
+
+
+def _chain_order(tree, nxt: np.ndarray, num_leaves: int) -> np.ndarray:
+    """Leaf ids in chain (= key) order.  ``height`` scalar gathers locate
+    the leftmost leaf; the walk itself runs over the host copy of the
+    tiny next-pointer column."""
+    node = int(tree.root)
+    for _ in range(tree.height):
+        node = int(tree.inner_child[node, 0])
+    chain = []
+    while node != -1 and len(chain) <= num_leaves:
+        chain.append(node)
+        node = int(nxt[node])
+    return np.array(chain, dtype=np.int64)
+
+
+def bs_device_compact(tree, *, min_occupancy: float = 0.5,
+                      alpha: float = 0.75, force: bool = False,
+                      slack: float = 1.5):
+    """Merge under-occupied / emptied leaves and reclaim slack — on
+    device, without sorting: the chain gives leaf order and the derived
+    used bitmap gives slot order, so the re-pack is ONE flat gather.
+    Only metadata crosses to the host (the bitmap — 1 bit per slot — the
+    next-pointer column, and the ``O(num_leaves)`` separator keys for
+    the tiny inner rebuild), never the key/value planes.  Same gate and
+    counters as the old host ``compact``; returns ``(tree', counters)``.
+    """
+    import dataclasses
+
+    from .compress import _build_inner_over
+
+    n = tree.node_width
+    L = int(tree.num_leaves)
+    used = np.asarray(used_mask(tree.leaf_hi[:L], tree.leaf_lo[:L]))
+    per_leaf = used.sum(axis=1)
+    counters, needed = compaction_plan(
+        per_leaf, per_leaf / n, min_occupancy=min_occupancy, force=force)
+    if not needed:
+        return tree, counters
+
+    # flat source index of every used slot, in global key order
+    nxt = np.asarray(tree.next_leaf)
+    chain = _chain_order(tree, nxt, L)
+    uc = np.zeros((len(chain), n), dtype=bool)
+    valid = chain < L
+    uc[valid] = used[chain[valid]]
+    flat = np.flatnonzero(uc.reshape(-1))
+    src_flat = chain[flat // n] * n + flat % n
+    total = len(src_flat)
+    per = max(1, int(round(alpha * n)))
+    L2 = max(1, -(-total // per))
+
+    # rank table (host, (L2, n) small): row l covers global ranks
+    # [l*per, l*per + c_l); slot i takes local rank ceil(i * c_l / n).
+    # Rows pad to a power of two so the gather compiles O(log L2) programs.
+    Lp = _pow2(L2)
+    iota = np.arange(n, dtype=np.int64)
+    cl = np.zeros(Lp, np.int64)
+    cl[:L2] = per
+    cl[L2 - 1] = total - per * (L2 - 1)
+    t_loc = (iota[None, :] * cl[:, None] + n - 1) // n
+    in_row = t_loc < cl[:, None]
+    rank = np.arange(Lp, dtype=np.int64)[:, None] * per + t_loc
+    src = src_flat[np.clip(rank, 0, max(total - 1, 0))] if total else rank
+
+    out_hi, out_lo, out_v = _compact_take(
+        tree.leaf_hi, tree.leaf_lo, tree.leaf_val,
+        jnp.asarray(src), jnp.asarray(in_row))
+    out_hi, out_lo, out_v = out_hi[:L2], out_lo[:L2], out_v[:L2]
+
+    # separators: first key of each leaf after #0 — O(L2) values to host
+    sep_rank = np.arange(1, L2, dtype=np.int64) * per
+    if len(sep_rank):
+        sidx = jnp.asarray(src_flat[sep_rank])
+        seps = join_u64(np.asarray(tree.leaf_hi.reshape(-1)[sidx]),
+                        np.asarray(tree.leaf_lo.reshape(-1)[sidx]))
+    else:
+        seps = np.zeros(0, np.uint64)
+    inner = _build_inner_over(seps, L2, n, alpha, slack)
+
+    lcap = _grown_cap(L2, slack)
+    next_leaf = np.full(lcap, -1, np.int32)
+    next_leaf[: L2 - 1] = np.arange(1, L2, dtype=np.int32)
+    new = dataclasses.replace(
+        tree,
+        leaf_hi=_grow_rows_device(out_hi, lcap, MAXKEY_HI),
+        leaf_lo=_grow_rows_device(out_lo, lcap, MAXKEY_LO),
+        leaf_val=_grow_rows_device(out_v, lcap, 0),
+        next_leaf=jnp.asarray(next_leaf),
+        inner_hi=jnp.asarray(inner["hi"]),
+        inner_lo=jnp.asarray(inner["lo"]),
+        inner_child=jnp.asarray(inner["child"]),
+        root=jnp.asarray(inner["root"], jnp.int32),
+        num_leaves=jnp.asarray(L2, jnp.int32),
+        num_inner=jnp.asarray(inner["num_inner"], jnp.int32),
+        height=inner["height"],
+    )
+    counters["leaves_after"] = L2
+    counters["compacted"] = True
+    counters["reclaimed_bytes"] = max(
+        0, tree.memory_bytes() - new.memory_bytes())
+    return new, counters
+
+
+# ---------------------------------------------------------------------------
+# CBS backend: device split at existing tag widths + touched-rows re-encode
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _cbs_key_stats(leaf_words, leaf_tag, k0_hi, k0_lo, k_hi, k_lo, leaf):
+    """(member, used-rank, used-count, in_frame) per key over the FOR
+    blocks — all three tag interpretations evaluated, predicated by tag
+    (the TPU idiom; see compress.py)."""
+    from .compress import (MAXD16, MAXD32, TAG_U16, TAG_U64, _select_by_tag,
+                           _unpack_tag)
+
+    n = leaf_words.shape[-1] // 2
+    words = leaf_words[leaf]
+    tag = leaf_tag[leaf]
+    k0h, k0l = k0_hi[leaf], k0_lo[leaf]
+    ge_k0 = cmp_ge_u64(k_hi, k_lo, k0h, k0l)
+    dq_hi = k_hi - k0h - (k_lo < k0l).astype(k_hi.dtype)
+    dq_lo = k_lo - k0l
+    maxd_lo = jnp.where(tag == TAG_U16, MAXD16, MAXD32)
+    in_frame = ge_k0 & jnp.where(
+        tag == TAG_U64,
+        ~((dq_hi == MAXKEY_HI) & (dq_lo == MAXKEY_LO)),
+        (dq_hi == 0) & (dq_lo < maxd_lo),
+    )
+    qh = jnp.where(in_frame, dq_hi, MAXKEY_HI)
+    ql = jnp.where(in_frame, dq_lo, MAXKEY_LO)
+    members, ranks, counts = [], [], []
+    for tc in (0, 1, 2):
+        d_hi, d_lo = _unpack_tag(words, tc, n)
+        tqh = qh if tc == 2 else jnp.where(in_frame, 0, MAXKEY_HI)
+        run = (d_hi == tqh[:, None]) & (d_lo == ql[:, None])
+        used = used_mask(d_hi, d_lo)
+        members.append(jnp.any(run, axis=1))
+        lt = ~cmp_ge_u64(d_hi, d_lo, tqh[:, None], ql[:, None])
+        ranks.append(jnp.sum((used & lt).astype(jnp.int32), axis=1))
+        counts.append(jnp.sum(used.astype(jnp.int32), axis=1))
+    member = _select_by_tag(tag, members) & in_frame
+    r = _select_by_tag(tag, ranks)
+    c = _select_by_tag(tag, counts)
+    return member, r, c, in_frame
+
+
+@functools.partial(jax.jit, static_argnames=("tag_const",))
+def _cbs_apply_splits(leaf_words, leaf_tag, k0_hi, k0_lo, next_leaf,
+                      k_hi, k_lo, src_leaf, out_leaf, in_row, is_new,
+                      new_idx, used_rank, chain_idx, chain_val, *,
+                      tag_const: int):
+    """K-way split scatter for FOR blocks of one tag width: unpack the
+    source blocks to logical delta planes, emit the merged rows, re-pack
+    at the *same* tag and frame (every chunk inherits the source k0 — the
+    deltas already fit, and compact()/repack later re-chooses narrowest
+    tags) and scatter into slack."""
+    from .bstree import _row_searchsorted
+    from .compress import TAG_U64, _pack_tag, _unpack_tag
+
+    n = leaf_words.shape[-1] // 2
+    words = leaf_words[src_leaf]
+    d_hi, d_lo = _unpack_tag(words, tag_const, n)  # (R, cap)
+    cap = d_hi.shape[1]
+    used = used_mask(d_hi, d_lo)
+    used_inc = jnp.cumsum(used.astype(jnp.int32), axis=1)
+    slot = jnp.clip(
+        _row_searchsorted(used_inc, jnp.clip(used_rank, 0, cap - 1) + 1),
+        0, cap - 1)
+    ex_hi = jnp.take_along_axis(d_hi, slot, axis=1)
+    ex_lo = jnp.take_along_axis(d_lo, slot, axis=1)
+    # new keys' deltas in the source frame (in-frame by plan construction)
+    bmax = k_hi.shape[0] - 1
+    ni = jnp.clip(new_idx, 0, bmax)
+    kh, kl = k_hi[ni], k_lo[ni]
+    k0h, k0l = k0_hi[src_leaf][:, None], k0_lo[src_leaf][:, None]
+    dq_lo = kl - k0l
+    if tag_const == TAG_U64:
+        dq_hi = kh - k0h - (kl < k0l).astype(kh.dtype)
+    else:
+        dq_hi = jnp.zeros_like(kh)
+    out_hi = jnp.where(is_new, dq_hi, ex_hi)
+    out_lo = jnp.where(is_new, dq_lo, ex_lo)
+    out_hi = jnp.where(in_row, out_hi, MAXKEY_HI)
+    out_lo = jnp.where(in_row, out_lo, MAXKEY_LO)
+    packed = _pack_tag(out_hi, out_lo, tag_const, n)
+    new_words = leaf_words.at[out_leaf].set(packed, mode="drop")
+    new_tag = leaf_tag.at[out_leaf].set(tag_const, mode="drop")
+    new_k0h = k0_hi.at[out_leaf].set(k0_hi[src_leaf], mode="drop")
+    new_k0l = k0_lo.at[out_leaf].set(k0_lo[src_leaf], mode="drop")
+    new_next = next_leaf.at[chain_idx].set(chain_val, mode="drop")
+    return (new_words, new_tag, new_k0h, new_k0l, new_next,
+            out_hi[:, 0], out_lo[:, 0])
+
+
+def cbs_device_maintenance(tree, keys: np.ndarray, counters: dict, *,
+                           alpha: float = 0.75, slack: float = 1.5):
+    """Absorb a deferred CBS batch without a full-tree host copy.
+
+    Segments whose new keys all fit their leaf's existing frame split
+    k-way **on device** at the existing tag width (chunks inherit the
+    source k0).  Out-of-frame segments take the narrowed fallback: only
+    their leaf blocks are gathered to the host (``leaf_rows_gathered``),
+    re-FOR-encoded at fresh narrowest tags (paper §5 construction rule via
+    ``_for_chunks``) and scattered back.  Parents patch level by level
+    through the shared touched-rows store.  Returns
+    ``(tree', n_inserted, n_present)``."""
+    import dataclasses
+
+    from .compress import (TAG_U16, TAG_U32, TAG_U64, _for_chunks,
+                           _leaf_caps, _leaf_keys_host)
+
+    keys = np.unique(np.asarray(keys, dtype=np.uint64))
+    if len(keys) == 0:
+        return tree, 0, 0
+    counters["device_batches"] += 1
+    n = tree.node_width
+    caps = _leaf_caps(n)
+
+    pk, _, B = _pad_batch(keys, None)
+    hi, lo = split_u64(pk)
+    k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
+
+    paths, leaf = device_descend_paths(tree, k_hi, k_lo)
+    member, r, c, in_frame = _cbs_key_stats(
+        tree.leaf_words, tree.leaf_tag, tree.leaf_k0_hi, tree.leaf_k0_lo,
+        k_hi, k_lo, jnp.asarray(leaf))
+    paths, leaf = paths[:B], leaf[:B]
+    member = np.asarray(member)[:B]
+    r = np.asarray(r)[:B].astype(np.int64)
+    c = np.asarray(c)[:B].astype(np.int64)
+    in_frame = np.asarray(in_frame)[:B]
+    n_ins = int((~member).sum())
+    n_ups = int(member.sum())
+
+    # route segments: device split (all new keys in frame) vs host re-tag
+    runs = _segment_runs(leaf)
+    lids = np.array([leaf[a] for a, _ in runs], np.int64)
+    tags = (np.asarray(tree.leaf_tag[jnp.asarray(lids)]).astype(int)
+            if len(lids) else np.zeros(0, int))
+    dev_runs: dict[int, list] = {TAG_U16: [], TAG_U32: [], TAG_U64: []}
+    host_runs: list = []
+    for (a, b), tg in zip(runs, tags):
+        newm = ~member[a:b]
+        if not newm.any():
+            continue  # all present: honest no-op
+        if in_frame[a:b][newm].all():
+            dev_runs[int(tg)].append((a, b))
+        else:
+            host_runs.append((a, b))
+
+    # ---- plan: device groups first, then the host re-encode group ------
+    alloc = int(tree.num_leaves)
+    dev_plans = {}
+    for tg, tg_runs in dev_runs.items():
+        if not tg_runs:
+            continue
+        cap = caps[tg]
+        per = max(1, int(round(SPLIT_OCCUPANCY * cap)))
+        segs, n_alloc = _split_plan(tg_runs, leaf, member, r, c, cap, per,
+                                    alloc)
+        alloc += n_alloc
+        _count_split_counters(segs, counters)
+        dev_plans[tg] = segs
+
+    host_segs = []
+    if host_runs:
+        hlids = sorted({int(leaf[a]) for a, _ in host_runs})
+        jidx = jnp.asarray(np.array(hlids, np.int64))
+        h_words = np.asarray(tree.leaf_words[jidx])
+        h_tags = np.asarray(tree.leaf_tag[jidx]).astype(int)
+        h_k0 = join_u64(np.asarray(tree.leaf_k0_hi[jidx]),
+                        np.asarray(tree.leaf_k0_lo[jidx]))
+        counters["leaf_rows_gathered"] += len(hlids)
+        pos = {lid: i for i, lid in enumerate(hlids)}
+        for a, b in host_runs:
+            lid = int(leaf[a])
+            i = pos[lid]
+            ex = _leaf_keys_host(h_words[i], int(h_tags[i]), h_k0[i], n)
+            fresh = keys[a:b][~member[a:b]]
+            mk = np.unique(np.concatenate([ex, fresh]))
+            chunks = list(_for_chunks(mk, n, alpha))
+            m = len(chunks)
+            outs = [lid] + list(range(alloc, alloc + m - 1))
+            alloc += m - 1
+            if m > 1:
+                counters["leaf_splits"] += 1
+                counters["leaves_allocated"] += m - 1
+            else:
+                counters["leaves_repacked"] += 1
+            host_segs.append({"a": a, "src": lid, "outs": outs,
+                              "chunks": chunks})
+
+    # ---- capacity --------------------------------------------------------
+    if alloc > tree.leaf_capacity:
+        counters["slack_regrows"] += 1
+        cap2 = _grown_cap(alloc, slack)
+        empty = np.uint32(0xFFFFFFFF)  # empty u64 block = all-MAXKEY planes
+        tree = dataclasses.replace(
+            tree,
+            leaf_words=_grow_rows_device(tree.leaf_words, cap2, empty),
+            leaf_tag=_grow_rows_device(tree.leaf_tag, cap2, TAG_U64),
+            leaf_k0_hi=_grow_rows_device(tree.leaf_k0_hi, cap2, 0),
+            leaf_k0_lo=_grow_rows_device(tree.leaf_k0_lo, cap2, 0),
+            next_leaf=_grow_rows_device(tree.next_leaf, cap2, -1),
+        )
+    sentinel = tree.leaf_capacity
+
+    # ---- device split scatters (one per tag width present) --------------
+    pending: dict = {}
+    for tg, segs in dev_plans.items():
+        cap = caps[tg]
+        old_next = _gather_old_next(tree.next_leaf, segs)
+        tables = _split_tables(segs, cap, sentinel)
+        padded, R = _pad_tables(tables, cap, sentinel)
+        ci, cv = _pad_chain(*_chain_updates(segs, old_next), sentinel)
+        (words, tags_a, k0h, k0l, nxt, sep_dhi, sep_dlo) = _cbs_apply_splits(
+            tree.leaf_words, tree.leaf_tag, tree.leaf_k0_hi,
+            tree.leaf_k0_lo, tree.next_leaf, k_hi, k_lo,
+            jnp.asarray(padded["src_leaf"]), jnp.asarray(padded["out_leaf"]),
+            jnp.asarray(padded["in_row"]), jnp.asarray(padded["is_new"]),
+            jnp.asarray(padded["new_idx"]), jnp.asarray(padded["used_rank"]),
+            jnp.asarray(ci), jnp.asarray(cv), tag_const=tg)
+        tree = dataclasses.replace(
+            tree, leaf_words=words, leaf_tag=tags_a, leaf_k0_hi=k0h,
+            leaf_k0_lo=k0l, next_leaf=nxt)
+        # separator = chunk's first delta + the (unchanged) source k0
+        src_k0 = join_u64(
+            np.asarray(tree.leaf_k0_hi[jnp.asarray(tables["src_leaf"])]),
+            np.asarray(tree.leaf_k0_lo[jnp.asarray(tables["src_leaf"])]))
+        sep_d = join_u64(np.asarray(sep_dhi)[:R], np.asarray(sep_dlo)[:R])
+        seps_u64 = (src_k0 + sep_d).astype(np.uint64)
+        for par, pairs in _pending_from_segs(
+                segs, tables, seps_u64, paths, tree.height).items():
+            pending.setdefault(par, []).extend(pairs)
+
+    # ---- host re-encode scatter (touched blocks only) --------------------
+    if host_segs:
+        old_next = _gather_old_next(tree.next_leaf, host_segs)
+        ids, words_rows, tag_rows, k0_rows = [], [], [], []
+        for s in host_segs:
+            outs = s["outs"]
+            for g, (tg2, w, k0, _cnt) in enumerate(s["chunks"]):
+                ids.append(outs[g])
+                words_rows.append(w)
+                tag_rows.append(tg2)
+                k0_rows.append(k0)
+            parent = int(paths[s["a"], -1]) if tree.height else None
+            for g in range(1, len(outs)):
+                pending.setdefault(parent, []).append(
+                    (np.uint64(s["chunks"][g][2]), outs[g]))
+        jids = jnp.asarray(np.array(ids, np.int64))
+        k0h, k0l = split_u64(np.array(k0_rows, np.uint64))
+        tree = dataclasses.replace(
+            tree,
+            leaf_words=tree.leaf_words.at[jids].set(
+                jnp.asarray(np.stack(words_rows))),
+            leaf_tag=tree.leaf_tag.at[jids].set(
+                jnp.asarray(np.array(tag_rows, np.int32))),
+            leaf_k0_hi=tree.leaf_k0_hi.at[jids].set(jnp.asarray(k0h)),
+            leaf_k0_lo=tree.leaf_k0_lo.at[jids].set(jnp.asarray(k0l)),
+        )
+        ci, cv = _chain_updates(host_segs, old_next)
+        if len(ci):
+            tree = dataclasses.replace(
+                tree, next_leaf=tree.next_leaf.at[
+                    jnp.asarray(ci.astype(np.int64))].set(jnp.asarray(cv)))
+
+    tree = dataclasses.replace(
+        tree, num_leaves=jnp.asarray(alloc, jnp.int32))
+    if pending:
+        tree = _patch_device_parents(tree, pending, paths, counters, slack)
+    return tree, n_ins, n_ups
+
+
+# ---------------------------------------------------------------------------
+# Legacy full-host passes (recovery utilities; off the insert path)
+# ---------------------------------------------------------------------------
 
 def _backfill_row(row: np.ndarray, *vrows: np.ndarray) -> None:
     """Gap fill one row in place: every MAXKEY placeholder takes the first
@@ -343,10 +1305,11 @@ def _write_bs_leaf(h: dict, lid: int, mk: np.ndarray, mv: np.ndarray,
 
 def bs_batched_split_insert(h: dict, keys: np.ndarray, vals: np.ndarray,
                             counters: dict):
-    """Insert a sorted-unique deferred batch into the BS host dict with
-    k-way splits: one vectorised descent, one merge + split per affected
-    leaf, one parent-patch pass per level.  Returns ``(n_inserted,
-    n_present)``; present keys get their value overwritten (upsert)."""
+    """Full-host variant of the deferred-key split pass, operating on a
+    ``to_host`` dict.  No longer on the insert path (the device pass
+    :func:`bs_device_split_insert` replaced it); kept as a recovery
+    utility and a cross-check oracle.  Returns ``(n_inserted,
+    n_present)``."""
     n = h["n"]
     keys = np.asarray(keys, dtype=np.uint64)
     vals = np.asarray(vals, dtype=np.uint32)
@@ -402,10 +1365,6 @@ def bs_batched_split_insert(h: dict, keys: np.ndarray, vals: np.ndarray,
     return n_ins, n_ups
 
 
-# ---------------------------------------------------------------------------
-# CBS backend: targeted repack of affected leaves only
-# ---------------------------------------------------------------------------
-
 def _alloc_cbs_leaf(h: dict, counters: dict) -> int:
     from .compress import TAG_U64
 
@@ -426,11 +1385,10 @@ def _alloc_cbs_leaf(h: dict, counters: dict) -> int:
 
 def cbs_batched_repack(h: dict, keys: np.ndarray, alpha: float,
                        counters: dict):
-    """Merge deferred keys into the CBS host dict by re-FOR-encoding only
-    the affected leaves (fresh narrowest tags, k-way when the merged set
-    outgrows one block) and patching parents level by level.  Returns
-    ``(n_inserted, n_present)`` — present keys are honest no-ops, NOT
-    counted as inserted (keys-only backend)."""
+    """Full-host variant of the CBS targeted repack, operating on a
+    ``cbs_to_host`` dict.  No longer on the insert path (see
+    :func:`cbs_device_maintenance`); kept as a recovery utility.  Returns
+    ``(n_inserted, n_present)``."""
     from .compress import _for_chunks, _leaf_keys_host
 
     n = h["n"]

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: k-way leaf split scatter (device maintenance).
+
+The slow-path companion of :mod:`.leaf_insert`'s fast-path kernels: when a
+leaf's merged key set outgrows its row, the maintenance layer
+(:mod:`repro.core.maintenance`) emits ``m`` gapped rows whose every slot
+is described by a small table — either a batch key (``is_new``) or the
+``used_rank``-th used key of the source row.  This kernel materialises
+those rows.
+
+The only non-trivial step is *selection by rank*: slot ``i`` needs the
+source value whose used-slot prefix count equals ``used_rank[i] + 1``.
+There is no cross-lane shuffle-by-variable on the VPU, so instead of a
+gather the kernel sweeps the row once with a **static** loop of one-hot
+predicated selects (column ``j`` broadcasts into every lane that ranks
+it) — ``N`` lane-static vector ops, the same idiom as the rotate-based
+insert kernel, and exact because ranks are unique among used slots:
+
+    pick[:, i] = used[:, j] & (used_inc[:, j] == used_rank[:, i] + 1)
+    acc        = select(pick, broadcast(col j), acc)
+
+Everything else is masked combines: new keys and value overrides arrive
+as pre-gathered per-slot planes (the wrapper resolves ``new_idx`` /
+``val_ovr`` table indices outside the kernel, keeping the body free of
+cross-row indexing), and out-of-row slots become MAXKEY — which
+reproduces the gap-duplication invariant by construction, exactly like
+``segmented_rows_upsert``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .leaf_insert import _row_aux
+
+
+def _leaf_split_scatter_kernel(
+    hi_ref, lo_ref, val_ref, ur_ref, inrow_ref, isnew_ref,
+    nkhi_ref, nklo_ref, nkv_ref, ovrm_ref, ovrv_ref,
+    ohi_ref, olo_ref, oval_ref,
+):
+    hi, lo, vals = hi_ref[...], lo_ref[...], val_ref[...]
+    ur = ur_ref[...]
+    in_row = inrow_ref[...] != 0
+    is_new = isnew_ref[...] != 0
+    n = hi.shape[1]
+
+    used, _, _ = _row_aux(hi, lo)
+    used_inc = jnp.cumsum(used.astype(jnp.int32), axis=1)
+
+    # selection by rank: one static sweep of one-hot predicated selects
+    acc_hi = jnp.zeros_like(hi)
+    acc_lo = jnp.zeros_like(lo)
+    acc_v = jnp.zeros_like(vals)
+    for j in range(n):
+        pick = used[:, j : j + 1] & (used_inc[:, j : j + 1] == ur + 1)
+        acc_hi = jnp.where(pick, hi[:, j : j + 1], acc_hi)
+        acc_lo = jnp.where(pick, lo[:, j : j + 1], acc_lo)
+        acc_v = jnp.where(pick, vals[:, j : j + 1], acc_v)
+
+    out_hi = jnp.where(is_new, nkhi_ref[...], acc_hi)
+    out_lo = jnp.where(is_new, nklo_ref[...], acc_lo)
+    out_v = jnp.where(is_new, nkv_ref[...],
+                      jnp.where(ovrm_ref[...] != 0, ovrv_ref[...], acc_v))
+    ones = ~(out_hi ^ out_hi)  # computed all-ones (MAXKEY planes)
+    ohi_ref[...] = jnp.where(in_row, out_hi, ones)
+    olo_ref[...] = jnp.where(in_row, out_lo, ones)
+    oval_ref[...] = jnp.where(in_row, out_v, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def leaf_split_scatter(
+    hi, lo, vals,  # (R, N) uint32: gathered source rows (one per output)
+    used_rank,     # (R, N) int32: source used-rank per slot
+    in_row,        # (R, N) bool: slot holds a merged rank (else MAXKEY)
+    is_new,        # (R, N) bool: slot takes a batch key
+    nk_hi, nk_lo, nk_v,  # (R, N) uint32: pre-gathered batch key planes
+    ovr_mask, ovr_v,     # (R, N): value-override plane (BS upserts)
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+):
+    """Emit the merged gapped rows of a k-way split plan.  Returns
+    ``(out_hi, out_lo, out_val)`` — the rows the caller scatters into the
+    slack region (``core.maintenance`` is the table builder)."""
+    r, n = hi.shape
+    tb = min(block_rows, r)
+    pad = (-r) % tb
+    if pad:
+        padk = ((0, pad), (0, 0))
+        ff = np.uint32(0xFFFFFFFF)
+        hi = jnp.pad(hi, padk, constant_values=ff)
+        lo = jnp.pad(lo, padk, constant_values=ff)
+        vals = jnp.pad(vals, padk)
+        used_rank = jnp.pad(used_rank, padk)
+        in_row = jnp.pad(in_row, padk)
+        is_new = jnp.pad(is_new, padk)
+        nk_hi = jnp.pad(nk_hi, padk, constant_values=ff)
+        nk_lo = jnp.pad(nk_lo, padk, constant_values=ff)
+        nk_v = jnp.pad(nk_v, padk)
+        ovr_mask = jnp.pad(ovr_mask, padk)
+        ovr_v = jnp.pad(ovr_v, padk)
+    rp = hi.shape[0]
+    spec = pl.BlockSpec((tb, n), lambda i: (i, 0))
+    ohi, olo, oval = pl.pallas_call(
+        _leaf_split_scatter_kernel,
+        grid=(rp // tb,),
+        in_specs=[spec] * 11,
+        out_specs=[spec, spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((rp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((rp, n), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(hi, lo, vals, used_rank.astype(jnp.int32),
+      in_row.astype(jnp.int32), is_new.astype(jnp.int32),
+      nk_hi, nk_lo, nk_v, ovr_mask.astype(jnp.int32),
+      ovr_v.astype(jnp.uint32))
+    return ohi[:r], olo[:r], oval[:r]

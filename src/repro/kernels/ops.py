@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layout import BSTreeArrays, split_u64
-from . import for_succ, gather_succ, leaf_insert, succ_kernel
+from . import for_succ, gather_succ, leaf_insert, leaf_split, succ_kernel
 
 
 def _interp() -> bool:
@@ -68,6 +68,16 @@ def leaf_upsert_rows_multi(hi, lo, vals, seg_hi, seg_lo, seg_v, **kw):
 def leaf_delete_rows(hi, lo, vals, k_hi, k_lo, **kw):
     kw.setdefault("interpret", _interp())
     return leaf_insert.leaf_delete(hi, lo, vals, k_hi, k_lo, **kw)
+
+
+def leaf_split_rows(hi, lo, vals, used_rank, in_row, is_new,
+                    nk_hi, nk_lo, nk_v, ovr_mask, ovr_v, **kw):
+    """K-way split scatter: emit the merged gapped rows of a maintenance
+    split plan (tables built by ``core.maintenance._split_tables``)."""
+    kw.setdefault("interpret", _interp())
+    return leaf_split.leaf_split_scatter(
+        hi, lo, vals, used_rank, in_row, is_new, nk_hi, nk_lo, nk_v,
+        ovr_mask, ovr_v, **kw)
 
 
 def for_block_search(words, tag, k0_hi, k0_lo, q_hi, q_lo, **kw):

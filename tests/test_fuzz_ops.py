@@ -1,0 +1,218 @@
+"""Stateful differential fuzzing of the ``Index`` facade.
+
+Random interleaved insert / delete / lookup / range_scan / count_range /
+compact sequences run on all three backends (``bs``, ``cbs``, ``auto``)
+and are cross-checked against the scalar ``ReferenceBSTree`` oracle after
+**every** step.  The key pool is dense (tiny ``n=8`` nodes, clustered
+multiples) so short sequences force leaf splits, slack exhaustion
+(on-device capacity regrows) and compaction thresholds — exactly the
+structural machinery the device maintenance pass replaced.
+
+Two layers:
+
+* a deterministic seeded random walk (always runs; a short smoke walk
+  stays in the fast lane, the full three-backend walk is ``slow``);
+* a ``hypothesis`` ``RuleBasedStateMachine`` battery (>= 200 shrinking
+  examples per backend, ``slow``) when hypothesis is installed.
+
+Op batches are padded to one fixed shape (``BATCH`` keys, repeating the
+last key — upsert/delete semantics make that a no-op) so the whole fuzz
+run compiles O(heights) programs instead of one per batch size.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Index, IndexSpec, ReferenceBSTree
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAS_HYPOTHESIS = False
+
+N = 8       # tiny nodes: splits/compaction kick in after a handful of ops
+BATCH = 8   # fixed op-batch shape (pad by repeating the last key)
+POOL = (np.arange(1, 1201, dtype=np.uint64) * np.uint64(7919))
+
+BACKENDS = ("bs", "cbs", "auto")
+
+
+def _low32(ks):
+    return (np.asarray(ks, np.uint64) & np.uint64(0xFFFFFFFF)).astype(
+        np.uint32)
+
+
+def _pad(ks):
+    """Pad a (deduped) batch to exactly BATCH keys by repeating the last
+    one — semantically a no-op for upsert and delete."""
+    ks = np.unique(np.asarray(ks, dtype=np.uint64))[:BATCH]
+    if len(ks) < BATCH:
+        ks = np.concatenate(
+            [ks, np.full(BATCH - len(ks), ks[-1], np.uint64)])
+    return ks
+
+
+class DifferentialIndex:
+    """Index-under-test + oracle, mutated in lockstep, checked each op."""
+
+    def __init__(self, backend: str, seed_keys):
+        seed_keys = np.unique(np.asarray(seed_keys, np.uint64))
+        # slack=1.25 + a dense pool => splits exhaust the preallocated
+        # rows quickly, forcing the on-device regrow path
+        self.idx = Index.build(
+            seed_keys, spec=IndexSpec(n=N, backend=backend, slack=1.25))
+        self.oracle = ReferenceBSTree.bulk_load(
+            seed_keys, _low32(seed_keys), n=N)
+
+    # -- ops ------------------------------------------------------------
+    def insert(self, ks):
+        ks = _pad(ks)
+        self.idx, stats = self.idx.insert(ks)  # default vals: low 32 bits
+        for k in np.unique(ks):
+            self.oracle.insert(int(k), int(k) & 0xFFFFFFFF)
+        assert (stats["inserted"] + stats["present"]
+                <= stats["requested"]), stats
+
+    def delete(self, ks):
+        ks = _pad(ks)
+        self.idx, dstats = self.idx.delete(ks)
+        want = sum(self.oracle.delete(int(k)) for k in np.unique(ks))
+        assert dstats["deleted"] == want, (dstats, want)
+
+    def lookup(self, ks):
+        ks = _pad(ks)
+        found, vals = self.idx.lookup(ks)
+        model = dict(self.oracle.items())
+        for k, f, v in zip(ks.tolist(), found.tolist(), vals.tolist()):
+            assert f == (k in model), k
+            if f and self.idx.supports_values:
+                assert v == model[k], k
+
+    def range(self, lo, hi):
+        lo, hi = (hi, lo) if lo > hi else (lo, hi)
+        ks, vs = self.idx.range_scan(lo, hi)
+        want = [(k, v) for k, v in self.oracle.items() if lo <= k <= hi]
+        assert ks.tolist() == [k for k, _ in want]
+        if self.idx.supports_values:
+            assert vs.tolist() == [v for _, v in want]
+        assert self.idx.count_range(lo, hi) == len(want)
+
+    def compact(self, force: bool):
+        self.idx, cc = self.idx.compact(force=force)
+        # a compact triggered by the occupancy gate must reclaim leaves; a
+        # *forced* one may legitimately add one (re-pack at build alpha)
+        if cc["compacted"] and cc["empty_leaves"] > 0:
+            assert cc["leaves_after"] <= cc["leaves_before"], cc
+
+    # -- the every-step oracle cross-check -------------------------------
+    def check(self):
+        ks, vs = self.idx.items()
+        want = self.oracle.items()
+        assert ks.tolist() == [k for k, _ in want]
+        if self.idx.supports_values:
+            assert vs.tolist() == [v for _, v in want]
+        self.idx.check_invariants()
+
+
+def _walk(backend: str, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    d = DifferentialIndex(backend, rng.choice(POOL, 40, replace=False))
+    for step in range(steps):
+        op = int(rng.integers(0, 10))
+        ks = rng.choice(POOL, int(rng.integers(1, BATCH + 1)),
+                        replace=False)
+        if op < 4:
+            d.insert(ks)
+        elif op < 6:
+            d.delete(ks)
+        elif op < 8:
+            d.lookup(ks)
+        elif op == 8:
+            lo, hi = rng.choice(POOL, 2, replace=False)
+            d.range(lo, hi)
+        else:
+            d.compact(force=bool(step % 2))
+        d.check()
+    return d
+
+
+def test_differential_smoke_walk():
+    """Fast-lane smoke: one short walk on the value-bearing backend."""
+    _walk("bs", steps=15, seed=0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_differential_random_walk(backend):
+    """Long deterministic walk per backend — the hypothesis battery's
+    always-on companion (it runs even where hypothesis is absent)."""
+    # fixed per-backend seeds (str hash() is process-salted: irreproducible)
+    d = _walk(backend, steps=60,
+              seed={"bs": 11, "cbs": 22, "auto": 33}[backend])
+    # the dense pool at n=8 must have forced real structural maintenance
+    assert int(d.idx.tree.num_leaves) > 5
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis stateful battery (shrinking-friendly)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    from hypothesis import HealthCheck, settings, strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        invariant,
+        rule,
+        run_state_machine_as_test,
+    )
+
+    KEY = st.integers(min_value=1, max_value=len(POOL)).map(
+        lambda i: int(POOL[i - 1]))
+    KEYS = st.lists(KEY, min_size=1, max_size=BATCH, unique=True)
+
+    FUZZ_SETTINGS = settings(
+        max_examples=200,  # >= 200 examples per backend (acceptance bar)
+        stateful_step_count=8,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+
+    class IndexMachine(RuleBasedStateMachine):
+        backend: str = "bs"
+
+        def __init__(self):
+            super().__init__()
+            self.d = DifferentialIndex(
+                self.backend, POOL[[0, 10, 40, 200, 600]])
+
+        @rule(ks=KEYS)
+        def insert(self, ks):
+            self.d.insert(np.asarray(ks, np.uint64))
+
+        @rule(ks=KEYS)
+        def delete(self, ks):
+            self.d.delete(np.asarray(ks, np.uint64))
+
+        @rule(ks=KEYS)
+        def lookup(self, ks):
+            self.d.lookup(np.asarray(ks, np.uint64))
+
+        @rule(a=KEY, b=KEY)
+        def range(self, a, b):
+            self.d.range(np.uint64(a), np.uint64(b))
+
+        @rule(force=st.booleans())
+        def compact(self, force):
+            self.d.compact(force)
+
+        @invariant()
+        def matches_oracle(self):
+            self.d.check()
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_fuzz_state_machine(backend):
+        machine = type(f"IndexMachine_{backend}", (IndexMachine,),
+                       {"backend": backend})
+        run_state_machine_as_test(machine, settings=FUZZ_SETTINGS)

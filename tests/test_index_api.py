@@ -187,6 +187,10 @@ def test_stats_and_memory(loaded):
     assert s["node_width"] == N
     assert s["memory_bytes"] == idx.memory_bytes() > 0
     assert s["height"] >= 1 and s["num_leaves"] >= 1
+    # slack budget surface (on-device maintenance headroom)
+    assert s["leaf_capacity"] >= s["num_leaves"]
+    assert s["leaf_slack"] == s["leaf_capacity"] - s["num_leaves"]
+    assert s["inner_slack"] == s["inner_capacity"] - s["num_inner"] >= 0
 
 
 def test_wrap_adopts_existing_trees(rng):

@@ -119,3 +119,54 @@ def test_for_block_kernel(rng, n):
     np.testing.assert_array_equal(np.asarray(kr), np.asarray(rr))
     np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
     np.testing.assert_array_equal(np.asarray(km), np.asarray(fnd))
+
+
+@pytest.mark.parametrize("n", [16, 128])
+def test_leaf_split_scatter_kernel(rng, n):
+    """The split-scatter kernel must emit exactly the rows the jnp
+    maintenance path builds, on a real k-way split plan (dense deferred
+    cluster + present keys exercising the value-override plane)."""
+    from repro.core import maintenance as M
+
+    keys = np.sort(rand_keys(rng, 2000))
+    vals = np.arange(len(keys), dtype=np.uint32)
+    t = B.bulk_load(keys, vals, n=n)
+    dense = keys[50] + np.arange(1, 4 * n + 1, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    batch = np.unique(np.concatenate([dense, keys[50:53]]))
+    bv = (batch & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi, lo = split_u64(batch)
+    k_hi, k_lo, v = jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(bv)
+
+    _, leaf = M.device_descend_paths(t, k_hi, k_lo)
+    member, r, c = map(np.asarray, M._bs_key_stats(
+        t.leaf_hi, t.leaf_lo, k_hi, k_lo, jnp.asarray(leaf)))
+    assert member.sum() == 3  # the present keys ride the override plane
+    per = max(1, int(round(M.SPLIT_OCCUPANCY * n)))
+    segs, _ = M._split_plan(
+        M._segment_runs(leaf), leaf, member, r.astype(np.int64),
+        c.astype(np.int64), n, per, int(t.num_leaves))
+    assert any(len(s["outs"]) > 1 for s in segs)  # a real k-way split
+    tables = M._split_tables(segs, n, int(t.leaf_capacity))
+
+    src = jnp.asarray(tables["src_leaf"])
+    rows_hi, rows_lo = t.leaf_hi[src], t.leaf_lo[src]
+    rows_v = t.leaf_val[src]
+    want = M._build_split_rows(
+        rows_hi, rows_lo, rows_v, k_hi, k_lo, v,
+        jnp.asarray(tables["in_row"]), jnp.asarray(tables["is_new"]),
+        jnp.asarray(tables["new_idx"]), jnp.asarray(tables["used_rank"]),
+        jnp.asarray(tables["val_ovr"]))
+    # kernel contract: batch-index tables resolve to per-slot planes
+    # outside the kernel (no cross-row indexing in the body)
+    ni = np.clip(tables["new_idx"], 0, len(batch) - 1)
+    ov = np.clip(tables["val_ovr"], 0, len(batch) - 1)
+    got = ops.leaf_split_rows(
+        rows_hi, rows_lo, rows_v,
+        jnp.asarray(tables["used_rank"]), jnp.asarray(tables["in_row"]),
+        jnp.asarray(tables["is_new"]),
+        jnp.asarray(hi[ni]), jnp.asarray(lo[ni]), jnp.asarray(bv[ni]),
+        jnp.asarray(tables["val_ovr"] >= 0), jnp.asarray(bv[ov]))
+    for g, w, name in zip(got, want, ("hi", "lo", "val")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)

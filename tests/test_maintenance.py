@@ -321,3 +321,133 @@ def test_sharded_compact_and_maintenance_aggregation(rng):
     flat = sorted(k for part in got for k, _ in part)
     want = sorted(np.concatenate([keep, dense]).tolist())
     assert flat == want
+
+
+# ---------------------------------------------------------------------------
+# On-device maintenance: no full-tree host round-trips (PR 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _ban_full_roundtrip(monkeypatch):
+    """Make any full-tree host copy on the maintenance path a test
+    failure (the same technique PR 3 used for `_cbs_host_rebuild`)."""
+    def boom(*a, **k):  # pragma: no cover - failure path
+        raise AssertionError("full-tree host copy on the maintenance path")
+
+    monkeypatch.setattr(B, "to_host", boom)
+    monkeypatch.setattr(B, "from_host", boom)
+    monkeypatch.setattr(C, "cbs_to_host", boom)
+    monkeypatch.setattr(C, "cbs_from_host", boom)
+
+
+def test_device_maintenance_no_full_tree_roundtrip(rng, monkeypatch):
+    """A deferred batch that fits the preallocated slack must run the
+    whole split/parent-patch pass on device: zero `to_host`/`from_host`
+    calls, zero capacity regrows."""
+    keys = np.sort(rand_keys(rng, 2000))
+    vals = np.arange(len(keys), dtype=np.uint32)
+    t = B.bulk_load(keys, vals, n=N, slack=3.0)  # generous slack budget
+    dense = keys[50] + np.arange(1, 201, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    dvals = np.arange(len(dense), dtype=np.uint32)
+    with monkeypatch.context() as mp:
+        _ban_full_roundtrip(mp)
+        t2, stats = B.insert_batch(t, dense, dvals)
+        # ... and compaction is device-resident too
+        t3, _ = B.delete_batch(t2, keys[:1500])
+        t3, cc = B.compact(t3, force=True)
+    m = stats["maintenance"]
+    assert stats["deferred"] == len(dense)
+    assert m["device_batches"] == 1
+    assert m["slack_regrows"] == 0, "batch fit in slack; nothing may regrow"
+    assert m["leaf_splits"] >= 1
+    assert cc["compacted"]
+    ref = oracle_with(keys, vals, dense, dvals)
+    assert B.check_invariants(t2) == ref.items()
+
+
+def test_slack_exhausted_fallback_stays_on_device(rng, monkeypatch):
+    """When the batch outgrows the slack budget the fallback regrows
+    capacity ON DEVICE and transfers only touched rows: the parent patch
+    gathers at most the descent path's inner nodes, never the tree."""
+    keys = np.sort(rand_keys(rng, 2000))
+    vals = np.arange(len(keys), dtype=np.uint32)
+    t = B.bulk_load(keys, vals, n=N, slack=1.0)  # minimal slack: +4 rows
+    height = t.height
+    num_inner = int(t.num_inner)
+    dense = keys[50] + np.arange(1, 1501, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    dvals = np.arange(len(dense), dtype=np.uint32)
+    with monkeypatch.context() as mp:
+        _ban_full_roundtrip(mp)
+        t2, stats = B.insert_batch(t, dense, dvals)
+    m = stats["maintenance"]
+    assert m["slack_regrows"] >= 1, "minimal slack must have been exhausted"
+    assert m["leaves_allocated"] > 4
+    # touched-rows-only: one dense segment descends one root-to-leaf path
+    assert m["inner_rows_gathered"] <= max(height, 1), m
+    assert m["inner_rows_gathered"] < max(num_inner, 2)
+    ref = oracle_with(keys, vals, dense, dvals)
+    assert B.check_invariants(t2) == ref.items()
+
+
+def test_cbs_device_maintenance_no_roundtrip_in_frame(rng, monkeypatch):
+    """CBS: an in-frame overflow splits on device at the existing tag
+    width — zero host leaf-block gathers, zero full-tree copies."""
+    keys = np.unique(
+        np.uint64(1 << 30) + rng.integers(0, 3000, 400, dtype=np.uint64) * 7)
+    t = C.cbs_bulk_load(keys, n=N, slack=4.0)
+    tag0 = np.asarray(t.leaf_tag)[: int(t.num_leaves)].copy()
+    # dense cluster right of an existing leaf's k0: stays in its frame
+    dense = keys[3] + np.arange(1, 120, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    with monkeypatch.context() as mp:
+        _ban_full_roundtrip(mp)
+        t2, stats = C.cbs_insert_batch(t, dense)
+    m = stats["maintenance"]
+    assert stats["deferred"] > 0
+    assert m["device_batches"] == 1
+    assert m["leaf_rows_gathered"] == 0, "in-frame split must stay on device"
+    assert m["slack_regrows"] == 0
+    want = np.unique(np.concatenate([keys, dense]))
+    np.testing.assert_array_equal(C.cbs_items(t2), want)
+    # chunks inherit the source tag (re-encoding happens later, at
+    # compact/repack time) — no tag may have widened
+    tags2 = np.asarray(t2.leaf_tag)[: int(t2.num_leaves)]
+    assert set(tags2.tolist()) <= set(tag0.tolist())
+
+
+def test_cbs_out_of_frame_fallback_transfers_touched_blocks_only(
+        rng, monkeypatch):
+    """CBS: out-of-frame keys take the narrowed fallback — only the
+    affected leaf blocks are gathered to the host, never the tree."""
+    keys = np.unique(
+        np.uint64(1 << 30) + rng.integers(0, 3000, 400, dtype=np.uint64) * 7)
+    t = C.cbs_bulk_load(keys, n=N, slack=4.0)
+    num_leaves = int(t.num_leaves)
+    far = np.unique(rng.integers(2**61, 2**62, 50, dtype=np.uint64))
+    with monkeypatch.context() as mp:
+        _ban_full_roundtrip(mp)
+        t2, stats = C.cbs_insert_batch(t, far)
+    m = stats["maintenance"]
+    assert stats["deferred"] > 0
+    assert 1 <= m["leaf_rows_gathered"] < num_leaves, m
+    want = np.unique(np.concatenate([keys, far]))
+    np.testing.assert_array_equal(C.cbs_items(t2), want)
+
+
+def test_sharded_updates_without_host_gather(rng, monkeypatch):
+    """The sharded update path (per-shard maintenance + re-stack) must
+    survive with full-tree host copies banned — the stack/lift helpers
+    are device-resident since the refactor."""
+    keys = np.sort(rand_keys(rng, 6000))
+    st = build_sharded(keys, 4, n=N)
+    dense = keys[100] + np.arange(1, 800, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    with monkeypatch.context() as mp:
+        _ban_full_roundtrip(mp)
+        st, stats = insert_sharded(st, dense)
+        st, _ = delete_sharded(st, keys[:4000])
+        st, cc = compact_sharded(st, force=True)
+    assert stats["maintenance"]["device_batches"] >= 1
+    assert cc["compacted"] >= 1
