@@ -156,13 +156,16 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
       f"{len(skew)/dt:.2f}Mops_def{fstats['deferred']}"
       f"_ls{fstats['maintenance']['leaf_splits']}", "F_skew")
 
-    # Maintenance workload: mass delete then compact() reclaims the chain
+    # Maintenance workload: mass delete then compact() reclaims the chain.
+    # `fr`/`hr` audit the re-pack location: device FOR re-encodes vs
+    # legacy host decodes (hr must stay 0 — PR 5 tentpole)
     dels = rng.choice(build, min(len(build) // 2, 4 * ops), replace=False)
     ix6, _ = idx.delete(dels)
     dt, (_, comp) = timed(lambda: ix6.compact(force=True))
     t("wlG_compact", dt,
       f"{comp['keys']/dt:.2f}Mkeys_l{comp['leaves_before']}"
-      f"to{comp['leaves_after']}", "G_compact")
+      f"to{comp['leaves_after']}_fr{comp['for_reencode_leaves']}"
+      f"_hr{comp['host_reencode_leaves']}", "G_compact")
 
     # Workload H: device-resident maintenance — a deferred-heavy batch
     # whose splits land in the preallocated slack rows, so the whole

@@ -1,23 +1,39 @@
-"""Compare two ``bench_workloads --json`` files row by row; fail on
-wall-time regressions.
+"""Compare a fresh ``bench_workloads --json`` run against a baseline;
+fail on wall-time regressions.
 
 CI usage (the ``bench`` lane)::
 
     python -m benchmarks.compare_bench BENCH_workloads.json \
-        BENCH_workloads.new.json --threshold 1.5
+        BENCH_workloads.new.json --history .bench-history
 
-Rows are matched by ``name``.  Each row's wall-time ratio
-(candidate/baseline) is first normalised by the **median ratio across all
-rows**: the committed baseline was produced on different hardware (and
-shared CI runners drift), so a uniform machine-speed shift moves every
-row together and must not trip the gate — only a row that slows down
-*relative to the rest of the suite* is a code regression.  A row then
-fails when its normalised ratio exceeds ``--threshold`` AND the candidate
-row is slower than ``--min-us`` (an absolute noise floor:
-microsecond-scale rows jitter far more than 1.5x and would cry wolf).
-The trade-off is explicit: a change that slows *every* row uniformly is
-invisible to this gate (and indistinguishable from a slow runner); the
-raw ratios are printed so humans can spot it in the job log.
+Two gating modes, picked automatically:
+
+* **Rolling-median history** (``--history DIR`` with >= 1 prior run):
+  each row gates against the *median* of its wall times over the last
+  ``--history-n`` main-branch runs (persisted across CI runs via
+  ``actions/cache``).  Medians over same-pool runners absorb both
+  machine drift and single-run noise, so once the window holds
+  ``--history-min-runs`` runs the gate tightens to
+  ``--history-threshold`` (1.3x, from 1.5x against the committed
+  file); a thinner history — one sample is just one runner's speed —
+  still gates by its median but keeps the wide threshold.
+
+* **Committed baseline** (no usable history): row-by-row against the
+  checked-in JSON at ``--threshold``, with the candidate/baseline ratios
+  first normalised by the **median ratio across all rows** — the
+  committed file was produced on different hardware, so a uniform
+  machine-speed shift moves every row together and must not trip the
+  gate; only a row that slows down *relative to the rest of the suite*
+  is a code regression.  The trade-off is explicit: a change that slows
+  *every* row uniformly is invisible here (the raw ratios are printed so
+  humans can spot it) — which is exactly what the history mode fixes.
+
+In both modes a row only fails when it is also slower than ``--min-us``
+(an absolute noise floor: microsecond-scale rows jitter far more than
+the threshold and would cry wolf).  A baseline row recording 0.0us (a
+timer glitch or an empty workload) is clamped and warned about instead
+of silently dividing the suite's median by zero — it never gates and
+never skews the machine-speed factor.
 
 Rows present in only one file are reported but never fail the gate — new
 benchmarks must be able to land together with their first baseline.
@@ -27,6 +43,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 import numpy as np
@@ -38,12 +55,71 @@ def load_rows(path: str) -> tuple[dict, dict]:
     return payload, {r["name"]: r for r in payload["rows"]}
 
 
+def _meta_matches(a: dict, b: dict) -> list:
+    return [k for k in ("build_keys", "ops", "repeat")
+            if a.get(k) != b.get(k)]
+
+
+def load_history(history_dir: str, cand_meta: dict, keep: int):
+    """Per-row rolling wall times from the last ``keep`` runs in
+    ``history_dir`` (oldest first by filename — the CI writer names files
+    by monotonically increasing run id).  Runs whose workload metadata
+    disagrees with the candidate are skipped with a warning; returns
+    ``(times: {row: [us, ...]}, n_runs)``."""
+    times: dict[str, list] = {}
+    if not history_dir or not os.path.isdir(history_dir):
+        return times, 0
+    files = sorted(f for f in os.listdir(history_dir)
+                   if f.endswith(".json"))
+    used = 0
+    for fname in files[-keep:]:
+        path = os.path.join(history_dir, fname)
+        # parse the WHOLE file (meta + every row) inside the guard: a
+        # schema-drifted cached run must degrade to warn-and-skip, never
+        # crash the gate
+        try:
+            meta, rows = load_rows(path)
+            bad = _meta_matches(meta, cand_meta)
+            file_times = {name: float(r["us_per_call"])
+                          for name, r in rows.items()}
+        except (json.JSONDecodeError, KeyError, OSError, TypeError,
+                ValueError) as e:
+            print(f"WARNING: skipping unreadable history file {fname}: {e}")
+            continue
+        if bad:
+            print(f"WARNING: skipping history file {fname}: workload "
+                  f"mismatch on {bad}")
+            continue
+        used += 1
+        for name, v in file_times.items():
+            times.setdefault(name, []).append(v)
+    return times, used
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="committed BENCH_workloads.json")
     ap.add_argument("candidate", help="freshly produced JSON")
     ap.add_argument("--threshold", type=float, default=1.5,
-                    help="fail when candidate/baseline exceeds this ratio")
+                    help="fail when candidate/baseline exceeds this ratio "
+                         "(committed-baseline mode)")
+    ap.add_argument("--history", default=None, metavar="DIR",
+                    help="directory of prior main-branch run JSONs; when "
+                         ">=1 usable run exists, gate against per-row "
+                         "rolling medians at --history-threshold instead")
+    ap.add_argument("--history-n", type=int, default=10,
+                    help="rolling window: newest N history runs")
+    ap.add_argument("--history-threshold", type=float, default=1.3,
+                    help="per-row gate vs the rolling median (same-pool "
+                         "runners need no machine-speed normalisation, so "
+                         "the gate tightens vs --threshold)")
+    ap.add_argument("--history-min-runs", type=int, default=3,
+                    help="runs needed before the tightened "
+                         "--history-threshold applies; a thinner history "
+                         "still gates by its median but at --threshold "
+                         "(a 1-2 sample 'median' is a single runner's "
+                         "speed, which legitimately varies more than "
+                         "1.3x across the shared pool)")
     ap.add_argument("--min-us", type=float, default=10000.0,
                     help="gate only rows slower than this (absolute noise "
                          "floor).  Millisecond-scale rows (wlA reads) "
@@ -55,22 +131,62 @@ def main(argv=None) -> int:
 
     base_meta, base = load_rows(args.baseline)
     cand_meta, cand = load_rows(args.candidate)
-    for k in ("build_keys", "ops", "repeat"):
-        if base_meta.get(k) != cand_meta.get(k):
-            print(f"FATAL: workload mismatch on {k}: baseline "
-                  f"{base_meta.get(k)} vs candidate {cand_meta.get(k)} — "
-                  f"regenerate the baseline with the CI workload size")
-            return 1
+    bad = _meta_matches(base_meta, cand_meta)
+    if bad:
+        print(f"FATAL: workload mismatch on {bad}: baseline "
+              f"{[base_meta.get(k) for k in bad]} vs candidate "
+              f"{[cand_meta.get(k) for k in bad]} — regenerate the "
+              f"baseline with the CI workload size")
+        return 1
+
+    hist_times, hist_runs = load_history(args.history, cand_meta,
+                                         args.history_n)
+    use_history = hist_runs >= 1
+    thresholds: dict = {}
+    if use_history:
+        # per-ROW sample counts decide the tightened threshold: a row
+        # whose median rests on 1-2 samples (a just-added benchmark, or
+        # a thin window after cache eviction) is a single runner's
+        # speed and keeps the wide threshold until the window fills
+        base = {name: {"us_per_call": float(np.median(ts))}
+                for name, ts in hist_times.items()}
+        thresholds = {name: (args.history_threshold
+                             if len(ts) >= args.history_min_runs
+                             else args.threshold)
+                      for name, ts in hist_times.items()}
+        tight = sum(t == args.history_threshold for t in thresholds.values())
+        print(f"gating vs rolling median of {hist_runs} prior run(s): "
+              f"{tight}/{len(thresholds)} rows at "
+              f"{args.history_threshold}x (rows with < "
+              f"{args.history_min_runs} samples stay at "
+              f"{args.threshold}x)\n")
+    else:
+        if args.history:
+            print("no usable bench history found — falling back to the "
+                  f"committed baseline at {args.threshold}x\n")
 
     shared = sorted(set(base) & set(cand))
-    ratios = {}
+    ratios, degenerate = {}, []
     for name in shared:
         b = float(base[name]["us_per_call"])
         c = float(cand[name]["us_per_call"])
-        ratios[name] = c / b if b > 0 else float("inf")
-    speed = float(np.median(list(ratios.values()))) if ratios else 1.0
-    print(f"machine-speed factor (median ratio over {len(shared)} rows): "
-          f"{speed:.2f}\n")
+        if b <= 0.0:
+            # a 0.0us baseline row would make the ratio (and with it the
+            # suite median) infinite: clamp, warn, and keep the row
+            # informational — it can neither gate nor skew normalisation
+            degenerate.append(name)
+            continue
+        ratios[name] = c / b
+    for name in degenerate:
+        print(f"WARNING: baseline row {name!r} records "
+              f"{float(base[name]['us_per_call']):.1f}us — clamped; row "
+              f"is informational only")
+    if use_history:
+        speed = 1.0  # same runner pool as the medians: no normalisation
+    else:
+        speed = float(np.median(list(ratios.values()))) if ratios else 1.0
+        print(f"machine-speed factor (median ratio over {len(ratios)} "
+              f"rows): {speed:.2f}\n")
 
     regressions = []
     print(f"{'row':44s} {'base_us':>12s} {'cand_us':>12s} {'ratio':>7s} "
@@ -86,22 +202,28 @@ def main(argv=None) -> int:
             continue
         b = float(base[name]["us_per_call"])
         c = float(cand[name]["us_per_call"])
+        if name not in ratios:
+            print(f"{name:44s} {b:12.1f} {c:12.1f} {'CLAMP':>7s}      -")
+            continue
         ratio = ratios[name]
         norm = ratio / speed if speed > 0 else float("inf")
+        thr = thresholds.get(name, args.threshold)
         flag = ""
-        if norm > args.threshold and c > args.min_us:
+        if norm > thr and c > args.min_us:
             flag = "  << REGRESSION"
-            regressions.append((name, b, c, norm))
+            regressions.append((name, b, c, norm, thr))
         print(f"{name:44s} {b:12.1f} {c:12.1f} {ratio:7.2f} {norm:6.2f}"
               f"{flag}")
 
     if regressions:
-        print(f"\n{len(regressions)} row(s) regressed beyond "
-              f"{args.threshold}x relative to the suite (above the "
+        against = (f"the rolling median of {hist_runs} run(s)"
+                   if use_history else "the suite-normalised baseline")
+        print(f"\n{len(regressions)} row(s) regressed beyond their "
+              f"threshold relative to {against} (above the "
               f"{args.min_us:.0f}us noise floor):")
-        for name, b, c, norm in regressions:
+        for name, b, c, norm, thr in regressions:
             print(f"  {name}: {b:.0f}us -> {c:.0f}us "
-                  f"({norm:.2f}x normalised)")
+                  f"({norm:.2f}x normalised, threshold {thr}x)")
         return 1
     print("\nno regressions")
     return 0

@@ -67,6 +67,7 @@ __all__ = [
     "cbs_insert_batch",
     "cbs_delete_batch",
     "cbs_compact",
+    "cbs_host_compact",
     "build_auto",
     "cbs_range_scan",
     "cbs_decode_spans",
@@ -188,12 +189,12 @@ def _for_chunks(keys: np.ndarray, n: int, alpha: float):
     repack (``maintenance.cbs_device_maintenance``'s out-of-frame
     fallback) so both encode leaves identically.  Yields
     ``(tag, packed_words, k0, count)``."""
-    caps = _leaf_caps(n)
+    takes = _take_sizes(n, alpha)
     i = 0
     while i < len(keys):
         for tag, width_max in ((TAG_U16, 0xFFFF), (TAG_U32, 0xFFFFFFFF),
                                (TAG_U64, None)):
-            take = max(1, int(round(alpha * caps[tag])))
+            take = takes[tag]
             chunk = keys[i : i + take]
             k0 = chunk[0]
             spread = int(chunk[-1] - k0)
@@ -727,6 +728,229 @@ def _cbs_delete_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf):
 
 
 # ---------------------------------------------------------------------------
+# Device FOR re-encode plumbing: decode planes + fit metadata on device,
+# plan chunks on host over booleans, pack via kernels/for_encode
+# ---------------------------------------------------------------------------
+
+def _take_sizes(n: int, alpha: float) -> dict[int, int]:
+    """Keys per chunk at bulk-load occupancy, per tag — the greedy chunk
+    sizes of :func:`_for_chunks` (single home for the rounding rule)."""
+    caps = _leaf_caps(n)
+    return {tag: max(1, int(round(alpha * caps[tag]))) for tag in caps}
+
+
+@jax.jit
+def _absolute_planes(words, tag, k0_hi, k0_lo):
+    """Decode FOR blocks to absolute u64 key planes — on device.
+
+    (L, 2N) physical words -> (L, 4N) (hi, lo) planes of absolute keys in
+    logical slot order (all three tag interpretations evaluated, padded
+    to the u16 capacity with MAXKEY, selected by tag) plus the derived
+    used bitmap and per-leaf used counts.  This is the device analogue of
+    the host ``_leaf_keys_host`` decode loop: the planes stay on device;
+    only the bitmap and counts (metadata) are meant to cross to the host.
+    """
+    n = words.shape[-1] // 2
+    w16 = 4 * n
+    planes = []
+    for tc in (TAG_U16, TAG_U32, TAG_U64):
+        d_hi, d_lo = _unpack_tag(words, tc, n)
+        pad = w16 - d_hi.shape[-1]
+        if pad:
+            d_hi = jnp.pad(d_hi, ((0, 0), (0, pad)), constant_values=MAXKEY_HI)
+            d_lo = jnp.pad(d_lo, ((0, 0), (0, pad)), constant_values=MAXKEY_LO)
+        planes.append((d_hi, d_lo))
+    d_hi = _select_by_tag(tag[:, None], [p[0] for p in planes])
+    d_lo = _select_by_tag(tag[:, None], [p[1] for p in planes])
+    is_max = (d_hi == MAXKEY_HI) & (d_lo == MAXKEY_LO)
+    a_lo = d_lo + k0_lo[:, None]
+    a_hi = d_hi + k0_hi[:, None] + (a_lo < d_lo).astype(d_hi.dtype)
+    a_hi = jnp.where(is_max, MAXKEY_HI, a_hi)
+    a_lo = jnp.where(is_max, MAXKEY_LO, a_lo)
+    from .layout import used_mask
+
+    used = used_mask(a_hi, a_lo)
+    return a_hi, a_lo, used, jnp.sum(used.astype(jnp.int32), axis=-1)
+
+
+@jax.jit
+def _used_counts(words, tag, k0_hi, k0_lo):
+    """Gate-only reduction: per-leaf used bitmap + counts WITHOUT
+    materialising the decoded key planes (XLA dead-code-eliminates the
+    plane outputs, so the fused dispatch never allocates the ~4x
+    decoded buffers a healthy-tree ``compact()`` poll would discard)."""
+    _, _, used, cnt = _absolute_planes(words, tag, k0_hi, k0_lo)
+    return used, cnt
+
+
+@jax.jit
+def _absolute_planes_rows(words, tag, k0_hi, k0_lo, rows):
+    """Touched-rows variant: gather ``rows`` and decode — the gather is
+    folded into the same jitted dispatch so no eager slice/gather op (a
+    millisecond-class dispatch each on small hosts) runs on the
+    maintenance path."""
+    return _absolute_planes(words[rows], tag[rows], k0_hi[rows], k0_lo[rows])
+
+
+@functools.partial(jax.jit, static_argnames=("take16", "take32"))
+def _dense_fit(a_hi, a_lo, src, cnt, *, take16: int, take32: int):
+    """Dense rank-ordered key planes (one flat gather over the decoded
+    planes) + their fit flags, one jitted dispatch.  ``src`` is the
+    host-planned flat slot index per global rank (padded past ``cnt``)."""
+    from repro.kernels.for_encode import for_fit_flags
+
+    dense_hi = a_hi.reshape(-1)[src][None, :]
+    dense_lo = a_lo.reshape(-1)[src][None, :]
+    f16, f32 = for_fit_flags(dense_hi, dense_lo, cnt,
+                             take16=take16, take32=take32)
+    return dense_hi, dense_lo, f16, f32
+
+
+def _greedy_chunks(fit16: np.ndarray, fit32: np.ndarray, cnt: int,
+                   n: int, alpha: float) -> list[tuple[int, int, int]]:
+    """Greedy narrowest-fit chunk plan over fit flags — reproduces the
+    boundary and tag decisions of :func:`_for_chunks` exactly, without
+    ever looking at a key value (the flags are the windowed max-delta
+    reduction computed on device by ``kernels.for_encode.for_fit_flags``).
+    Returns ``[(start_rank, count, tag), ...]``."""
+    takes = _take_sizes(n, alpha)
+    out = []
+    i = 0
+    while i < cnt:
+        if fit16[i]:
+            tag = TAG_U16
+        elif fit32[i]:
+            tag = TAG_U32
+        else:
+            tag = TAG_U64
+        c = min(takes[tag], cnt - i)
+        out.append((i, c, tag))
+        i += c
+    return out
+
+
+@functools.lru_cache(maxsize=4096)
+def _slot_ranks_cached(c: int, cap: int, alpha: float) -> np.ndarray:
+    """slot -> local rank for ``c`` keys spread over ``cap`` slots (the
+    inverse of ``_pack_leaf``'s scatter + backward fill).  Memoised:
+    plans repeat the same few (count, cap) pairs hundreds of times and
+    ``spread_positions`` has a Python loop."""
+    pos = spread_positions(c, cap, alpha)
+    return np.searchsorted(pos, np.arange(cap), side="left")
+
+
+def _encode_slot_tables(chunks: list, n: int, alpha: float):
+    """Per-output-leaf slot->merged-rank gather tables for the device FOR
+    re-encode (``kernels/for_encode``): slot ``i`` of a chunk packed at
+    cap ``c`` takes the chunk key whose ``spread_positions`` slot is the
+    first >= ``i`` — the exact inverse of ``_pack_leaf``'s scatter +
+    backward gap fill, so the kernel's words are bit-identical to the
+    host encoder's.  u16 rows use the plane-major column order the kernel
+    expects (even logical slots in ``[0, 2N)``, odd in ``[2N, 4N)``).
+    Returns ``(rank (R, 4N) int32, in_row (R, 4N) bool, tag (R,) int32)``.
+    """
+    caps = _leaf_caps(n)
+    r_out = len(chunks)
+    w = 4 * n
+    rank = np.zeros((r_out, w), np.int32)
+    in_row = np.zeros((r_out, w), bool)
+    tags = np.zeros(r_out, np.int32)
+    for r, (start, c, tag) in enumerate(chunks):
+        cap = caps[tag]
+        slot_rank = _slot_ranks_cached(c, cap, alpha)
+        ir = slot_rank < c
+        sr = np.clip(slot_rank, 0, max(c - 1, 0)) + start
+        if tag == TAG_U16:
+            rank[r, : 2 * n] = sr[0::2]
+            rank[r, 2 * n :] = sr[1::2]
+            in_row[r, : 2 * n] = ir[0::2]
+            in_row[r, 2 * n :] = ir[1::2]
+        else:
+            rank[r, :cap] = sr
+            in_row[r, :cap] = ir
+        tags[r] = tag
+    return rank, in_row, tags
+
+
+@jax.jit
+def _gather_encode(dense_hi, dense_lo, seg, rank, in_row, tags):
+    """Slot gather + FOR pack, fused into one jitted dispatch (the
+    gather feeds ``ops.for_encode_rows``, which lowers to the Pallas
+    kernel on TPU and the jnp reference elsewhere)."""
+    from repro.kernels import ops
+
+    key_hi = dense_hi[seg[:, None], rank]
+    key_lo = dense_lo[seg[:, None], rank]
+    return ops.for_encode_rows(key_hi, key_lo, in_row, tags)
+
+
+def _device_reencode(dense_hi, dense_lo, seg_of_chunk, rank, in_row, tags):
+    """Gather + pack: one device re-encode of every planned chunk.
+
+    ``dense_hi/lo`` are (S, W) rank-ordered merged key planes on device,
+    ``seg_of_chunk`` (R,) maps each output leaf to its segment row, and
+    ``rank``/``in_row``/``tags`` come from :func:`_encode_slot_tables`.
+    Output rows pad to a power of two so the jit compiles O(log R)
+    programs.  Returns device ``(words (Rp, 2N), k0_hi (Rp,), k0_lo
+    (Rp,), tag (Rp,))`` — still padded, for the padded scatter — plus
+    the host u64 ``k0`` values of the real rows (the chunk separators
+    the parent patch needs: O(R) scalars, the only values that cross).
+    """
+    from .maintenance import _pow2
+
+    r_out = len(seg_of_chunk)
+    rp = _pow2(max(r_out, 1))
+    if rp != r_out:
+        pad = rp - r_out
+        seg_of_chunk = np.concatenate([seg_of_chunk,
+                                       np.zeros(pad, seg_of_chunk.dtype)])
+        rank = np.concatenate([rank, np.zeros((pad,) + rank.shape[1:],
+                                              rank.dtype)])
+        in_row = np.concatenate([in_row, np.zeros((pad,) + in_row.shape[1:],
+                                                  bool)])
+        tags = np.concatenate([tags, np.full(pad, TAG_U64, tags.dtype)])
+    words, k0_hi, k0_lo, _ = _gather_encode(
+        dense_hi, dense_lo, jnp.asarray(seg_of_chunk.astype(np.int32)),
+        jnp.asarray(rank), jnp.asarray(in_row), jnp.asarray(tags))
+    k0 = join_u64(np.asarray(k0_hi)[:r_out], np.asarray(k0_lo)[:r_out])
+    return words, k0_hi, k0_lo, jnp.asarray(tags), k0
+
+
+@jax.jit
+def _scatter_reencoded(leaf_words, leaf_tag, k0_hi, k0_lo, ids,
+                       words, tags, new_k0h, new_k0l):
+    """Scatter re-encoded blocks into the leaf arrays — one dispatch;
+    ``ids`` pads past the real rows with the drop sentinel."""
+    return (leaf_words.at[ids].set(words, mode="drop"),
+            leaf_tag.at[ids].set(tags, mode="drop"),
+            k0_hi.at[ids].set(new_k0h, mode="drop"),
+            k0_lo.at[ids].set(new_k0l, mode="drop"))
+
+
+@functools.partial(jax.jit, static_argnames=("lcap", "n"))
+def _assemble_leaves(words, k0_hi, k0_lo, tags, r_out, *, lcap: int, n: int):
+    """Fresh leaf arrays for a compacted tree in one jitted dispatch:
+    rows past ``r_out`` are empty u64 blocks (all-sentinel words), the
+    chain is the identity walk.  ``words``/co may be padded past
+    ``r_out``; the pad rows land past ``lcap`` (drop) by construction of
+    the caller's id vector."""
+    rp = words.shape[0]
+    ids = jnp.arange(rp)
+    ids = jnp.where(ids < r_out, ids, lcap + 1)
+    leaf_words = jnp.full((lcap, 2 * n), MAXKEY_LO, jnp.uint32
+                          ).at[ids].set(words, mode="drop")
+    leaf_tag = jnp.full((lcap,), TAG_U64, jnp.int32
+                        ).at[ids].set(tags, mode="drop")
+    out_k0h = jnp.zeros((lcap,), jnp.uint32).at[ids].set(k0_hi, mode="drop")
+    out_k0l = jnp.zeros((lcap,), jnp.uint32).at[ids].set(k0_lo, mode="drop")
+    iota = jnp.arange(lcap, dtype=jnp.int32)
+    next_leaf = jnp.where(iota < r_out - 1, iota + 1, -1)
+    return leaf_words, leaf_tag, out_k0h, out_k0l, next_leaf
+
+
+
+
+# ---------------------------------------------------------------------------
 # Host maintenance: targeted repack of affected leaves (fresh narrowest
 # tags), compaction, and the full-rebuild fallback
 # ---------------------------------------------------------------------------
@@ -792,16 +1016,117 @@ def _cbs_host_repack(tree: CBSTreeArrays, new_keys: np.ndarray, *,
 
 
 def cbs_compact(tree: CBSTreeArrays, *, min_occupancy: float = 0.5,
-                alpha: float = DEFAULT_ALPHA, force: bool = False):
-    """Merge under-occupied / emptied compressed leaves and reclaim slack.
+                alpha: float = DEFAULT_ALPHA, force: bool = False,
+                slack: float = 1.5):
+    """Merge under-occupied / emptied compressed leaves and reclaim slack
+    — on device, with fresh narrowest tags.
 
     CBS deletes overwrite dup-runs in place and never retype or merge, so
     delete-heavy trees accumulate empty blocks in the chain.  When the
     mean logical occupancy of live leaves falls below ``min_occupancy``
     or any leaf is empty (or ``force``), every surviving key re-packs at
-    bulk-load occupancy with fresh narrowest tags.  Returns
-    ``(tree', counters)`` — same counters schema as ``bstree.compact``.
+    bulk-load occupancy with fresh narrowest tags — the result is
+    bit-identical to ``cbs_bulk_load`` of the surviving keys, but the
+    key planes never leave the device: the blocks decode on device
+    (:func:`_absolute_planes`), the greedy chunk plan runs on host over
+    the derived used bitmap and the device-computed fit flags (booleans,
+    not keys), and ``kernels/for_encode`` re-bases and packs every new
+    leaf in one scatter.  Only metadata crosses: the bitmap (1 bit per
+    logical slot), per-leaf counts/tags, the next-pointer column, the
+    fit flags, and the ``O(leaves_after)`` chunk ``k0`` separators.
+    Returns ``(tree', counters)`` — same schema as ``bstree.compact``
+    plus ``for_reencode_leaves`` (``host_reencode_leaves`` stays 0; the
+    legacy host decode survives only in :func:`cbs_host_compact`).
     """
+    from .maintenance import _grown_cap, _pow2, compaction_plan
+
+    n = tree.node_width
+    nl = int(tree.num_leaves)
+    caps = _leaf_caps(n)
+    # gate over the FULL capacity (slack rows are empty blocks, used
+    # count 0) in one counts-only dispatch — folding the row slice into
+    # the jit avoids eager slices (milliseconds each on small hosts,
+    # round-trips on accelerators), and the decoded planes only
+    # materialise below once the gate decides a re-pack happens
+    used, cnt = _used_counts(
+        tree.leaf_words, tree.leaf_tag, tree.leaf_k0_hi, tree.leaf_k0_lo)
+    per_leaf = np.asarray(cnt)[:nl].astype(np.int64)
+    tags = np.asarray(tree.leaf_tag)[:nl]
+    cap_of = np.array([caps[TAG_U16], caps[TAG_U32], caps[TAG_U64]],
+                      dtype=np.float64)
+    occ = per_leaf / cap_of[tags] if nl else np.zeros(0)
+    counters, needed = compaction_plan(
+        per_leaf, occ, min_occupancy=min_occupancy, force=force)
+    if not needed:
+        return tree, counters
+    a_hi, a_lo, _, _ = _absolute_planes(
+        tree.leaf_words, tree.leaf_tag, tree.leaf_k0_hi, tree.leaf_k0_lo)
+
+    # flat source slot of every used logical slot, in chain (= key) order
+    w16 = 4 * n
+    nxt = np.asarray(tree.next_leaf)
+    from .maintenance import _chain_order
+
+    chain = _chain_order(tree, nxt, nl)
+    uc = np.zeros((len(chain), w16), dtype=bool)
+    valid = chain < nl
+    uc[valid] = np.asarray(used)[chain[valid]]
+    flat = np.flatnonzero(uc.reshape(-1))
+    src_flat = chain[flat // w16] * w16 + flat % w16
+    total = len(src_flat)
+    if total == 0:
+        new = cbs_bulk_load(np.zeros(0, np.uint64), n=n, alpha=alpha,
+                            slack=slack)
+    else:
+        wp = _pow2(total)
+        src = np.zeros(wp, np.int64)
+        src[:total] = src_flat
+        takes = _take_sizes(n, alpha)
+        dense_hi, dense_lo, f16, f32 = _dense_fit(
+            a_hi, a_lo, jnp.asarray(src), jnp.asarray(np.array([total])),
+            take16=takes[TAG_U16], take32=takes[TAG_U32])
+        chunks = _greedy_chunks(np.asarray(f16)[0], np.asarray(f32)[0],
+                                total, n, alpha)
+        rank, in_row, ctags = _encode_slot_tables(chunks, n, alpha)
+        r_out = len(chunks)
+        words, k0_hi, k0_lo, tags_dev, k0 = _device_reencode(
+            dense_hi, dense_lo, np.zeros(r_out, np.int64), rank, in_row,
+            ctags)
+
+        lcap = _grown_cap(r_out, slack)
+        lw, lt, lk0h, lk0l, new_next = _assemble_leaves(
+            words, k0_hi, k0_lo, tags_dev, r_out, lcap=lcap, n=n)
+        inner = _build_inner_over(k0[1:], r_out, n, alpha, slack)
+        new = CBSTreeArrays(
+            leaf_words=lw,
+            leaf_k0_hi=lk0h,
+            leaf_k0_lo=lk0l,
+            leaf_tag=lt,
+            next_leaf=new_next,
+            inner_hi=jnp.asarray(inner["hi"]),
+            inner_lo=jnp.asarray(inner["lo"]),
+            inner_child=jnp.asarray(inner["child"]),
+            root=jnp.asarray(inner["root"], jnp.int32),
+            num_leaves=jnp.asarray(r_out, jnp.int32),
+            num_inner=jnp.asarray(inner["num_inner"], jnp.int32),
+            height=inner["height"],
+            node_width=n,
+        )
+        counters["for_reencode_leaves"] = r_out
+    counters["leaves_after"] = int(new.num_leaves)
+    counters["compacted"] = True
+    counters["reclaimed_bytes"] = max(
+        0, tree.memory_bytes() - new.memory_bytes())
+    return new, counters
+
+
+def cbs_host_compact(tree: CBSTreeArrays, *, min_occupancy: float = 0.5,
+                     alpha: float = DEFAULT_ALPHA, force: bool = False):
+    """Legacy full-host compaction: decode every leaf on host, re-chunk,
+    ``cbs_bulk_load``.  No longer on the maintenance path — kept as a
+    recovery utility and the cross-check oracle for the device
+    :func:`cbs_compact` (which produces bit-identical trees).  Counts its
+    decode work in ``host_reencode_leaves``."""
     from .maintenance import compaction_plan
 
     n = tree.node_width
@@ -820,6 +1145,7 @@ def cbs_compact(tree: CBSTreeArrays, *, min_occupancy: float = 0.5,
         occ[li] = len(ks) / caps[int(tags[li])]
     counters, needed = compaction_plan(
         per_leaf, occ, min_occupancy=min_occupancy, force=force)
+    counters["host_reencode_leaves"] = nl
     if not needed:
         return tree, counters
     # leaves partition the key space, so sorting the concatenation equals

@@ -466,7 +466,8 @@ def compact_sharded(st: ShardedBSTree, *, min_occupancy: float = 0.5,
         idx, c = idx.compact(min_occupancy=min_occupancy, force=force)
         parts[s] = idx.tree
         for k in ("keys", "leaves_before", "leaves_after", "empty_leaves",
-                  "reclaimed_bytes"):
+                  "reclaimed_bytes", "for_reencode_leaves",
+                  "host_reencode_leaves"):
             total[k] = total.get(k, 0) + c[k]
         total["compacted"] += int(c["compacted"])
     return dataclasses.replace(st, trees=_stack_trees(parts, slack=st.slack)), total

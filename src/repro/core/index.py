@@ -68,8 +68,12 @@ __all__ = [
 #: The unified insert-stats schema every backend must emit (satellite of
 #: the facade contract; asserted by tests/test_index_api.py).
 #: ``maintenance`` is the structural-counters sub-dict
-#: (:func:`repro.core.maintenance.new_counters`): splits, allocations and
-#: root growth performed by the host maintenance pass for this batch.
+#: (:func:`repro.core.maintenance.new_counters`): splits, allocations,
+#: root growth and the device/host transfer audit for this batch —
+#: ``for_reencode_leaves`` / ``inner_device_merges`` count device-side
+#: structural work, ``host_reencode_leaves`` / ``inner_rows_gathered`` /
+#: ``leaf_rows_gathered`` the (exceptional) host touches; on the normal
+#: insert/delete/compact path ``host_reencode_leaves`` is always 0.
 INSERT_STATS_KEYS = frozenset(
     {"requested", "inserted", "present", "deferred", "rounds", "maintenance"}
 )
@@ -219,7 +223,8 @@ class _CBSBackend:
 
     def compact(self, tree, spec, *, min_occupancy, force):
         return _cbs.cbs_compact(tree, min_occupancy=min_occupancy,
-                                alpha=spec.alpha, force=force)
+                                alpha=spec.alpha, force=force,
+                                slack=spec.slack)
 
     def start_leaf(self, tree, key):
         hi, lo = split_u64(np.array([key], np.uint64))

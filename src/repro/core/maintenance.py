@@ -107,6 +107,9 @@ def new_counters() -> dict:
         "slack_regrows": 0,        # on-device capacity growths (slack out)
         "inner_rows_gathered": 0,  # touched inner rows copied to host
         "leaf_rows_gathered": 0,   # touched leaf blocks copied to host
+        "inner_device_merges": 0,  # parent rows merged by the jitted pass
+        "for_reencode_leaves": 0,  # leaf blocks FOR re-encoded on device
+        "host_reencode_leaves": 0,  # leaf blocks re-encoded via host decode
     }
 
 
@@ -135,6 +138,8 @@ def compaction_plan(per_leaf: np.ndarray, occupancy: np.ndarray, *,
         "mean_occupancy": round(mean_occ, 4),
         "compacted": False,
         "reclaimed_bytes": 0,
+        "for_reencode_leaves": 0,
+        "host_reencode_leaves": 0,
     }
     return counters, force or empty > 0 or mean_occ < min_occupancy
 
@@ -294,14 +299,54 @@ class _DictInner:
         return _alloc_inner(self._h, self._c)
 
 
+@jax.jit
+def _inner_merge_level(inner_hi, inner_lo, inner_child, gather_ids,
+                       scatter_ids, pair_hi, pair_lo, pair_child):
+    """Jitted level-wise inner merge: fold pending ``(separator,
+    right-child)`` pairs into their (non-overflowing) parent rows in ONE
+    device dispatch — gather the parent rows, extract the used entries
+    (dup-aware, works for gapped and packed layouts), lexicographically
+    sort old and new ``(sep, right-child)`` pairs together (``lax.sort``
+    on the (hi, lo) planes carrying the child ids), and scatter the
+    packed rows back.  MAXKEY pads sort right and reproduce the packed
+    prefix + MAXKEY-pad layout of ``_write_inner`` exactly; the rows
+    never visit the host (``scatter_ids`` pads past the row count use the
+    drop sentinel).
+    """
+    n = inner_hi.shape[1]
+    rows_hi = inner_hi[gather_ids]
+    rows_lo = inner_lo[gather_ids]
+    rows_ch = inner_child[gather_ids]
+    used = used_mask(rows_hi, rows_lo)[:, : n - 1]
+    sep_hi = jnp.where(used, rows_hi[:, : n - 1], MAXKEY_HI)
+    sep_lo = jnp.where(used, rows_lo[:, : n - 1], MAXKEY_LO)
+    rchild = jnp.where(used, rows_ch[:, 1:], 0)
+    all_hi = jnp.concatenate([sep_hi, pair_hi], axis=1)
+    all_lo = jnp.concatenate([sep_lo, pair_lo], axis=1)
+    all_ch = jnp.concatenate([rchild, pair_child], axis=1)
+    s_hi, s_lo, s_ch = jax.lax.sort((all_hi, all_lo, all_ch), num_keys=2)
+    pad = jnp.full((rows_hi.shape[0], 1), MAXKEY_HI, rows_hi.dtype)
+    out_hi = jnp.concatenate([s_hi[:, : n - 1], pad], axis=1)
+    out_lo = jnp.concatenate([s_lo[:, : n - 1], pad], axis=1)
+    out_ch = jnp.concatenate([rows_ch[:, :1], s_ch[:, : n - 1]], axis=1)
+    return (inner_hi.at[scatter_ids].set(out_hi, mode="drop"),
+            inner_lo.at[scatter_ids].set(out_lo, mode="drop"),
+            inner_child.at[scatter_ids].set(out_ch.astype(inner_child.dtype),
+                                            mode="drop"))
+
+
 class DeviceInner:
     """Touched-rows-only host view of the device inner arrays.
 
-    ``get`` lazily copies a single inner row device->host (batched for the
-    ``prefetch`` set — normally every node on a recorded descent path, one
-    gather); ``set`` marks rows dirty; :meth:`flush` grows capacity on
-    device if allocations outran slack and scatters only the dirty rows
-    back.  The untouched bulk of the inner region never moves.
+    The common case never touches the host at all: :meth:`merge_level`
+    folds a whole level's pending separators into their fitting parents
+    with one jitted sort-merge dispatch (:func:`_inner_merge_level`), and
+    :meth:`used_counts` is the device reduction that routes parents
+    between that path and the (rare) overflow-split path.  Only overflow
+    parents fall back to ``get``, which copies a single inner row
+    device->host (counted); ``set`` marks rows dirty; :meth:`flush` grows
+    capacity on device if allocations outran slack and scatters only the
+    dirty rows back.  The untouched bulk of the inner region never moves.
     """
 
     def __init__(self, inner_hi, inner_lo, inner_child, root, num_inner,
@@ -319,17 +364,25 @@ class DeviceInner:
         self._rows: dict[int, list] = {}
         self._dirty: set[int] = set()
         if prefetch is not None and len(prefetch):
-            ids = np.unique(np.asarray(prefetch, dtype=np.int64))
-            ids = ids[(ids >= 0) & (ids < self.num_inner)]
-            if len(ids):
-                jidx = jnp.asarray(ids)
-                khi = np.asarray(self._hi[jidx])
-                klo = np.asarray(self._lo[jidx])
-                ch = np.asarray(self._child[jidx])
-                keys = join_u64(khi, klo)
-                for i, nid in enumerate(ids):
-                    self._rows[int(nid)] = [keys[i].copy(), ch[i].copy()]
-                counters["inner_rows_gathered"] += len(ids)
+            self.prefetch(prefetch)
+
+    def prefetch(self, nodes) -> None:
+        """Batch-gather the given rows to the host cache in ONE device
+        dispatch (counted) — used for the overflow-split parents of a
+        level so ``get`` never degenerates into per-row syncs."""
+        ids = np.unique(np.asarray(nodes, dtype=np.int64))
+        ids = ids[(ids >= 0) & (ids < self.num_inner)]
+        ids = ids[[int(i) not in self._rows for i in ids]] if len(ids) else ids
+        if not len(ids):
+            return
+        jidx = jnp.asarray(ids)
+        khi = np.asarray(self._hi[jidx])
+        klo = np.asarray(self._lo[jidx])
+        ch = np.asarray(self._child[jidx])
+        keys = join_u64(khi, klo)
+        for i, nid in enumerate(ids):
+            self._rows[int(nid)] = [keys[i].copy(), ch[i].copy()]
+        self.counters["inner_rows_gathered"] += len(ids)
 
     def get(self, node: int):
         node = int(node)
@@ -340,6 +393,39 @@ class DeviceInner:
             self._rows[node] = [join_u64(khi, klo), np.array(ch)]
             self.counters["inner_rows_gathered"] += 1
         return self._rows[node]
+
+    def used_counts(self, nodes) -> np.ndarray:
+        """Used-separator count of each node — a device reduction; only
+        the (len(nodes),) ints cross to the host."""
+        jidx = jnp.asarray(np.asarray(nodes, dtype=np.int64))
+        used = used_mask(self._hi[jidx], self._lo[jidx])[:, : self.n - 1]
+        return np.asarray(jnp.sum(used.astype(jnp.int32), axis=1)).astype(
+            np.int64)
+
+    def merge_level(self, parents: list, pairs_list: list) -> None:
+        """Fold one level's pending pairs into fitting parents — one
+        jitted dispatch, rows never reach the host.  Callers guarantee
+        every parent fits (``used + len(pairs) <= n - 1``) and is not
+        host-cached (dirty rows would be stale on device)."""
+        p = len(parents)
+        pp = _pow2(p)
+        kmax = _pow2(max(len(prs) for prs in pairs_list))
+        seps = np.full((pp, kmax), MAXKEY, dtype=np.uint64)
+        chd = np.zeros((pp, kmax), dtype=np.int32)
+        for i, prs in enumerate(pairs_list):
+            for j, (s, c) in enumerate(sorted(prs)):
+                seps[i, j] = s
+                chd[i, j] = c
+        gidx = np.zeros(pp, np.int64)
+        gidx[:p] = parents
+        sidx = np.full(pp, self._hi.shape[0] + 1, np.int64)  # drop pads
+        sidx[:p] = parents
+        phi, plo = split_u64(seps)
+        self._hi, self._lo, self._child = _inner_merge_level(
+            self._hi, self._lo, self._child, jnp.asarray(gidx),
+            jnp.asarray(sidx), jnp.asarray(phi), jnp.asarray(plo),
+            jnp.asarray(chd))
+        self.counters["inner_device_merges"] += p
 
     def set(self, node: int, keys_row: np.ndarray, child_row: np.ndarray):
         self._rows[int(node)] = [keys_row, child_row]
@@ -439,7 +525,14 @@ def patch_parents(store, pending: dict, anc: dict, counters: dict) -> None:
     the root itself (the root then grows — incrementally, never a
     rebuild).  Overflowing parents split k-way and push their own pairs
     one level up.  Mutates the store (including ``root``/``height`` on
-    growth)."""
+    growth).
+
+    On a :class:`DeviceInner` store the common case is fully jitted: a
+    device reduction (``used_counts``) routes each level's parents, every
+    parent whose merged entries still fit its row is folded by ONE
+    ``merge_level`` sort-merge dispatch (no row ever crosses to the
+    host), and only overflowing parents take the host k-way split over
+    their gathered rows (touched-rows-only, counted)."""
     if isinstance(store, dict):
         store = _DictInner(store, counters)
     n = store.n
@@ -448,7 +541,25 @@ def patch_parents(store, pending: dict, anc: dict, counters: dict) -> None:
             _grow_root(store, pending[None], counters)
             return
         nxt: dict = {}
-        for parent, pairs in pending.items():
+        items = list(pending.items())
+        if hasattr(store, "merge_level"):
+            cached = store._rows
+            cand = [(p, prs) for p, prs in items if p not in cached]
+            if cand:
+                used = store.used_counts([p for p, _ in cand])
+                fit = {p for (p, prs), u in zip(cand, used)
+                       if u + len(prs) <= n - 1}
+                if fit:
+                    store.merge_level(
+                        [p for p, _ in items if p in fit],
+                        [prs for p, prs in items if p in fit])
+                    items = [(p, prs) for p, prs in items if p not in fit]
+                # the rest overflow into the host split path: gather all
+                # their rows in ONE dispatch instead of per-row get()s
+                overflow = [p for p, _ in cand if p not in fit]
+                if overflow:
+                    store.prefetch(overflow)
+        for parent, pairs in items:
             seps, kids = _inner_entries(store, parent)
             mseps, mkids = _merge_pairs(seps, kids, pairs)
             if len(mseps) <= n - 1:
@@ -859,10 +970,13 @@ def _patch_device_parents(tree, pending, paths, counters, slack):
     import dataclasses
 
     anc = ancestors_from_paths(paths)
+    # no prefetch: the jitted level merge handles fitting parents without
+    # any row transfer, so rows are gathered lazily (and counted) only
+    # for the rare overflow splits
     store = DeviceInner(
         tree.inner_hi, tree.inner_lo, tree.inner_child, int(tree.root),
         int(tree.num_inner), tree.height, tree.node_width, counters,
-        prefetch=np.unique(paths) if paths.size else None, slack=slack)
+        slack=slack)
     patch_parents(store, pending, anc, counters)
     ihi, ilo, ich, root, num_inner, height = store.flush()
     return dataclasses.replace(
@@ -885,13 +999,21 @@ def _compact_take(leaf_hi, leaf_lo, leaf_val, src, in_row):
     return out_hi, out_lo, out_v.astype(leaf_val.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("height",))
+def _leftmost_leaf_jit(inner_child, root, *, height: int):
+    node = root
+    for _ in range(height):
+        node = inner_child[node, 0]
+    return node
+
+
 def _chain_order(tree, nxt: np.ndarray, num_leaves: int) -> np.ndarray:
-    """Leaf ids in chain (= key) order.  ``height`` scalar gathers locate
+    """Leaf ids in chain (= key) order, for ANY backend tree (inner
+    nodes share the uncompressed layout).  One jitted descent locates
     the leftmost leaf; the walk itself runs over the host copy of the
     tiny next-pointer column."""
-    node = int(tree.root)
-    for _ in range(tree.height):
-        node = int(tree.inner_child[node, 0])
+    node = int(_leftmost_leaf_jit(tree.inner_child, tree.root,
+                                  height=tree.height))
     chain = []
     while node != -1 and len(chain) <= num_leaves:
         chain.append(node)
@@ -1027,7 +1149,7 @@ def _cbs_key_stats(leaf_words, leaf_tag, k0_hi, k0_lo, k_hi, k_lo, leaf):
     member = _select_by_tag(tag, members) & in_frame
     r = _select_by_tag(tag, ranks)
     c = _select_by_tag(tag, counts)
-    return member, r, c, in_frame
+    return member, r, c, in_frame, ge_k0
 
 
 @functools.partial(jax.jit, static_argnames=("tag_const",))
@@ -1078,22 +1200,44 @@ def _cbs_apply_splits(leaf_words, leaf_tag, k0_hi, k0_lo, next_leaf,
             out_hi[:, 0], out_lo[:, 0])
 
 
+@jax.jit
+def _merge_reencode_gather(a_hi, a_lo, k_hi, k_lo, src, is_new):
+    """Materialise the merged (existing ∪ new) key planes of every
+    out-of-frame segment in rank order — ONE device gather over the
+    decoded touched-leaf planes and the batch key planes, driven by the
+    host-composed spec (``src`` indexes the flattened planes for existing
+    keys and the padded batch for new ones; both gathers are evaluated
+    and selected branchlessly)."""
+    ex_hi = a_hi.reshape(-1)[src]
+    ex_lo = a_lo.reshape(-1)[src]
+    bsrc = jnp.minimum(src, k_hi.shape[0] - 1)
+    return (jnp.where(is_new, k_hi[bsrc], ex_hi),
+            jnp.where(is_new, k_lo[bsrc], ex_lo))
+
+
 def cbs_device_maintenance(tree, keys: np.ndarray, counters: dict, *,
                            alpha: float = 0.75, slack: float = 1.5):
     """Absorb a deferred CBS batch without a full-tree host copy.
 
     Segments whose new keys all fit their leaf's existing frame split
     k-way **on device** at the existing tag width (chunks inherit the
-    source k0).  Out-of-frame segments take the narrowed fallback: only
-    their leaf blocks are gathered to the host (``leaf_rows_gathered``),
-    re-FOR-encoded at fresh narrowest tags (paper §5 construction rule via
-    ``_for_chunks``) and scattered back.  Parents patch level by level
-    through the shared touched-rows store.  Returns
+    source k0).  Out-of-frame segments take the fresh narrowest-tag
+    re-encode — also on device (``kernels/for_encode``): the affected
+    blocks decode to key planes on device, the host plans the greedy
+    chunk boundaries over the derived used bitmap and the
+    device-computed fit flags (booleans, never key values), and one
+    kernel dispatch re-bases k0, picks narrowest tags and packs the new
+    blocks into slack rows (``for_reencode_leaves``;
+    ``host_reencode_leaves`` stays 0 — the legacy decode loop survives
+    only in the recovery passes).  Parents patch level by level through
+    the shared touched-rows store.  Returns
     ``(tree', n_inserted, n_present)``."""
     import dataclasses
 
-    from .compress import (TAG_U16, TAG_U32, TAG_U64, _for_chunks,
-                           _leaf_caps, _leaf_keys_host)
+    from .compress import (TAG_U16, TAG_U32, TAG_U64, _absolute_planes_rows,
+                           _device_reencode, _encode_slot_tables,
+                           _greedy_chunks, _leaf_caps, _scatter_reencoded,
+                           _take_sizes)
 
     keys = np.unique(np.asarray(keys, dtype=np.uint64))
     if len(keys) == 0:
@@ -1107,7 +1251,7 @@ def cbs_device_maintenance(tree, keys: np.ndarray, counters: dict, *,
     k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
 
     paths, leaf = device_descend_paths(tree, k_hi, k_lo)
-    member, r, c, in_frame = _cbs_key_stats(
+    member, r, c, in_frame, ge_k0 = _cbs_key_stats(
         tree.leaf_words, tree.leaf_tag, tree.leaf_k0_hi, tree.leaf_k0_lo,
         k_hi, k_lo, jnp.asarray(leaf))
     paths, leaf = paths[:B], leaf[:B]
@@ -1115,6 +1259,9 @@ def cbs_device_maintenance(tree, keys: np.ndarray, counters: dict, *,
     r = np.asarray(r)[:B].astype(np.int64)
     c = np.asarray(c)[:B].astype(np.int64)
     in_frame = np.asarray(in_frame)[:B]
+    # out-of-frame-low keys (below the leftmost leaf's k0) merge at rank
+    # 0, not at the stats' clamped-sentinel rank (= used count)
+    r = np.where(np.asarray(ge_k0)[:B], r, 0)
     n_ins = int((~member).sum())
     n_ups = int(member.sum())
 
@@ -1148,23 +1295,61 @@ def cbs_device_maintenance(tree, keys: np.ndarray, counters: dict, *,
         _count_split_counters(segs, counters)
         dev_plans[tg] = segs
 
-    host_segs = []
+    # ---- out-of-frame segments: device re-encode at fresh narrowest
+    # tags.  Decode the touched blocks to key planes ON DEVICE; only the
+    # derived used bitmap (1 bit/slot) and fit flags (booleans) cross for
+    # the greedy chunk plan; the kernel packs the new blocks. ----------
+    reenc_segs = []
+    reenc = None
     if host_runs:
+        w16 = 4 * n
         hlids = sorted({int(leaf[a]) for a, _ in host_runs})
         jidx = jnp.asarray(np.array(hlids, np.int64))
-        h_words = np.asarray(tree.leaf_words[jidx])
-        h_tags = np.asarray(tree.leaf_tag[jidx]).astype(int)
-        h_k0 = join_u64(np.asarray(tree.leaf_k0_hi[jidx]),
-                        np.asarray(tree.leaf_k0_lo[jidx]))
-        counters["leaf_rows_gathered"] += len(hlids)
+        a_hi, a_lo, used_bm, l_cnt = _absolute_planes_rows(
+            tree.leaf_words, tree.leaf_tag,
+            tree.leaf_k0_hi, tree.leaf_k0_lo, jidx)
+        used_np = np.asarray(used_bm)
+        l_cnt = np.asarray(l_cnt).astype(np.int64)
         pos = {lid: i for i, lid in enumerate(hlids)}
+        # merged-rank gather spec per segment: existing keys by used
+        # slot, new keys by (padded-)batch index — composed from bitmap
+        # + device-computed ranks, no key values involved
+        specs = []
         for a, b in host_runs:
             lid = int(leaf[a])
             i = pos[lid]
-            ex = _leaf_keys_host(h_words[i], int(h_tags[i]), h_k0[i], n)
-            fresh = keys[a:b][~member[a:b]]
-            mk = np.unique(np.concatenate([ex, fresh]))
-            chunks = list(_for_chunks(mk, n, alpha))
+            newm = ~member[a:b]
+            j_excl = np.cumsum(newm) - newm
+            new_ranks = (r[a:b] + j_excl)[newm]
+            new_bidx = np.arange(a, b, dtype=np.int64)[newm]
+            m = int(l_cnt[i]) + len(new_bidx)
+            is_new_at = np.zeros(m, dtype=bool)
+            is_new_at[new_ranks] = True
+            src = np.zeros(m, dtype=np.int64)
+            src[~is_new_at] = i * w16 + np.flatnonzero(used_np[i])
+            src[is_new_at] = new_bidx
+            specs.append((a, lid, src, is_new_at))
+        s_n = len(specs)
+        wmax = _pow2(max(len(s[2]) for s in specs))
+        src_t = np.zeros((s_n, wmax), np.int64)
+        new_t = np.zeros((s_n, wmax), bool)
+        m_cnt = np.zeros(s_n, np.int64)
+        for i, (_, _, src, isn) in enumerate(specs):
+            src_t[i, : len(src)] = src
+            new_t[i, : len(src)] = isn
+            m_cnt[i] = len(src)
+        merged_hi, merged_lo = _merge_reencode_gather(
+            a_hi, a_lo, k_hi, k_lo, jnp.asarray(src_t), jnp.asarray(new_t))
+        from repro.kernels import ops
+
+        takes = _take_sizes(n, alpha)
+        f16, f32 = ops.for_fit_flags(
+            merged_hi, merged_lo, jnp.asarray(m_cnt),
+            take16=takes[TAG_U16], take32=takes[TAG_U32])
+        f16, f32 = np.asarray(f16), np.asarray(f32)
+        seg_of_chunk, all_chunks, out_ids = [], [], []
+        for i, (a, lid, _, _) in enumerate(specs):
+            chunks = _greedy_chunks(f16[i], f32[i], int(m_cnt[i]), n, alpha)
             m = len(chunks)
             outs = [lid] + list(range(alloc, alloc + m - 1))
             alloc += m - 1
@@ -1173,8 +1358,14 @@ def cbs_device_maintenance(tree, keys: np.ndarray, counters: dict, *,
                 counters["leaves_allocated"] += m - 1
             else:
                 counters["leaves_repacked"] += 1
-            host_segs.append({"a": a, "src": lid, "outs": outs,
-                              "chunks": chunks})
+            seg_of_chunk.extend([i] * m)
+            all_chunks.extend(chunks)
+            out_ids.extend(outs)
+            reenc_segs.append({"a": a, "src": lid, "outs": outs})
+        rank, in_row, ctags = _encode_slot_tables(all_chunks, n, alpha)
+        counters["for_reencode_leaves"] += len(all_chunks)
+        reenc = (merged_hi, merged_lo, np.array(seg_of_chunk, np.int64),
+                 rank, in_row, ctags, np.array(out_ids, np.int64))
 
     # ---- capacity --------------------------------------------------------
     if alloc > tree.leaf_capacity:
@@ -1219,33 +1410,29 @@ def cbs_device_maintenance(tree, keys: np.ndarray, counters: dict, *,
                 segs, tables, seps_u64, paths, tree.height).items():
             pending.setdefault(par, []).extend(pairs)
 
-    # ---- host re-encode scatter (touched blocks only) --------------------
-    if host_segs:
-        old_next = _gather_old_next(tree.next_leaf, host_segs)
-        ids, words_rows, tag_rows, k0_rows = [], [], [], []
-        for s in host_segs:
-            outs = s["outs"]
-            for g, (tg2, w, k0, _cnt) in enumerate(s["chunks"]):
-                ids.append(outs[g])
-                words_rows.append(w)
-                tag_rows.append(tg2)
-                k0_rows.append(k0)
-            parent = int(paths[s["a"], -1]) if tree.height else None
-            for g in range(1, len(outs)):
-                pending.setdefault(parent, []).append(
-                    (np.uint64(s["chunks"][g][2]), outs[g]))
-        jids = jnp.asarray(np.array(ids, np.int64))
-        k0h, k0l = split_u64(np.array(k0_rows, np.uint64))
+    # ---- device re-encode scatter (fresh narrowest tags) ----------------
+    if reenc is not None:
+        merged_hi, merged_lo, seg_of_chunk, rank, in_row, ctags, oids = reenc
+        old_next = _gather_old_next(tree.next_leaf, reenc_segs)
+        words, k0_hi_d, k0_lo_d, tags_dev, k0_u64 = _device_reencode(
+            merged_hi, merged_lo, seg_of_chunk, rank, in_row, ctags)
+        sids = np.full(words.shape[0], sentinel, np.int64)  # pads drop
+        sids[: len(oids)] = oids
+        lw, lt, lk0h, lk0l = _scatter_reencoded(
+            tree.leaf_words, tree.leaf_tag, tree.leaf_k0_hi,
+            tree.leaf_k0_lo, jnp.asarray(sids), words, tags_dev,
+            k0_hi_d, k0_lo_d)
         tree = dataclasses.replace(
-            tree,
-            leaf_words=tree.leaf_words.at[jids].set(
-                jnp.asarray(np.stack(words_rows))),
-            leaf_tag=tree.leaf_tag.at[jids].set(
-                jnp.asarray(np.array(tag_rows, np.int32))),
-            leaf_k0_hi=tree.leaf_k0_hi.at[jids].set(jnp.asarray(k0h)),
-            leaf_k0_lo=tree.leaf_k0_lo.at[jids].set(jnp.asarray(k0l)),
-        )
-        ci, cv = _chain_updates(host_segs, old_next)
+            tree, leaf_words=lw, leaf_tag=lt, leaf_k0_hi=lk0h,
+            leaf_k0_lo=lk0l)
+        row = 0
+        for s in reenc_segs:
+            parent = int(paths[s["a"], -1]) if tree.height else None
+            for g in range(1, len(s["outs"])):
+                pending.setdefault(parent, []).append(
+                    (np.uint64(k0_u64[row + g]), s["outs"][g]))
+            row += len(s["outs"])
+        ci, cv = _chain_updates(reenc_segs, old_next)
         if len(ci):
             tree = dataclasses.replace(
                 tree, next_leaf=tree.next_leaf.at[
@@ -1418,6 +1605,7 @@ def cbs_batched_repack(h: dict, keys: np.ndarray, alpha: float,
         mk = np.concatenate([ex, fresh])
         mk.sort()
         chunks = list(_for_chunks(mk, n, alpha))
+        counters["host_reencode_leaves"] += len(chunks)
         ids = [lid] + [_alloc_cbs_leaf(h, counters)
                        for _ in range(len(chunks) - 1)]
         old_next = int(h["next_leaf"][lid])

@@ -10,5 +10,6 @@ off-TPU).
   leaf_insert   branchless gapped insert / delete (paper Algs. 5/6)
   leaf_split    k-way leaf split scatter (on-device maintenance slow path)
   for_succ      FOR-compressed block search (paper §5)
+  for_encode    FOR re-encode: narrowest tags, k0 re-base, width packing
 """
 from . import ops  # noqa: F401

@@ -1,0 +1,182 @@
+"""Pallas TPU kernel: device-resident FOR re-encode (CBS maintenance).
+
+The last host path of the CBS update pipeline was the fresh
+narrowest-tag re-encode: out-of-frame deferred segments and ``compact``
+used to decode every affected leaf block on the host, re-chunk, and
+re-pack with numpy.  The re-encode is a pure data-parallel scan +
+scatter — no data-dependent control flow once the chunk boundaries are
+planned — so it moves into a kernel:
+
+* :func:`for_fit_flags` — the *narrowest-tag reduction*: for every rank
+  ``j`` of a dense sorted key sequence, whether the window of the next
+  ``take16``/``take32`` keys spans less than the u16/u32 delta range.
+  Because the keys are sorted the windowed max-delta is one shifted
+  gather + borrow-subtract per width — branchless, one pass.  The host
+  greedy chunker consumes only these booleans (per-rank metadata, never
+  key values) and reproduces ``compress._for_chunks``'s boundary/tag
+  decisions exactly.
+
+* :func:`for_encode_pack` (kernel) / :func:`for_encode_jnp` (reference)
+  — given per-output-leaf gathered key planes, re-base ``k0`` to the
+  rank-0 key, derive the data tag with a branchless max-delta reduction
+  (a safety cross-check of the plan: ``data_tag <= tag`` whenever the
+  plan is honest), and pack the delta words at the planned width in one
+  scatter.  Output words are bit-identical to ``compress._pack_leaf``.
+
+Column convention (keeps the kernel free of strided lane shuffles): the
+gather tables lay u16 rows out *plane-major* — columns ``[0, 2N)`` hold
+the even logical slots (the low u16 halves) and columns ``[2N, 4N)`` the
+odd slots (high halves) — so the u16 pack is two static half-slices,
+``lo | hi << 16``.  u32 rows use columns ``[0, 2N)`` and u64 rows
+columns ``[0, N)`` in natural slot order.  Logical slot 0 (the chunk's
+first key, hence ``k0``) is column 0 under every layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_MAX32 = np.uint32(0xFFFFFFFF)
+_MAXD16 = np.uint32(0xFFFF)
+
+
+def _borrow_sub(a_hi, a_lo, b_hi, b_lo):
+    """(a - b) on u64 values carried as u32 (hi, lo) planes."""
+    d_lo = a_lo - b_lo
+    borrow = (a_lo < b_lo).astype(a_hi.dtype)
+    d_hi = a_hi - b_hi - borrow
+    return d_hi, d_lo
+
+
+def _encode_body(key_hi, key_lo, in_row, tag, n: int):
+    """Shared compute core of the kernel body and the jnp reference.
+
+    ``key_hi/key_lo`` are (B, 4N) absolute key planes in the plane-major
+    layout described in the module docstring, ``in_row`` marks slots that
+    hold a gathered key (others become the tag's MAXDELTA sentinel) and
+    ``tag`` (B, 1) is the plan's greedy narrowest width.  Returns
+    ``(words (B, 2N), k0_hi (B, 1), k0_lo (B, 1), data_tag (B, 1))``.
+    """
+    any_row = jnp.any(in_row, axis=1, keepdims=True)
+    k0_hi = jnp.where(any_row, key_hi[:, :1], 0)
+    k0_lo = jnp.where(any_row, key_lo[:, :1], 0)
+    d_hi, d_lo = _borrow_sub(key_hi, key_lo, k0_hi, k0_lo)
+    d_hi = jnp.where(in_row, d_hi, _MAX32)
+    d_lo = jnp.where(in_row, d_lo, _MAX32)
+    is_max = (d_hi == _MAX32) & (d_lo == _MAX32)
+
+    # branchless max-delta reduction -> narrowest tag the data allows
+    # (deltas are sorted, but an all-lanes reduction is cheaper than a
+    # last-used select and identical in outcome)
+    fits16 = jnp.all(~in_row | ((d_hi == 0) & (d_lo < _MAXD16)),
+                     axis=1, keepdims=True)
+    fits32 = jnp.all(~in_row | ((d_hi == 0) & (d_lo < _MAX32)),
+                     axis=1, keepdims=True)
+    data_tag = jnp.where(fits16, 0, jnp.where(fits32, 1, 2)).astype(jnp.int32)
+
+    # ---- u16: plane-major halves -> one shift+or, no lane shuffles ----
+    d16 = jnp.where(is_max, _MAXD16, d_lo & _MAXD16)
+    w16 = d16[:, : 2 * n] | (d16[:, 2 * n :] << 16)
+
+    # ---- u32: natural order prefix ----
+    w32 = jnp.where(is_max, _MAX32, d_lo)[:, : 2 * n]
+
+    # ---- u64: (hi | lo) plane halves ----
+    w64 = jnp.concatenate([d_hi[:, :n], d_lo[:, :n]], axis=1)
+
+    words = jnp.where(tag == 0, w16, jnp.where(tag == 1, w32, w64))
+    return words.astype(jnp.uint32), k0_hi, k0_lo, data_tag
+
+
+def _for_encode_kernel(khi_ref, klo_ref, inrow_ref, tag_ref,
+                       words_ref, k0hi_ref, k0lo_ref, dtag_ref, *, n: int):
+    words, k0_hi, k0_lo, data_tag = _encode_body(
+        khi_ref[...], klo_ref[...], inrow_ref[...] != 0, tag_ref[...], n)
+    words_ref[...] = words
+    k0hi_ref[...] = k0_hi
+    k0lo_ref[...] = k0_lo
+    dtag_ref[...] = data_tag
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def for_encode_pack(
+    key_hi, key_lo,  # (R, 4N) uint32: gathered absolute key planes
+    in_row,          # (R, 4N) bool: slot holds a gathered key
+    tag,             # (R,) int32: planned narrowest tag per output leaf
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+):
+    """Re-encode ``R`` output leaves in one launch.  Returns
+    ``(words (R, 2N) u32, k0_hi (R,), k0_lo (R,), data_tag (R,))`` — the
+    packed physical blocks, re-based frames, and the data-derived
+    narrowest tags (``data_tag <= tag`` iff the plan was honest)."""
+    r, w = key_hi.shape
+    n = w // 4
+    tb = min(block_rows, max(r, 1))
+    pad = (-r) % tb
+    if pad:
+        padk = ((0, pad), (0, 0))
+        key_hi = jnp.pad(key_hi, padk, constant_values=_MAX32)
+        key_lo = jnp.pad(key_lo, padk, constant_values=_MAX32)
+        in_row = jnp.pad(in_row, padk)
+        tag = jnp.pad(tag, (0, pad))
+    rp = key_hi.shape[0]
+    in_spec = pl.BlockSpec((tb, w), lambda i: (i, 0))
+    col_spec = pl.BlockSpec((tb, 1), lambda i: (i, 0))
+    words, k0_hi, k0_lo, dtag = pl.pallas_call(
+        functools.partial(_for_encode_kernel, n=n),
+        grid=(rp // tb,),
+        in_specs=[in_spec, in_spec, in_spec, col_spec],
+        out_specs=[pl.BlockSpec((tb, 2 * n), lambda i: (i, 0)),
+                   col_spec, col_spec, col_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, 2 * n), jnp.uint32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(key_hi, key_lo, in_row.astype(jnp.int32),
+      tag.astype(jnp.int32)[:, None])
+    return words[:r], k0_hi[:r, 0], k0_lo[:r, 0], dtag[:r, 0]
+
+
+@jax.jit
+def for_encode_jnp(key_hi, key_lo, in_row, tag):
+    """jnp reference path — same contract as :func:`for_encode_pack`,
+    used off-TPU (and as the kernel's parity oracle in tests)."""
+    n = key_hi.shape[1] // 4
+    words, k0_hi, k0_lo, dtag = _encode_body(
+        key_hi, key_lo, in_row, tag.astype(jnp.int32)[:, None], n)
+    return words, k0_hi[:, 0], k0_lo[:, 0], dtag[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("take16", "take32"))
+def for_fit_flags(key_hi, key_lo, cnt, *, take16: int, take32: int):
+    """Windowed narrowest-tag reduction over dense sorted key planes.
+
+    ``key_hi/key_lo`` are (S, W) rank-ordered absolute keys, ``cnt``
+    (S,) the valid prefix lengths (flags at ranks past ``cnt`` are
+    meaningless and must not be consumed).  ``fit16[s, j]`` is True iff the spread of keys
+    ``[j, min(j + take16, cnt))`` fits a u16 frame (strict, the MAXDELTA
+    sentinel stays reserved) — exactly the acceptance test of
+    ``compress._for_chunks`` — and likewise ``fit32``.  Greedy chunking
+    over these flags is the whole *plan*; key values never leave device.
+    """
+    s, w = key_hi.shape
+    j = jnp.arange(w, dtype=jnp.int32)[None, :]
+    last = jnp.maximum(cnt.astype(jnp.int32)[:, None] - 1, 0)
+
+    def fit(take, maxd_lo):
+        end = jnp.minimum(j + (take - 1), last)
+        e_hi = jnp.take_along_axis(key_hi, end, axis=1)
+        e_lo = jnp.take_along_axis(key_lo, end, axis=1)
+        d_hi, d_lo = _borrow_sub(e_hi, e_lo, key_hi, key_lo)
+        return (d_hi == 0) & (d_lo < maxd_lo)
+
+    return fit(take16, _MAXD16), fit(take32, _MAX32)

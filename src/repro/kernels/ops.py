@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layout import BSTreeArrays, split_u64
-from . import for_succ, gather_succ, leaf_insert, leaf_split, succ_kernel
+from . import (for_encode, for_succ, gather_succ, leaf_insert, leaf_split,
+               succ_kernel)
 
 
 def _interp() -> bool:
@@ -78,6 +79,27 @@ def leaf_split_rows(hi, lo, vals, used_rank, in_row, is_new,
     return leaf_split.leaf_split_scatter(
         hi, lo, vals, used_rank, in_row, is_new, nk_hi, nk_lo, nk_v,
         ovr_mask, ovr_v, **kw)
+
+
+def for_encode_rows(key_hi, key_lo, in_row, tag, *, use_kernel=None, **kw):
+    """Device FOR re-encode: re-base k0, derive narrowest tags, pack the
+    delta words of every planned chunk in one scatter (tables built by
+    ``core.compress._encode_slot_tables``).  Dispatches to the Pallas
+    kernel on TPU and to the jitted jnp reference elsewhere (the kernel's
+    interpret-mode parity is covered by tests/test_for_encode.py)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        kw.setdefault("interpret", _interp())
+        return for_encode.for_encode_pack(key_hi, key_lo, in_row, tag, **kw)
+    return for_encode.for_encode_jnp(key_hi, key_lo, in_row, tag)
+
+
+def for_fit_flags(key_hi, key_lo, cnt, *, take16: int, take32: int):
+    """Windowed narrowest-tag fit flags over dense sorted key planes —
+    the device half of the greedy FOR chunk plan."""
+    return for_encode.for_fit_flags(key_hi, key_lo, cnt,
+                                    take16=take16, take32=take32)
 
 
 def for_block_search(words, tag, k0_hi, k0_lo, q_hi, q_lo, **kw):

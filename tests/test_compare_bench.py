@@ -1,0 +1,172 @@
+"""Unit battery for the bench regression gate (``benchmarks/compare_bench``):
+the rolling-median history mode, its fallback to the committed baseline,
+and the 0.0us-baseline clamp (satellite bugfix — a zero row used to turn
+the suite's median ratio infinite and gate every row)."""
+import json
+
+import pytest
+
+from benchmarks.compare_bench import main
+
+
+def _payload(rows: dict, **meta):
+    base = {"bench": "workloads", "build_keys": 50000, "ops": 5000,
+            "repeat": 3}
+    base.update(meta)
+    base["rows"] = [{"name": k, "us_per_call": v, "derived": ""}
+                    for k, v in rows.items()]
+    return base
+
+
+def _write(path, rows, **meta):
+    path.write_text(json.dumps(_payload(rows, **meta)))
+    return str(path)
+
+
+ROWS = {"wlA/bs/books": 900.0, "wlB/bs/books": 50_000.0,
+        "wlF_skew/cbs/books": 80_000.0, "wlG_compact/cbs/books": 120_000.0}
+
+
+def test_committed_baseline_pass_and_fail(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", ROWS)
+    ok = _write(tmp_path / "ok.json", {k: v * 1.2 for k, v in ROWS.items()})
+    assert main([base, ok]) == 0
+    # one row 2x slower than the rest of the suite -> regression
+    bad_rows = {k: v * 1.2 for k, v in ROWS.items()}
+    bad_rows["wlG_compact/cbs/books"] = ROWS["wlG_compact/cbs/books"] * 2.4
+    bad = _write(tmp_path / "bad.json", bad_rows)
+    assert main([base, bad]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_zero_baseline_row_clamped_not_divided(tmp_path, capsys):
+    """Satellite bugfix: a 0.0us baseline row must warn and stay
+    informational — not poison the median ratio (inf) and fail the
+    whole suite."""
+    rows = dict(ROWS)
+    rows["wlZ_degenerate/bs/books"] = 0.0
+    base = _write(tmp_path / "base.json", rows)
+    cand_rows = {k: v * 1.1 for k, v in ROWS.items()}
+    cand_rows["wlZ_degenerate/bs/books"] = 31_000.0  # would gate if divided
+    cand = _write(tmp_path / "cand.json", cand_rows)
+    assert main([base, cand]) == 0
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "clamped" in out and "CLAMP" in out
+
+
+def test_history_median_gates_at_tighter_threshold(tmp_path, capsys):
+    """With >=1 prior main run cached, the gate switches to the per-row
+    rolling median at 1.3x (no machine-speed normalisation): a uniform
+    1.4x slowdown — invisible to the normalised committed-baseline mode —
+    now fails."""
+    base = _write(tmp_path / "base.json", ROWS)
+    hist = tmp_path / "hist"
+    hist.mkdir()
+    for i, scale in enumerate((1.0, 0.95, 1.05)):
+        _write(hist / f"run-{i:03d}.json",
+               {k: v * scale for k, v in ROWS.items()})
+    uniform = _write(tmp_path / "uniform.json",
+                     {k: v * 1.4 for k, v in ROWS.items()})
+    assert main([base, uniform]) == 0  # normalised mode: invisible
+    assert main([base, uniform, "--history", str(hist)]) == 1
+    out = capsys.readouterr().out
+    assert "rolling median of 3 prior run(s)" in out
+    assert "4/4 rows at 1.3x" in out
+    within = _write(tmp_path / "within.json",
+                    {k: v * 1.2 for k, v in ROWS.items()})
+    assert main([base, within, "--history", str(hist)]) == 0
+
+
+def test_thin_history_keeps_wide_threshold(tmp_path, capsys):
+    """A 1-2 sample 'median' is a single runner's speed: the history
+    gate engages but the tightened 1.3x waits for --history-min-runs."""
+    base = _write(tmp_path / "base.json", ROWS)
+    hist = tmp_path / "hist"
+    hist.mkdir()
+    _write(hist / "run-000.json", ROWS)
+    uniform = _write(tmp_path / "uniform.json",
+                     {k: v * 1.4 for k, v in ROWS.items()})
+    # one prior run: gated vs its median, but at the wide 1.5x -> passes
+    assert main([base, uniform, "--history", str(hist)]) == 0
+    out = capsys.readouterr().out
+    assert "rolling median of 1 prior run(s)" in out
+    assert "0/4 rows at 1.3x" in out
+    # a real >1.5x row still fails even on thin history
+    bad = _write(tmp_path / "bad.json",
+                 {k: v * 1.6 for k, v in ROWS.items()})
+    assert main([base, bad, "--history", str(hist)]) == 1
+
+
+def test_new_row_with_thin_samples_keeps_wide_threshold(tmp_path, capsys):
+    """Per-ROW sample counts drive the tightened gate: a benchmark row
+    added one run ago (1 sample in a deep history) must not be gated at
+    1.3x against that single runner's speed."""
+    base = _write(tmp_path / "base.json", ROWS)
+    hist = tmp_path / "hist"
+    hist.mkdir()
+    for i in range(4):
+        rows = dict(ROWS)
+        if i == 3:
+            rows["wlNEW/bs/books"] = 50_000.0  # appears in newest run only
+        _write(hist / f"run-{i:03d}.json", rows)
+    cand_rows = dict(ROWS)
+    cand_rows["wlNEW/bs/books"] = 70_000.0  # 1.4x one sample: noise
+    cand = _write(tmp_path / "cand.json", cand_rows)
+    assert main([base, cand, "--history", str(hist)]) == 0
+    assert "4/5 rows at 1.3x" in capsys.readouterr().out
+    # ... while established rows still gate tight
+    cand_rows["wlG_compact/cbs/books"] = ROWS["wlG_compact/cbs/books"] * 1.4
+    cand2 = _write(tmp_path / "cand2.json", cand_rows)
+    assert main([base, cand2, "--history", str(hist)]) == 1
+
+
+def test_history_fallback_when_empty_or_mismatched(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", ROWS)
+    cand = _write(tmp_path / "cand.json", ROWS)
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert main([base, cand, "--history", str(empty)]) == 0
+    assert "falling back to the committed baseline" in capsys.readouterr().out
+    # history produced at another workload size is skipped, not compared
+    _write(empty / "run-000.json", {k: v / 100 for k, v in ROWS.items()},
+           build_keys=999)
+    assert main([base, cand, "--history", str(empty)]) == 0
+    out = capsys.readouterr().out
+    assert "workload mismatch" in out and "falling back" in out
+    # schema-drifted cached rows degrade to warn-and-skip, never a crash
+    (empty / "run-001.json").write_text(json.dumps(
+        {"build_keys": 50000, "ops": 5000, "repeat": 3,
+         "rows": [{"name": "wlA/bs/books", "us_per_call": "not-a-number"}]}))
+    assert main([base, cand, "--history", str(empty)]) == 0
+    out = capsys.readouterr().out
+    assert "skipping unreadable history file" in out and "falling back" in out
+
+
+def test_history_window_keeps_newest_n(tmp_path, capsys):
+    """Only the newest --history-n runs shape the median (the rolling
+    window): old slow runs age out."""
+    base = _write(tmp_path / "base.json", ROWS)
+    hist = tmp_path / "hist"
+    hist.mkdir()
+    _write(hist / "run-000.json", {k: v * 100 for k, v in ROWS.items()})
+    for i in (1, 2, 3):
+        _write(hist / f"run-{i:03d}.json", ROWS)
+    cand = _write(tmp_path / "cand.json",
+                  {k: v * 1.2 for k, v in ROWS.items()})
+    # window of 3 excludes the ancient 100x run -> 1.2x passes at 1.3x
+    assert main([base, cand, "--history", str(hist), "--history-n", "3"]) == 0
+    assert "3 prior run(s)" in capsys.readouterr().out
+
+
+def test_new_and_missing_rows_never_gate(tmp_path):
+    base = _write(tmp_path / "base.json", ROWS)
+    rows = {k: v for k, v in ROWS.items() if not k.startswith("wlA")}
+    rows["wlNEW/bs/books"] = 999_999.0
+    cand = _write(tmp_path / "cand.json", rows)
+    assert main([base, cand]) == 0
+
+
+def test_workload_mismatch_is_fatal(tmp_path):
+    base = _write(tmp_path / "base.json", ROWS, build_keys=1_000_000)
+    cand = _write(tmp_path / "cand.json", ROWS)
+    assert main([base, cand]) == 1

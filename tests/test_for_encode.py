@@ -1,0 +1,158 @@
+"""Parity battery for the device FOR re-encode (``kernels/for_encode``).
+
+Three-way parity — Pallas kernel (interpret) vs jnp reference vs the host
+oracle (``compress._pack_leaf`` on ``_for_chunks`` boundaries) — across
+all three tag widths, the degenerate all-equal-keys leaf (tag 0, spread
+0) and a leaf whose re-based deltas force the widest tag.  The greedy
+plan (fit flags + ``_greedy_chunks``) is separately proven equal to
+``_for_chunks``'s boundary/tag decisions on random key soups.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compress as C
+from repro.core.layout import MAXKEY, split_u64, spread_positions
+from repro.kernels import for_encode as FE
+from repro.kernels import ops
+from conftest import rand_keys
+
+N = 16
+
+
+def _gather_row(keys_abs: np.ndarray, tag: int, n: int, alpha: float = 0.75):
+    """Host stand-in for the maintenance gather: one chunk's key planes in
+    the kernel's plane-major slot layout (built with the same
+    ``_encode_slot_tables`` the production path uses)."""
+    rank, in_row, tags = C._encode_slot_tables([(0, len(keys_abs), tag)],
+                                               n, alpha)
+    krow = keys_abs[np.clip(rank[0], 0, len(keys_abs) - 1)]
+    krow[~in_row[0]] = MAXKEY
+    return krow, in_row[0], tags[0]
+
+
+def _encode_cases(rng):
+    """(keys, tag) chunks covering every width + the degenerate shapes."""
+    k16 = np.uint64(1 << 30) + np.sort(
+        rng.choice(5000, 40, replace=False)).astype(np.uint64)
+    k32 = np.uint64(1 << 40) + np.sort(
+        rng.choice(2**30, 20, replace=False)).astype(np.uint64) * np.uint64(3)
+    k64 = np.sort(rng.choice(2**62, 10, replace=False)).astype(np.uint64)
+    wide = np.array([5, 2**33, 2**40, 2**55], np.uint64)  # forces tag 2
+    return [
+        (k16, C.TAG_U16),
+        (k32, C.TAG_U32),
+        (k64, C.TAG_U64),
+        (np.array([12345], np.uint64), C.TAG_U16),  # spread 0 -> tag 0
+        (np.full(7, 98765, np.uint64), C.TAG_U16),  # all-equal keys
+        (wide, C.TAG_U64),
+        (np.arange(64, dtype=np.uint64) + np.uint64(2**50), C.TAG_U16),
+    ]
+
+
+def _build_batch(cases, n):
+    r = len(cases)
+    kh = np.zeros((r, 4 * n), np.uint32)
+    kl = np.zeros((r, 4 * n), np.uint32)
+    ir = np.zeros((r, 4 * n), bool)
+    tg = np.zeros(r, np.int32)
+    for i, (ks, tag) in enumerate(cases):
+        krow, irow, t = _gather_row(ks, tag, n)
+        kh[i], kl[i] = split_u64(krow)
+        ir[i], tg[i] = irow, t
+    return kh, kl, ir, tg
+
+
+@pytest.mark.parametrize("path", ["kernel", "jnp", "ops"])
+def test_for_encode_parity_all_tags(rng, path):
+    cases = _encode_cases(rng)
+    kh, kl, ir, tg = _build_batch(cases, N)
+    args = (jnp.asarray(kh), jnp.asarray(kl), jnp.asarray(ir),
+            jnp.asarray(tg))
+    if path == "kernel":
+        words, k0h, k0l, dtag = FE.for_encode_pack(*args, interpret=True)
+    elif path == "jnp":
+        words, k0h, k0l, dtag = FE.for_encode_jnp(*args)
+    else:
+        words, k0h, k0l, dtag = ops.for_encode_rows(*args)
+    words, dtag = np.asarray(words), np.asarray(dtag)
+    k0 = (np.asarray(k0h).astype(np.uint64) << np.uint64(32)) \
+        | np.asarray(k0l)
+    for i, (ks, tag) in enumerate(cases):
+        deltas = (ks - ks[0]).astype(np.uint64)
+        want = C._pack_leaf(deltas, tag, N, 0.75)
+        np.testing.assert_array_equal(words[i], want, f"case {i}")
+        assert k0[i] == ks[0], f"case {i}: k0 re-base"
+        # the branchless max-delta reduction found the narrowest width
+        spread = int(ks.max() - ks.min())
+        want_tag = (C.TAG_U16 if spread < 0xFFFF
+                    else C.TAG_U32 if spread < 0xFFFFFFFF else C.TAG_U64)
+        assert dtag[i] == want_tag, f"case {i}: data tag"
+        assert dtag[i] <= tag, f"case {i}: plan honesty"
+
+
+def test_for_encode_kernel_vs_jnp_random(rng):
+    """Wider randomized sweep: the kernel and the jnp reference agree on
+    every output for arbitrary (valid) gather tables."""
+    cases = []
+    for _ in range(32):
+        tag = int(rng.integers(0, 3))
+        span = {C.TAG_U16: 0xFFFE, C.TAG_U32: 0xFFFFFFFE,
+                C.TAG_U64: 2**40}[tag]
+        cnt = int(rng.integers(1, C._leaf_caps(N)[tag] + 1))
+        base = np.uint64(rng.integers(0, 2**62))
+        ks = np.unique(base + rng.integers(0, max(span, cnt), cnt,
+                                           dtype=np.uint64))
+        cases.append((np.sort(ks), tag))
+    kh, kl, ir, tg = _build_batch(cases, N)
+    args = (jnp.asarray(kh), jnp.asarray(kl), jnp.asarray(ir),
+            jnp.asarray(tg))
+    outs_k = FE.for_encode_pack(*args, interpret=True, block_rows=8)
+    outs_j = FE.for_encode_jnp(*args)
+    for a, b in zip(outs_k, outs_j):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_greedy_plan_matches_for_chunks(rng):
+    """fit-flag greedy chunking == ``_for_chunks`` boundary/tag decisions
+    (the plan never reads a key value; only these booleans cross)."""
+    for trial in range(8):
+        parts = [rand_keys(rng, 50)]
+        if trial % 2:
+            base = np.uint64(rng.integers(0, 2**40))
+            parts.append(base + np.arange(200, dtype=np.uint64) * 3)
+        keys = np.unique(np.concatenate(parts))
+        hi, lo = split_u64(keys)
+        takes = C._take_sizes(N, 0.75)
+        f16, f32 = ops.for_fit_flags(
+            jnp.asarray(hi)[None], jnp.asarray(lo)[None],
+            jnp.asarray(np.array([len(keys)])),
+            take16=takes[C.TAG_U16], take32=takes[C.TAG_U32])
+        got = C._greedy_chunks(np.asarray(f16)[0], np.asarray(f32)[0],
+                               len(keys), N, 0.75)
+        want, i = [], 0
+        for tag, _w, _k0, cnt in C._for_chunks(keys, N, 0.75):
+            want.append((i, cnt, tag))
+            i += cnt
+        assert got == want, trial
+
+
+def test_encode_slot_tables_invert_pack_leaf(rng):
+    """The slot->rank tables are the exact inverse of ``_pack_leaf``'s
+    spread + backward gap fill: gathering a sorted key sequence through
+    them and packing reproduces the oracle words at every occupancy."""
+    for cnt in (1, 2, 7, 12, 47, 63, 64):
+        caps = C._leaf_caps(N)
+        ks = np.sort(rng.choice(60_000, cnt, replace=False)).astype(np.uint64)
+        for tag in (C.TAG_U16, C.TAG_U32, C.TAG_U64):
+            if cnt > caps[tag]:
+                continue
+            krow, irow, _ = _gather_row(ks, tag, N)
+            kh, kl = split_u64(krow)
+            words, _, _, _ = FE.for_encode_jnp(
+                jnp.asarray(kh)[None], jnp.asarray(kl)[None],
+                jnp.asarray(irow)[None],
+                jnp.asarray(np.array([tag], np.int32)))
+            want = C._pack_leaf(ks - ks[0], tag, N, 0.75)
+            np.testing.assert_array_equal(np.asarray(words)[0], want,
+                                          (cnt, tag))
