@@ -184,6 +184,54 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
       f"{len(skew_h)/dt:.2f}Mops_dev{hm['device_batches']}"
       f"_rg{hm['slack_regrows']}_ig{hm['inner_rows_gathered']}", "H_device")
 
+    # Workload I: the HOST read path (``Index.lookup``: shape bucketing +
+    # u64 plane split + transfer + unified sorted descent) vs batch size.
+    # Small batches ride the bucket pad (compile-count O(log B)); the
+    # queries/sec curve is what a serving loop actually sees.
+    for n_q in (8, 64, 512, 4096):
+        q = reads[:n_q]
+        us = time_fn(lambda: idx.lookup(q))
+        t(f"wlI_read_batch{n_q}", us, f"{n_q/us:.2f}Mqps", "I_read")
+
+
+def bench_engine_step(rows: list) -> None:
+    """Workload J: fused serving engine step — decode over the slot batch
+    plus a Zipf-skewed admit/complete mix, all queued index ops committed
+    as ONE ``apply_ops`` dispatch per step (the PR's serving tentpole).
+    Steps/sec over a steady-state run on the reduced model."""
+    from repro.configs import get_config
+    from repro.models.model import init_lm
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    params = init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(slots=8, ctx=64, page_size=8))
+    rng = np.random.default_rng(3)
+    next_id = 1
+    for _ in range(4):  # half-fill the slots, compile decode + dispatch
+        eng.admit(next_id, prompt_token=next_id % 100)
+        next_id += 1
+    eng.step()
+    eng.step()
+    steps = 30
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        # Zipf(1.5) admission bursts: most steps carry one lifecycle
+        # event, a heavy tail batches several into the same dispatch
+        for _ in range(min(int(rng.zipf(1.5)), 4)):
+            if eng.admit(next_id, prompt_token=next_id % 100):
+                next_id += 1
+        eng.step()
+        if len(eng.outputs) > 4 and rng.random() < 0.5:
+            act = sorted(eng.outputs)
+            r = min(int(rng.zipf(1.5)) - 1, len(act) - 1)
+            eng.complete(act[r])
+    dt = (time.perf_counter() - t0) * 1e6
+    _emit(rows, "wlJ_engine_step/bs/zipf", dt / steps,
+          f"{steps / (dt / 1e6):.1f}steps_per_s", backend="bs",
+          resolved="bs", dist="zipf", workload="J_engine")
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -228,6 +276,7 @@ def main(argv=None) -> None:
             _emit(rows, f"wlA/sorted_array/{dist}", us,
                   f"{args.ops/us:.2f}Mops", backend="sorted_array",
                   resolved="sorted_array", dist=dist, workload="A")
+        bench_engine_step(rows)
         for r in rows:
             cur = merged.get(r["name"])
             if cur is None or r["us_per_call"] < cur["us_per_call"]:

@@ -58,10 +58,15 @@ from .compress import (  # noqa: F401
 )
 from .reference import ReferenceBSTree  # noqa: F401
 from .index import (  # noqa: F401
+    APPLY_STATS_KEYS,
     Backend,
     Index,
     IndexSpec,
     INSERT_STATS_KEYS,
+    OP_DELETE,
+    OP_INSERT,
+    OP_LOOKUP,
+    OP_NOOP,
     backend_for_tree,
     get_backend,
     register_backend,
@@ -71,10 +76,15 @@ from .versioning import VersionedIndex  # noqa: F401
 
 __all__ = [
     # facade (the public API surface)
+    "APPLY_STATS_KEYS",
     "Backend",
     "Index",
     "IndexSpec",
     "INSERT_STATS_KEYS",
+    "OP_DELETE",
+    "OP_INSERT",
+    "OP_LOOKUP",
+    "OP_NOOP",
     "backend_for_tree",
     "get_backend",
     "register_backend",

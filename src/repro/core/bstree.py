@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import reference as ref
+from . import traverse
 from .layout import (
     DEFAULT_ALPHA,
     ALPHA_LEVEL_GROWTH,
@@ -271,22 +272,16 @@ def to_host(tree: BSTreeArrays) -> dict:
 
 @functools.partial(jax.jit, static_argnames=())
 def descend(tree: BSTreeArrays, q_hi: jnp.ndarray, q_lo: jnp.ndarray) -> jnp.ndarray:
-    """Leaf id for each query (level-synchronous batched descent)."""
-    b = q_hi.shape[0]
-    node = jnp.full((b,), tree.root, dtype=jnp.int32)
-    for _ in range(tree.height):
-        rows_hi = tree.inner_hi[node]
-        rows_lo = tree.inner_lo[node]
-        c = succ_gt(rows_hi, rows_lo, q_hi, q_lo)
-        node = tree.inner_child[node, c]
-    return node
+    """Leaf id for each query, any input order (jitted wrapper over the
+    shared sorted level-wise core — :mod:`repro.core.traverse`)."""
+    return traverse.descend(tree, q_hi, q_lo)
 
 
-@jax.jit
-def lookup_batch(tree: BSTreeArrays, q_hi: jnp.ndarray, q_lo: jnp.ndarray):
-    """Algorithm 3, batched.  Returns (found: bool (B,), vals: u32 (B,))."""
+def leaf_probe(tree: BSTreeArrays, leaf, q_hi, q_lo):
+    """The BS leaf probe (Algorithm 3's in-leaf half): ``succ_ge`` over
+    the gapped rows of ``leaf``, equality check, value gather.  Plugs
+    into ``traverse.lookup``; returns ``(found (B,), vals (B,))``."""
     n = tree.node_width
-    leaf = descend(tree, q_hi, q_lo)
     rows_hi = tree.leaf_hi[leaf]
     rows_lo = tree.leaf_lo[leaf]
     r = succ_ge(rows_hi, rows_lo, q_hi, q_lo)
@@ -296,6 +291,19 @@ def lookup_batch(tree: BSTreeArrays, q_hi: jnp.ndarray, q_lo: jnp.ndarray):
     found = (r < n) & (k_hi == q_hi) & (k_lo == q_lo)
     vals = jnp.take_along_axis(tree.leaf_val[leaf], rc[:, None], axis=1)[:, 0]
     return found, jnp.where(found, vals, 0)
+
+
+@jax.jit
+def lookup_batch(tree: BSTreeArrays, q_hi: jnp.ndarray, q_lo: jnp.ndarray):
+    """Algorithm 3, batched.  Returns (found: bool (B,), vals: u32 (B,))."""
+    return traverse.lookup(tree, q_hi, q_lo, leaf_probe)
+
+
+@jax.jit
+def _descend_sorted(tree: BSTreeArrays, q_hi, q_lo):
+    """Jitted sorted-batch descent (update path: batches arrive
+    host-sorted, so the device-side argsort of ``descend`` is skipped)."""
+    return traverse.descend_sorted(tree, q_hi, q_lo)
 
 
 def lookup_u64(tree: BSTreeArrays, keys_u64: np.ndarray):
@@ -372,13 +380,7 @@ def count_range(tree: BSTreeArrays, k1_hi, k1_lo, k2_hi, k2_lo):
     in ``[k1, k2]``.
     """
     def rank(q_hi, q_lo, inclusive):
-        b = q_hi.shape[0]
-        node = jnp.full((b,), tree.root, dtype=jnp.int32)
-        for _ in range(tree.height):
-            rows_hi = tree.inner_hi[node]
-            rows_lo = tree.inner_lo[node]
-            c = succ_gt(rows_hi, rows_lo, q_hi, q_lo)
-            node = tree.inner_child[node, c]
+        node = traverse.descend(tree, q_hi, q_lo)
         rows_hi = tree.leaf_hi[node]
         rows_lo = tree.leaf_lo[node]
         used = used_mask(rows_hi, rows_lo)
@@ -725,7 +727,7 @@ def insert_batch(tree: BSTreeArrays, keys_u64: np.ndarray, vals: np.ndarray,
 
     hi, lo = split_u64(keys_u64)
     k_hi, k_lo, v = jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals)
-    leaf = descend(tree, k_hi, k_lo)
+    leaf = _descend_sorted(tree, k_hi, k_lo)  # batch is host-sorted
     tree, n_ins, n_ups, overflow = _insert_merge(tree, k_hi, k_lo, v, leaf)
     stats["inserted"] = int(n_ins)
     stats["present"] = int(n_ups)
@@ -773,7 +775,7 @@ def delete_batch(tree: BSTreeArrays, keys_u64: np.ndarray):
         return tree, 0
     hi, lo = split_u64(keys_u64)
     k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
-    leaf = descend(tree, k_hi, k_lo)
+    leaf = _descend_sorted(tree, k_hi, k_lo)  # np.unique sorted the batch
     tree, n_deleted = _delete_merge(tree, k_hi, k_lo, leaf)
     return tree, int(n_deleted)
 

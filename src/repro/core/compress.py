@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import reference as ref
+from . import traverse
 from .layout import (
     DEFAULT_ALPHA,
     DEFAULT_N,
@@ -56,7 +57,7 @@ from .layout import (
     split_u64,
     spread_positions,
 )
-from .succ import cmp_ge_u64, cmp_gt_u64, succ_gt
+from .succ import cmp_ge_u64, cmp_gt_u64
 
 __all__ = [
     "CBSTreeArrays",
@@ -381,23 +382,22 @@ def _block_counts(words, tag, k0_hi, k0_lo, q_hi, q_lo, strict: bool):
     return rank, member
 
 
+def leaf_probe(tree: CBSTreeArrays, leaf, q_hi, q_lo):
+    """The CBS leaf probe: tag-predicated ``_block_counts`` over the FOR
+    blocks of ``leaf``.  Plugs into ``traverse.lookup``; returns
+    ``(found (B,), leaf (B,), rank (B,))``."""
+    rank, member = _block_counts(
+        tree.leaf_words[leaf], tree.leaf_tag[leaf],
+        tree.leaf_k0_hi[leaf], tree.leaf_k0_lo[leaf],
+        q_hi, q_lo, strict=True,
+    )
+    return member, leaf, rank
+
+
 @jax.jit
 def cbs_lookup_batch(tree: CBSTreeArrays, q_hi, q_lo):
     """Equality search.  Returns (found (B,), leaf (B,), rank (B,))."""
-    b = q_hi.shape[0]
-    node = jnp.full((b,), tree.root, dtype=jnp.int32)
-    for _ in range(tree.height):
-        rows_hi = tree.inner_hi[node]
-        rows_lo = tree.inner_lo[node]
-        c = succ_gt(rows_hi, rows_lo, q_hi, q_lo)
-        node = tree.inner_child[node, c]
-    words = tree.leaf_words[node]
-    rank, member = _block_counts(
-        words, tree.leaf_tag[node],
-        tree.leaf_k0_hi[node], tree.leaf_k0_lo[node],
-        q_hi, q_lo, strict=True,
-    )
-    return member, node, rank
+    return traverse.lookup(tree, q_hi, q_lo, leaf_probe)
 
 
 def cbs_lookup_u64(tree: CBSTreeArrays, keys_u64: np.ndarray):
@@ -429,12 +429,7 @@ def cbs_range_scan(tree: CBSTreeArrays, k1_hi, k1_lo, k2_hi, k2_lo, *,
     sentinels never count.
     """
     b = k1_hi.shape[0]
-    node = jnp.full((b,), tree.root, dtype=jnp.int32)
-    for _ in range(tree.height):
-        rows_hi = tree.inner_hi[node]
-        rows_lo = tree.inner_lo[node]
-        c = succ_gt(rows_hi, rows_lo, k1_hi, k1_lo)
-        node = tree.inner_child[node, c]
+    node = traverse.descend(tree, k1_hi, k1_lo)
 
     def counts(leaf, q_hi, q_lo, strict):
         words = tree.leaf_words[leaf]

@@ -44,6 +44,7 @@ import numpy as np
 
 from . import bstree as _bs
 from . import compress as _cbs
+from . import traverse as _traverse
 from .layout import (
     DEFAULT_ALPHA,
     DEFAULT_N,
@@ -58,12 +59,27 @@ __all__ = [
     "Backend",
     "Index",
     "IndexSpec",
+    "APPLY_STATS_KEYS",
     "INSERT_STATS_KEYS",
+    "OP_DELETE",
+    "OP_INSERT",
+    "OP_LOOKUP",
+    "OP_NOOP",
     "backend_for_tree",
     "get_backend",
     "register_backend",
     "resolve_backend",
 ]
+
+#: Op codes for :meth:`Index.apply_ops` fixed-shape mixed-op batches.
+#: NOOP entries are padding: ignored by every phase.
+OP_NOOP, OP_LOOKUP, OP_INSERT, OP_DELETE = 0, 1, 2, 3
+
+#: The stats schema :meth:`Index.apply_ops` emits on every backend.
+APPLY_STATS_KEYS = frozenset(
+    {"requested", "lookups", "inserted", "present", "deleted", "deferred",
+     "rounds", "maintenance"}
+)
 
 #: The unified insert-stats schema every backend must emit (satellite of
 #: the facade contract; asserted by tests/test_index_api.py).
@@ -263,6 +279,81 @@ def _cbs_lookup_normalised(tree, q_hi, q_lo):
     return found, jnp.where(found, pos, 0)
 
 
+@jax.jit
+def _bs_apply_ops_fused(tree, op, k_hi, k_lo, v):
+    """ONE jitted dispatch for a fixed-shape mixed-op batch on the BS
+    backend: device lexsort -> shared sorted descent -> pre-state lookup
+    probe -> segmented delete merge -> segmented insert merge.
+
+    Semantics: lookups observe the index *before* the batch; deletes
+    apply before inserts; NOOP/LOOKUP entries are inactive in both
+    merges.  Leaf ids from the single descent stay valid throughout
+    because in-dispatch merges never restructure (splits are deferred to
+    the maintenance pass via ``overflow``).  The caller guarantees
+    active-insert and active-delete keys are batch-unique.
+    """
+    order = jnp.lexsort((k_lo, k_hi))
+    inv = jnp.argsort(order)
+    qh, ql = k_hi[order], k_lo[order]
+    vs, op_s = v[order], op[order]
+    leaf = _traverse.descend_sorted(tree, qh, ql)
+    found0, vals0 = _bs.leaf_probe(tree, leaf, qh, ql)
+
+    cap = tree.leaf_hi.shape[0]
+    rows_hi, rows_lo = tree.leaf_hi[leaf], tree.leaf_lo[leaf]
+    rows_v = tree.leaf_val[leaf]
+    nh, nl, nv, write, del_found = _bs.segmented_rows_delete(
+        rows_hi, rows_lo, rows_v, qh, ql, leaf, op_s == OP_DELETE
+    )
+    tgt = jnp.where(write, leaf, cap + 1)
+    tree = dataclasses.replace(
+        tree,
+        leaf_hi=tree.leaf_hi.at[tgt].set(nh, mode="drop"),
+        leaf_lo=tree.leaf_lo.at[tgt].set(nl, mode="drop"),
+        leaf_val=tree.leaf_val.at[tgt].set(nv, mode="drop"),
+    )
+
+    rows_hi, rows_lo = tree.leaf_hi[leaf], tree.leaf_lo[leaf]
+    rows_v = tree.leaf_val[leaf]
+    nh, nl, nv, write, merged_new, upserted, overflow = (
+        _bs.segmented_rows_upsert(
+            rows_hi, rows_lo, rows_v, qh, ql, vs, leaf, op_s == OP_INSERT
+        )
+    )
+    tgt = jnp.where(write, leaf, cap + 1)
+    tree = dataclasses.replace(
+        tree,
+        leaf_hi=tree.leaf_hi.at[tgt].set(nh, mode="drop"),
+        leaf_lo=tree.leaf_lo.at[tgt].set(nl, mode="drop"),
+        leaf_val=tree.leaf_val.at[tgt].set(nv, mode="drop"),
+    )
+    return (
+        tree, found0[inv], vals0[inv],
+        jnp.sum(del_found.astype(jnp.int32)),
+        jnp.sum(merged_new.astype(jnp.int32)),
+        jnp.sum(upserted.astype(jnp.int32)),
+        overflow[inv],
+    )
+
+
+def _dedup_op(work: np.ndarray, keys: np.ndarray, code: int,
+              keep: str) -> None:
+    """Demote duplicate ``code`` entries of the same key to NOOP in place
+    (``keep`` = "last" for upserts, "first" for deletes) so the fused
+    segmented merges see batch-unique active keys."""
+    idx = np.nonzero(work == code)[0]
+    if len(idx) < 2:
+        return
+    ks = keys[idx]
+    if keep == "last":
+        _, first = np.unique(ks[::-1], return_index=True)
+        keep_idx = idx[::-1][first]
+    else:
+        _, first = np.unique(ks, return_index=True)
+        keep_idx = idx[first]
+    work[np.setdiff1d(idx, keep_idx)] = OP_NOOP
+
+
 def _default_vals(keys: np.ndarray) -> np.ndarray:
     """Value stored when the caller gives none — the key's low 32 bits
     (deterministic, recomputable from the key itself, and identical for
@@ -397,11 +488,21 @@ class Index:
     def lookup(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Batched equality search.  Returns ``(found (B,) bool,
         vals (B,) uint32)``; on a keys-only backend ``vals`` is the stable
-        record position ``leaf * 4n + rank`` (0 where not found)."""
-        hi, lo = split_u64(np.asarray(keys, dtype=np.uint64))
+        record position ``leaf * 4n + rank`` (0 where not found).
+
+        A zero-length batch returns empty results without tracing a
+        degenerate descent.  Non-empty batches are padded to the next
+        power-of-two bucket (``traverse.bucket_size``) before dispatch so
+        batch-size churn compiles O(log B) programs, not one per size.
+        """
+        keys = np.asarray(keys, dtype=np.uint64)
+        b = keys.shape[0]
+        if b == 0:
+            return np.zeros(0, bool), np.zeros(0, np.uint32)
+        hi, lo = split_u64(_traverse.pad_to_bucket(keys))
         found, vals = self.impl.lookup_device(
             self.tree, jnp.asarray(hi), jnp.asarray(lo))
-        return np.asarray(found), np.asarray(vals)
+        return np.asarray(found)[:b], np.asarray(vals)[:b]
 
     def lookup_batch(self, q_hi: jnp.ndarray, q_lo: jnp.ndarray):
         """Device-level lookup on u32 key planes (for jit pipelines and
@@ -471,6 +572,116 @@ class Index:
         tree, n = self.impl.delete(self.tree, keys)
         return (dataclasses.replace(self, tree=tree),
                 {"requested": int(len(keys)), "deleted": int(n)})
+
+    def apply_ops(self, ops: np.ndarray, keys: np.ndarray,
+                  vals: Optional[np.ndarray] = None
+                  ) -> tuple["Index", dict]:
+        """Fused mixed-op dispatch: lookups + deletes + inserts in ONE
+        fixed-shape op batch.  ``ops`` (B,) holds :data:`OP_NOOP` /
+        :data:`OP_LOOKUP` / :data:`OP_INSERT` / :data:`OP_DELETE` codes
+        aligned with ``keys`` (B,) and optional ``vals`` (B,).
+
+        Semantics (identical on every backend): lookups observe the index
+        *before* the batch, then deletes apply, then inserts.  Returns
+        ``(new Index, results)`` with ``results = {"found", "vals",
+        "stats"}``; ``found``/``vals`` are (B,) arrays meaningful only at
+        LOOKUP positions (False/0 elsewhere) and ``stats`` has exactly
+        the :data:`APPLY_STATS_KEYS` schema.
+
+        On the BS backend the whole batch executes as a single jitted
+        dispatch (padded to the ``traverse.bucket_size`` bucket, so a
+        serving loop with batch-size churn never recompiles); overflowing
+        insert segments defer to the device maintenance pass exactly like
+        :meth:`insert`.  Other backends compose the three phases through
+        their own batch kernels (documented capability difference, same
+        results contract).
+        """
+        from .maintenance import new_counters
+
+        ops = np.asarray(ops, dtype=np.int32)
+        keys = np.asarray(keys, dtype=np.uint64)
+        if ops.shape != keys.shape or ops.ndim != 1:
+            raise ValueError("ops and keys must be aligned (B,) arrays")
+        known = np.isin(ops, (OP_NOOP, OP_LOOKUP, OP_INSERT, OP_DELETE))
+        if not known.all():
+            raise ValueError(f"unknown op codes: {np.unique(ops[~known])}")
+        if vals is not None and not self.supports_values:
+            raise ValueError(
+                f"backend {self.backend!r} is keys-only; drop vals")
+        b = len(ops)
+        stats = {"requested": b,
+                 "lookups": int(np.sum(ops == OP_LOOKUP)),
+                 "inserted": 0, "present": 0, "deleted": 0,
+                 "deferred": 0, "rounds": 0,
+                 "maintenance": new_counters()}
+        found = np.zeros(b, bool)
+        out_vals = np.zeros(b, np.uint32)
+        results = {"found": found, "vals": out_vals, "stats": stats}
+        if b == 0:
+            return self, results
+
+        work = ops.copy()
+        _dedup_op(work, keys, OP_INSERT, keep="last")
+        _dedup_op(work, keys, OP_DELETE, keep="first")
+
+        if self.backend != "bs":
+            return self._apply_ops_composed(work, keys, vals, results)
+
+        if vals is None:
+            vals = _default_vals(keys)
+        vals = np.asarray(vals, dtype=np.uint32)
+
+        pad_ops = _traverse.pad_to_bucket(work, OP_NOOP)
+        hi, lo = split_u64(_traverse.pad_to_bucket(keys))
+        tree, f, v, n_del, n_ins, n_ups, overflow = _bs_apply_ops_fused(
+            self.tree, jnp.asarray(pad_ops), jnp.asarray(hi),
+            jnp.asarray(lo), jnp.asarray(_traverse.pad_to_bucket(vals)))
+        stats["deleted"] = int(n_del)
+        stats["inserted"] = int(n_ins)
+        stats["present"] = int(n_ups)
+        stats["rounds"] = 1
+        is_lk = ops == OP_LOOKUP
+        found[is_lk] = np.asarray(f)[:b][is_lk]
+        out_vals[is_lk] = np.asarray(v)[:b][is_lk]
+
+        d = np.asarray(overflow)[:b] & (work == OP_INSERT)
+        if d.any():
+            from .maintenance import bs_device_split_insert
+
+            idx = np.nonzero(d)[0]
+            order = np.argsort(keys[idx], kind="stable")
+            stats["deferred"] = len(idx)
+            tree, h_ins, h_ups = bs_device_split_insert(
+                tree, keys[idx][order], vals[idx][order],
+                stats["maintenance"], slack=self.spec.slack)
+            stats["inserted"] += h_ins
+            stats["present"] += h_ups
+        return dataclasses.replace(self, tree=tree), results
+
+    def _apply_ops_composed(self, work, keys, vals, results):
+        """Backend-agnostic three-phase fallback for :meth:`apply_ops`
+        (same semantics, one dispatch per phase instead of one total)."""
+        stats = results["stats"]
+        is_lk = work == OP_LOOKUP
+        if is_lk.any():
+            f, v = self.lookup(keys[is_lk])
+            results["found"][is_lk] = f
+            results["vals"][is_lk] = v
+        idx = self
+        dels = keys[work == OP_DELETE]
+        if len(dels):
+            idx, d_stats = idx.delete(dels)
+            stats["deleted"] = d_stats["deleted"]
+            stats["rounds"] += 1
+        is_ins = work == OP_INSERT
+        if is_ins.any():
+            ins_vals = None if vals is None else (
+                np.asarray(vals, np.uint32)[is_ins])
+            idx, i_stats = idx.insert(keys[is_ins], ins_vals)
+            for k in ("inserted", "present", "deferred", "rounds"):
+                stats[k] += i_stats[k]
+            stats["maintenance"] = i_stats["maintenance"]
+        return idx, results
 
     def compact(self, *, min_occupancy: float = 0.5, force: bool = False
                 ) -> tuple["Index", dict]:

@@ -1,0 +1,152 @@
+"""Unified sorted level-wise traversal core (the single home of descent).
+
+Every read path of every backend descends the same way: inner nodes are
+uncompressed ``(hi, lo, child)`` rows in **both** the BS and CBS trees
+(paper §6 finding — only leaves compress), so the level-synchronous
+descent is backend-agnostic and lives here, once.  The backends differ
+only in the *leaf probe* applied after the descent (``succ_ge`` over
+gapped rows for BS, ``_block_counts`` over FOR blocks for CBS); probes
+are passed in as callables.
+
+The FPGA level-wise batch-search adaptation (PAPERS.md): the query batch
+is **argsorted once** (u64 order via a two-plane lexsort) and descends
+breadth-first in sorted order carrying the inverse permutation.  Sorted
+queries that share a descent prefix become *contiguous runs* on the same
+node at every level, so each distinct inner row needs to be fetched once
+per level:
+
+* the jnp path keeps the existing per-query gather (``rows = inner[node]``
+  — XLA's gather already coalesces duplicate indices; this is the
+  bit-exact reference);
+* on TPU the :mod:`repro.kernels.level_stream` Pallas kernel streams one
+  level's *distinct* rows through VMEM against the sorted query slab,
+  loading a row only at run boundaries (``seg_first``).
+
+Shape bucketing: host entry points pad query batches to the next
+power-of-two bucket (min :data:`MIN_BUCKET`) so a serving loop with
+batch-size churn compiles O(log B) programs, not one per size — see
+:func:`bucket_size` / :func:`pad_to_bucket` and README "Shape bucketing".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .succ import succ_gt
+
+__all__ = [
+    "MIN_BUCKET",
+    "bucket_size",
+    "pad_to_bucket",
+    "sorted_order",
+    "run_first",
+    "descend",
+    "descend_sorted",
+    "lookup",
+    "lookup_sorted",
+]
+
+#: Smallest query-batch bucket (pad everything at least this far).
+MIN_BUCKET = 8
+
+
+def bucket_size(b: int) -> int:
+    """Next power-of-two bucket >= ``b`` (>= MIN_BUCKET)."""
+    b = max(int(b), MIN_BUCKET)
+    return 1 << (b - 1).bit_length()
+
+
+def pad_to_bucket(arr: np.ndarray, fill=0) -> np.ndarray:
+    """Pad a host batch to its bucket along axis 0 (callers slice back)."""
+    b = arr.shape[0]
+    pad = bucket_size(b) - b
+    if pad == 0:
+        return arr
+    return np.concatenate(
+        [arr, np.full((pad,) + arr.shape[1:], fill, dtype=arr.dtype)]
+    )
+
+
+def sorted_order(q_hi, q_lo):
+    """(order, inv): u64 ascending order of two-plane queries and its
+    inverse permutation (``x[order][inv] == x``)."""
+    order = jnp.lexsort((q_lo, q_hi))  # primary key (hi) last
+    inv = jnp.argsort(order)
+    return order, inv
+
+
+def run_first(node):
+    """Boolean mask of run starts in a non-decreasing id sequence — the
+    dedup structure the level-stream kernel exploits (a row is loaded
+    only where ``run_first`` is set)."""
+    return jnp.concatenate(
+        [jnp.ones((1,), bool), node[1:] != node[:-1]]
+    )
+
+
+def _level_step_jnp(tree, node, q_hi, q_lo):
+    """One level of descent, per-query gather (the jnp reference path)."""
+    rows_hi = tree.inner_hi[node]
+    rows_lo = tree.inner_lo[node]
+    c = succ_gt(rows_hi, rows_lo, q_hi, q_lo)
+    return tree.inner_child[node, c]
+
+
+def _level_step_kernel(tree, node, q_hi, q_lo):
+    """One level via the Pallas level-stream kernel (TPU fast path)."""
+    from repro.kernels import ops as kops
+
+    return kops.level_stream(
+        node, run_first(node), q_hi, q_lo,
+        tree.inner_hi, tree.inner_lo, tree.inner_child,
+    )
+
+
+def _use_kernel(tree) -> bool:
+    from repro.kernels import gather_succ
+
+    return (jax.default_backend() == "tpu"
+            and gather_succ.fits_vmem(tree.inner_hi))
+
+
+def descend_sorted(tree, q_hi, q_lo, *, use_kernel=None):
+    """Leaf id per query for a batch **already in u64 ascending order**
+    (host-sorted update batches skip the device sort).  Works on any tree
+    whose inner region is ``(inner_hi, inner_lo, inner_child, root,
+    height)`` — both backends."""
+    if use_kernel is None:
+        use_kernel = _use_kernel(tree)
+    step = _level_step_kernel if use_kernel else _level_step_jnp
+    b = q_hi.shape[0]
+    node = jnp.full((b,), tree.root, dtype=jnp.int32)
+    for _ in range(tree.height):
+        node = step(tree, node, q_hi, q_lo)
+    return node
+
+
+def descend(tree, q_hi, q_lo, *, use_kernel=None):
+    """Leaf id per query, any input order: sort once, descend sorted,
+    un-permute.  Traceable (call inside jit); for a host-side one-shot
+    use the backends' jitted wrappers."""
+    order, inv = sorted_order(q_hi, q_lo)
+    leaf = descend_sorted(tree, q_hi[order], q_lo[order],
+                          use_kernel=use_kernel)
+    return leaf[inv]
+
+
+def lookup_sorted(tree, q_hi, q_lo, probe, *, use_kernel=None):
+    """Descend a sorted batch and apply the backend's leaf ``probe``
+    (``probe(tree, leaf, q_hi, q_lo) -> tuple of (B,) outputs``)."""
+    leaf = descend_sorted(tree, q_hi, q_lo, use_kernel=use_kernel)
+    return probe(tree, leaf, q_hi, q_lo)
+
+
+def lookup(tree, q_hi, q_lo, probe, *, use_kernel=None):
+    """Full sorted traversal pipeline for an arbitrary-order batch:
+    argsort once -> sorted descent -> leaf probe -> inverse permutation.
+    Returns the probe's outputs in input order."""
+    order, inv = sorted_order(q_hi, q_lo)
+    outs = lookup_sorted(tree, q_hi[order], q_lo[order], probe,
+                         use_kernel=use_kernel)
+    return tuple(o[inv] for o in outs)

@@ -7,6 +7,7 @@ off-TPU).
 
   succ_kernel   batched in-node successor counts (paper Snippet 2)
   gather_succ   fused multi-level descent, VMEM-resident inner nodes
+  level_stream  one descent level over the sorted query slab (run dedup)
   leaf_insert   branchless gapped insert / delete (paper Algs. 5/6)
   leaf_split    k-way leaf split scatter (on-device maintenance slow path)
   for_succ      FOR-compressed block search (paper §5)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: one descent level over a sorted query slab.
+
+The sorted level-wise traversal (:mod:`repro.core.traverse`) turns
+queries sharing a node into contiguous runs, so one level of descent only
+needs each *distinct* inner row once.  This kernel walks a query tile in
+run order carrying the current row in registers: a row is loaded from the
+VMEM-resident inner planes only at a run boundary (``seg_first``), then
+every query of the run reuses it for the branchless succ count and child
+pick.  The HBM/VMEM traffic per level drops from one row per query to one
+row per distinct node — the streaming analogue of the FPGA level-wise
+batch search (PAPERS.md).
+
+Like :mod:`repro.kernels.gather_succ`, the inner planes are pinned as
+whole-array blocks and must fit the VMEM budget (checked by the
+``ops.level_stream`` wrapper); the traversal core falls back to the jnp
+per-query gather otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .succ_kernel import _as_signed
+
+
+def _level_stream_kernel(
+    node_ref, first_ref, qhi_ref, qlo_ref, ihi_ref, ilo_ref, child_ref,
+    out_ref,
+):
+    tb = out_ref.shape[0]
+    n = ihi_ref.shape[1]
+
+    def load_row(node):
+        rh = _as_signed(pl.load(ihi_ref, (pl.dslice(node, 1), slice(None))))
+        rl = _as_signed(pl.load(ilo_ref, (pl.dslice(node, 1), slice(None))))
+        ch = pl.load(child_ref, (pl.dslice(node, 1), slice(None)))
+        return rh, rl, ch
+
+    def per_query(t, carry):
+        rh, rl, ch = carry
+        node = pl.load(node_ref, (pl.dslice(t, 1), slice(None)))[0, 0]
+        # a tile may start mid-run: its first query always loads
+        fresh = (pl.load(first_ref, (pl.dslice(t, 1), slice(None)))[0, 0]
+                 != 0) | (t == 0)
+        rh, rl, ch = jax.lax.cond(
+            fresh, lambda: load_row(node), lambda: (rh, rl, ch)
+        )
+        qh = _as_signed(pl.load(qhi_ref, (pl.dslice(t, 1), slice(None))))
+        ql = _as_signed(pl.load(qlo_ref, (pl.dslice(t, 1), slice(None))))
+        # succ_gt: count(keys <= q)  <=>  q >= key, on the (1, N) row
+        mask = (qh > rh) | ((qh == rh) & (ql >= rl))
+        c = jnp.sum(mask.astype(jnp.int32))
+        nxt = jax.lax.dynamic_index_in_dim(ch[0], c, keepdims=False)
+        pl.store(out_ref, (pl.dslice(t, 1), slice(None)), nxt[None, None])
+        return rh, rl, ch
+
+    zero = jnp.zeros((1, n), jnp.int32)
+    jax.lax.fori_loop(0, tb, per_query, (zero, zero, zero))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def level_stream(
+    node: jnp.ndarray,  # (B,) int32 — current node per sorted query
+    seg_first: jnp.ndarray,  # (B,) bool — run boundaries of ``node``
+    q_hi: jnp.ndarray,  # (B,) uint32, u64-ascending
+    q_lo: jnp.ndarray,  # (B,) uint32
+    inner_hi: jnp.ndarray,  # (M, N) uint32 — must fit VMEM (see wrapper)
+    inner_lo: jnp.ndarray,  # (M, N) uint32
+    inner_child: jnp.ndarray,  # (M, N) int32
+    *,
+    block_rows: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Next node id per sorted query for one level of descent."""
+    b = node.shape[0]
+    m, n = inner_hi.shape
+    tb = min(block_rows, b)
+    pad = (-b) % tb
+    if pad:
+        # padded slots replay the last query against its node (harmless)
+        node = jnp.pad(node, (0, pad), mode="edge")
+        seg_first = jnp.pad(seg_first, (0, pad))
+        q_hi = jnp.pad(q_hi, (0, pad), mode="edge")
+        q_lo = jnp.pad(q_lo, (0, pad), mode="edge")
+    bp = node.shape[0]
+    out = pl.pallas_call(
+        _level_stream_kernel,
+        grid=(bp // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),  # node ids
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),  # run starts
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),  # query planes
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),  # inner planes: resident
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        interpret=interpret,
+    )(
+        node[:, None], seg_first[:, None].astype(jnp.int32),
+        q_hi[:, None], q_lo[:, None], inner_hi, inner_lo, inner_child,
+    )
+    return out[:b, 0]

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core.layout import BSTreeArrays, split_u64
 from . import (for_encode, for_succ, gather_succ, leaf_insert, leaf_split,
-               succ_kernel)
+               level_stream as _level_stream, succ_kernel)
 
 
 def _interp() -> bool:
@@ -50,6 +50,20 @@ def tree_search(tree: BSTreeArrays, q_hi, q_lo, **kw):
     return gather_succ.tree_search(
         tree.root, tree.inner_hi, tree.inner_lo, tree.inner_child,
         q_hi, q_lo, height=tree.height, **kw,
+    )
+
+
+def level_stream(node, seg_first, q_hi, q_lo, inner_hi, inner_lo,
+                 inner_child, **kw):
+    """One descent level over the sorted query slab: each distinct inner
+    row is loaded once per run (see kernels/level_stream.py).  Used by
+    ``core.traverse`` as the TPU fast path of ``descend_sorted``."""
+    kw.setdefault("interpret", _interp())
+    assert gather_succ.fits_vmem(inner_hi), (
+        "inner region exceeds the VMEM budget; use the jnp descent path"
+    )
+    return _level_stream.level_stream(
+        node, seg_first, q_hi, q_lo, inner_hi, inner_lo, inner_child, **kw
     )
 
 

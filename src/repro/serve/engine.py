@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.index import OP_DELETE, OP_INSERT, OP_LOOKUP
 from repro.core.succ import searchsorted_right
 from repro.models.model import decode_step, make_cache
 from .kv_cache import PagedKVCache
@@ -63,6 +64,10 @@ class ServeEngine:
         self.positions = np.zeros(ecfg.slots, dtype=np.int32)
         self.last_token = np.zeros(ecfg.slots, dtype=np.int32)
         self.outputs: dict[int, list[int]] = {}
+        # queued index ops: (op code, request_id, slot) — committed as ONE
+        # fused Index.apply_ops dispatch at the next flush point (step /
+        # complete), instead of one dispatch per lifecycle event
+        self._pending: list[tuple[int, int, int]] = []
         self.key = jax.random.key(ecfg.seed)
         self._step = jax.jit(
             lambda p, t, c, pos: decode_step(cfg, p, t, c, pos),
@@ -70,6 +75,20 @@ class ServeEngine:
         )
 
     # -- lifecycle -------------------------------------------------------
+    def _flush(self, extra: list[tuple[int, int, int]] = ()) -> dict | None:
+        """Commit all queued index ops (+ ``extra``) as one fused
+        dispatch.  Returns the results dict (aligned with queue + extra
+        order) or None when there was nothing to commit."""
+        batch = self._pending + list(extra)
+        self._pending = []
+        if not batch:
+            return None
+        return self.index.apply_ops(
+            np.array([op for op, _, _ in batch], np.int32),
+            np.array([rid for _, rid, _ in batch], np.uint64),
+            np.array([slot for _, _, slot in batch], np.uint32),
+        )
+
     def admit(self, request_id: int, prompt_token: int) -> bool:
         free = np.nonzero(~self.active)[0]
         if len(free) == 0:
@@ -80,23 +99,31 @@ class ServeEngine:
         self.positions[slot] = 0
         self.last_token[slot] = prompt_token
         self.outputs[request_id] = []
-        self.index.admit(np.array([request_id]), np.array([slot]))
+        self._pending.append((OP_INSERT, request_id, slot))
         self.pages.admit(request_id)
         self.pages.extend_to(request_id, 1)
         return True
 
     def complete(self, request_id: int) -> list[int]:
-        found, slots = self.index.lookup(np.array([request_id], np.uint64))
-        assert found[0], f"unknown request {request_id}"
-        slot = int(slots[0])
+        # a still-queued admit of this id must land first: apply_ops
+        # lookups read pre-batch state
+        if any(rid == request_id for _, rid, _ in self._pending):
+            self._flush()
+        res = self._flush(extra=[(OP_LOOKUP, request_id, 0),
+                                 (OP_DELETE, request_id, 0)])
+        slot_pos = len(res["found"]) - 2  # the OP_LOOKUP entry
+        assert res["found"][slot_pos], f"unknown request {request_id}"
+        slot = int(res["vals"][slot_pos])
         self.active[slot] = False
-        self.index.complete(np.array([request_id], np.uint64))
         self.pages.release(request_id)
         return self.outputs.pop(request_id)
 
     # -- decoding --------------------------------------------------------
     def step(self) -> dict:
-        """One decode step over the whole slot batch (inactive masked)."""
+        """One decode step over the whole slot batch (inactive masked).
+        Queued admissions/completions commit first as one fused index
+        dispatch — one engine step, one index dispatch."""
+        self._flush()
         if not self.active.any():
             return {"active": 0}
         pos = int(self.positions[self.active].max())

@@ -16,6 +16,8 @@ import numpy as np
 from repro.core.index import Index, IndexSpec
 from repro.core.versioning import VersionedIndex
 
+__all__ = ["RequestIndex"]
+
 
 class RequestIndex:
     def __init__(self, *, node_width: int = 16, backend: str = "bs"):
@@ -44,6 +46,25 @@ class RequestIndex:
 
         self.idx.update(fn)
         return removed[-1]
+
+    def apply_ops(self, ops: np.ndarray, request_ids: np.ndarray,
+                  slots: np.ndarray) -> dict:
+        """Fused mixed-op commit: one ``Index.apply_ops`` dispatch for a
+        whole admit/complete/lookup batch (the engine's per-step path —
+        one version bump, one device dispatch).  Returns the facade's
+        ``{"found", "vals", "stats"}`` results dict."""
+        ops = np.asarray(ops, dtype=np.int32)
+        ids = np.asarray(request_ids, dtype=np.uint64)
+        slots = np.asarray(slots, dtype=np.uint32)
+        out: dict = {}
+
+        def fn(ix: Index) -> Index:
+            ix2, res = ix.apply_ops(ops, ids, slots)
+            out.update(res)
+            return ix2
+
+        self.idx.update(fn)
+        return out
 
     def lookup(self, request_ids: np.ndarray):
         ids = np.asarray(request_ids, dtype=np.uint64)

@@ -22,7 +22,15 @@ run compiles O(heights) programs instead of one per batch size.
 import numpy as np
 import pytest
 
-from repro.core import Index, IndexSpec, ReferenceBSTree
+from repro.core import (
+    Index,
+    IndexSpec,
+    OP_DELETE,
+    OP_INSERT,
+    OP_LOOKUP,
+    OP_NOOP,
+    ReferenceBSTree,
+)
 
 try:
     import hypothesis  # noqa: F401
@@ -98,6 +106,36 @@ class DifferentialIndex:
             assert vs.tolist() == [v for _, v in want]
         assert self.idx.count_range(lo, hi) == len(want)
 
+    def apply_mixed(self, codes, ks):
+        """One fused mixed-op batch vs the oracle: lookups observe the
+        pre-batch state, deletes apply before inserts, duplicate
+        insert/delete keys collapse (last/first wins), NOOP padding."""
+        codes = np.asarray(codes, np.int32)[:BATCH]
+        ks = np.asarray(ks, np.uint64)[:BATCH]
+        if len(codes) < BATCH:  # pad with NOOP, not repeat-last-key
+            pad = BATCH - len(codes)
+            codes = np.concatenate([codes, np.full(pad, OP_NOOP, np.int32)])
+            ks = np.concatenate([ks, np.zeros(pad, np.uint64)])
+        pre = dict(self.oracle.items())
+        vals = _low32(ks) if self.idx.supports_values else None
+        self.idx, res = self.idx.apply_ops(codes, ks, vals)
+        # oracle replays the same fixed phase order
+        want_del = 0
+        for k in ks[codes == OP_DELETE]:
+            want_del += self.oracle.delete(int(k))
+        for k in ks[codes == OP_INSERT]:  # in-order: last dup wins
+            self.oracle.insert(int(k), int(k) & 0xFFFFFFFF)
+        for i, (c, k) in enumerate(zip(codes.tolist(), ks.tolist())):
+            if c == OP_LOOKUP:
+                assert bool(res["found"][i]) == (k in pre), (i, k)
+                if res["found"][i] and self.idx.supports_values:
+                    assert int(res["vals"][i]) == pre[k], (i, k)
+            else:  # found/vals meaningful only at LOOKUP positions
+                assert not res["found"][i] and res["vals"][i] == 0
+        st = res["stats"]
+        assert st["deleted"] == want_del, (st, want_del)
+        assert st["requested"] == BATCH
+
     def compact(self, force: bool):
         self.idx, cc = self.idx.compact(force=force)
         # a compact triggered by the occupancy gate must reclaim leaves; a
@@ -119,7 +157,7 @@ def _walk(backend: str, steps: int, seed: int):
     rng = np.random.default_rng(seed)
     d = DifferentialIndex(backend, rng.choice(POOL, 40, replace=False))
     for step in range(steps):
-        op = int(rng.integers(0, 10))
+        op = int(rng.integers(0, 12))
         ks = rng.choice(POOL, int(rng.integers(1, BATCH + 1)),
                         replace=False)
         if op < 4:
@@ -131,8 +169,15 @@ def _walk(backend: str, steps: int, seed: int):
         elif op == 8:
             lo, hi = rng.choice(POOL, 2, replace=False)
             d.range(lo, hi)
-        else:
+        elif op == 9:
             d.compact(force=bool(step % 2))
+        else:
+            # fused mixed batch; duplicate keys ON PURPOSE (replace=True
+            # from a narrow slice) to drive the dedup demotion path
+            mk = rng.choice(POOL[:60], int(rng.integers(1, BATCH + 1)),
+                            replace=True)
+            mc = rng.integers(OP_LOOKUP, OP_DELETE + 1, len(mk))
+            d.apply_mixed(mc, mk)
         d.check()
     return d
 
@@ -170,6 +215,10 @@ if HAS_HYPOTHESIS:
     KEY = st.integers(min_value=1, max_value=len(POOL)).map(
         lambda i: int(POOL[i - 1]))
     KEYS = st.lists(KEY, min_size=1, max_size=BATCH, unique=True)
+    # mixed-op batches: keys may repeat (dedup demotion is under test)
+    MIXED = st.lists(
+        st.tuples(st.sampled_from([OP_LOOKUP, OP_INSERT, OP_DELETE]), KEY),
+        min_size=1, max_size=BATCH)
 
     FUZZ_SETTINGS = settings(
         max_examples=200,  # >= 200 examples per backend (acceptance bar)
@@ -205,6 +254,11 @@ if HAS_HYPOTHESIS:
         @rule(force=st.booleans())
         def compact(self, force):
             self.d.compact(force)
+
+        @rule(mixed=MIXED)
+        def apply_mixed(self, mixed):
+            self.d.apply_mixed([c for c, _ in mixed],
+                               np.asarray([k for _, k in mixed], np.uint64))
 
         @invariant()
         def matches_oracle(self):

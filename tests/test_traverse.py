@@ -1,0 +1,206 @@
+"""Unified traversal core: invariance, kernel parity, bucketing, dispatch.
+
+The refactor's contract: every backend's read path descends through
+``repro.core.traverse`` and the result is **bit-identical** to the
+pre-refactor per-query loop (replicated here verbatim as the reference).
+Plus the serving-side guarantees that ride on it: empty batches return
+without tracing, batch sizes within one bucket never recompile, and one
+engine step commits its queued index ops as ONE fused dispatch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Index,
+    IndexSpec,
+    OP_DELETE,
+    OP_INSERT,
+    OP_LOOKUP,
+    split_u64,
+)
+from repro.core import bstree as _bs
+from repro.core import compress as _cbs
+from repro.core import index as _ix
+from repro.core import traverse
+from repro.core.succ import succ_gt
+
+BACKENDS = ("bs", "cbs", "auto")
+
+
+def _reference_descend(tree, q_hi, q_lo):
+    """The pre-refactor per-query descent loop, replicated verbatim: one
+    gather + succ_gt per level, no sorting, no dedup.  The new sorted
+    level-wise path must reproduce this bit-for-bit."""
+    node = jnp.full(q_hi.shape, tree.root, dtype=jnp.int32)
+    for _ in range(int(tree.height)):
+        rows_hi = tree.inner_hi[node]
+        rows_lo = tree.inner_lo[node]
+        c = succ_gt(rows_hi, rows_lo, q_hi, q_lo)
+        node = tree.inner_child[node, c]
+    return np.asarray(node)
+
+
+def _build(backend, rng, size=3000, n=16):
+    keys = np.unique(rng.integers(1, 2**63, size=size * 2, dtype=np.uint64))
+    keys = keys[:size]
+    vals = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    spec = IndexSpec(n=n, backend=backend)
+    ix = Index.build(keys, vals=vals if backend == "bs" else None, spec=spec)
+    return ix, keys, vals
+
+
+def _query_batches(rng, keys):
+    """The three adversarial shapes from the acceptance bar: unsorted,
+    duplicate-heavy, all-miss."""
+    present = rng.choice(keys, 200, replace=False)
+    absent = keys[:200] + np.uint64(1)
+    absent = absent[~np.isin(absent, keys)]
+    return {
+        "unsorted": rng.permutation(np.concatenate([present, absent])),
+        "dup_heavy": rng.choice(present[:16], 300, replace=True),
+        "all_miss": rng.permutation(absent),
+    }
+
+
+@pytest.mark.parametrize("backend", ("bs", "cbs"))
+def test_descend_bit_identical_to_reference(backend, rng):
+    ix, keys, _ = _build(backend, rng)
+    for name, qs in _query_batches(rng, keys).items():
+        hi, lo = split_u64(qs)
+        want = _reference_descend(ix.tree, jnp.asarray(hi), jnp.asarray(lo))
+        got = np.asarray(
+            traverse.descend(ix.tree, jnp.asarray(hi), jnp.asarray(lo)))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lookup_invariance_all_backends(backend, rng):
+    """Facade lookups through the shared traversal match set membership
+    (and stored values) on every adversarial batch shape."""
+    ix, keys, vals = _build(backend, rng)
+    val_of = dict(zip(keys.tolist(), vals.tolist()))
+    for name, qs in _query_batches(rng, keys).items():
+        found, got = ix.lookup(qs)
+        want = np.isin(qs, keys)
+        np.testing.assert_array_equal(found, want, err_msg=name)
+        if ix.supports_values:
+            for q, f, v in zip(qs.tolist(), found.tolist(), got.tolist()):
+                if f:
+                    assert v == val_of[q], name
+
+
+def test_level_stream_kernel_parity(rng):
+    """The Pallas level-stream step (interpret mode on CPU) is bit-exact
+    vs the jnp per-query gather across the full descent."""
+    ix, keys, _ = _build("bs", rng, size=5000, n=16)
+    qs = np.sort(np.concatenate(
+        [rng.choice(keys, 300, replace=True),
+         rng.integers(1, 2**63, 100, dtype=np.uint64)]))
+    hi, lo = split_u64(qs)
+    hi, lo = jnp.asarray(hi), jnp.asarray(lo)
+    want = traverse.descend_sorted(ix.tree, hi, lo, use_kernel=False)
+    got = traverse.descend_sorted(ix.tree, hi, lo, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_run_first_marks_boundaries():
+    node = jnp.asarray(np.array([3, 3, 5, 5, 5, 9], np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(traverse.run_first(node)),
+        [True, False, True, False, False, True])
+
+
+def test_bucket_size_policy():
+    assert traverse.bucket_size(1) == traverse.MIN_BUCKET
+    assert traverse.bucket_size(8) == 8
+    assert traverse.bucket_size(9) == 16
+    assert traverse.bucket_size(100) == 128
+    padded = traverse.pad_to_bucket(np.arange(5, dtype=np.uint64), 7)
+    assert padded.shape == (8,) and (padded[5:] == 7).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_batch_lookup(backend, rng):
+    ix, _, _ = _build(backend, rng, size=100)
+    found, vals = ix.lookup(np.zeros(0, np.uint64))
+    assert found.shape == (0,) and vals.shape == (0,)
+    assert found.dtype == bool
+
+
+def test_lookup_no_recompile_within_bucket(rng):
+    """Batch sizes sharing a bucket hit ONE compiled program."""
+    ix, keys, _ = _build("bs", rng, size=500)
+    before = _bs.lookup_batch._cache_size()
+    for b in (5, 6, 7, 8):
+        ix.lookup(keys[:b])
+    assert _bs.lookup_batch._cache_size() - before <= 1
+    # crossing the bucket boundary compiles exactly one more program
+    ix.lookup(keys[:9])
+    ix.lookup(keys[:16])
+    assert _bs.lookup_batch._cache_size() - before <= 2
+
+
+def test_apply_ops_no_recompile_within_bucket(rng):
+    ix, keys, _ = _build("bs", rng, size=500)
+    before = _ix._bs_apply_ops_fused._cache_size()
+    for b in (2, 3, 5, 8):
+        ops = np.full(b, OP_LOOKUP, np.int32)
+        ix, _res = ix.apply_ops(ops, keys[:b])
+    assert _ix._bs_apply_ops_fused._cache_size() - before <= 1
+
+
+def test_engine_step_single_fused_dispatch(monkeypatch):
+    """One engine step = ONE fused index dispatch: queued admissions /
+    completions commit through a single ``_bs_apply_ops_fused`` call."""
+    from repro.configs import get_config
+    from repro.models.model import init_lm
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    calls = {"n": 0}
+    real = _ix._bs_apply_ops_fused
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(_ix, "_bs_apply_ops_fused", counting)
+
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    params = init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, EngineConfig(slots=4, ctx=32, page_size=4))
+    assert eng.admit(11, prompt_token=3)
+    assert eng.admit(12, prompt_token=4)
+    assert calls["n"] == 0          # admits only enqueue
+    eng.step()
+    assert calls["n"] == 1          # both admits in one dispatch
+    eng.step()
+    assert calls["n"] == 1          # nothing queued -> no index dispatch
+    out = eng.complete(11)
+    assert calls["n"] == 2          # lookup+delete fused into one
+    assert len(out) == 2
+    assert eng.step()["active"] == 1
+    assert calls["n"] == 2
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_apply_ops_matches_sequential(backend, rng):
+    """apply_ops == lookup(pre-state) + delete + insert, on every
+    backend, including duplicate keys inside one batch."""
+    ix, keys, _ = _build(backend, rng, size=400, n=8)
+    present = rng.choice(keys, 6, replace=False)
+    newk = np.array([10, 20, 20], np.uint64)  # dup insert: last wins
+    ops = np.array([OP_LOOKUP, OP_DELETE, OP_LOOKUP, OP_INSERT,
+                    OP_INSERT, OP_INSERT, OP_DELETE, OP_LOOKUP], np.int32)
+    ks = np.array([present[0], present[1], present[1], newk[0],
+                   newk[1], newk[2], present[2], newk[0]], np.uint64)
+    ix2, res = ix.apply_ops(ops, ks)
+    # lookups read pre-batch state
+    assert res["found"][0] and res["found"][2]
+    assert not res["found"][7]  # inserted in this batch -> pre-state miss
+    assert res["stats"]["deleted"] == 2
+    found, _ = ix2.lookup(np.array(
+        [present[1], present[2], 10, 20], np.uint64))
+    np.testing.assert_array_equal(found, [False, False, True, True])
+    ix2.check_invariants()
