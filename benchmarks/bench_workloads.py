@@ -194,6 +194,37 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
         t(f"wlI_read_batch{n_q}", us, f"{n_q/us:.2f}Mqps", "I_read")
 
 
+def bench_build(dist: str, build: np.ndarray, rows: list) -> None:
+    """Workload K: construction throughput — the streamed device builder
+    (chunked ``StreamBuilder.feed``, peak host residency one chunk +
+    O(leaves) metadata) vs the legacy one-shot host encoders
+    (``bulk_load_host`` / ``cbs_bulk_load_host``, full key array + per-
+    leaf Python loop), both backends over the same sorted key set."""
+    from repro.core import StreamBuilder
+    from repro.core import bstree as B
+    from repro.core import compress as C
+
+    chunk = 1 << 17
+    for be in ("bs", "cbs"):
+        def streamed():
+            sb = StreamBuilder(backend=be, n=128)
+            for i in range(0, len(build), chunk):
+                sb.feed(build[i:i + chunk])
+            return jax.block_until_ready(sb.finalize())
+
+        legacy = ((lambda: jax.block_until_ready(
+                      B.bulk_load_host(build, n=128))) if be == "bs" else
+                  (lambda: jax.block_until_ready(
+                      C.cbs_bulk_load_host(build, n=128))))
+        for mode, fn in (("stream", streamed), ("legacy", legacy)):
+            t0 = time.perf_counter()
+            fn()
+            dt = (time.perf_counter() - t0) * 1e6
+            _emit(rows, f"wlK_build_{mode}/{be}/{dist}", dt,
+                  f"{len(build)/dt:.2f}Mkeys_per_s", backend=be,
+                  resolved=be, dist=dist, workload="K_build")
+
+
 def bench_engine_step(rows: list) -> None:
     """Workload J: fused serving engine step — decode over the slot batch
     plus a Zipf-skewed admit/complete mix, all queued index ops committed
@@ -268,6 +299,7 @@ def main(argv=None) -> None:
             for backend in backends:
                 run_backend(backend, dist, build, fresh, reads, args.ops,
                             rows)
+            bench_build(dist, build, rows)
 
             # sorted-array baseline (read-only competitor, workload A)
             qh, ql = map(jnp.asarray, split_u64(reads))

@@ -1,3 +1,5 @@
 from .ckpt import (  # noqa: F401
-    latest_step, restore, restore_resharded, save, save_async, wait_pending,
+    iter_key_stream, latest_step, restore, restore_index_streamed,
+    restore_resharded, save, save_async, save_index_stream, save_key_stream,
+    stream_total_keys, wait_pending,
 )

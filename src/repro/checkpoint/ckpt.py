@@ -38,6 +38,11 @@ def _flatten_with_paths(tree: Any):
     return flat, treedef
 
 
+def _sha(path: str) -> str:
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
 def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
     """Synchronous atomic save.  Returns the published path."""
     flat, treedef = _flatten_with_paths(tree)
@@ -56,8 +61,7 @@ def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
         # leaves as a uint8 view and record the true dtype in the manifest
         raw = arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict
         np.save(path, arr.view(np.uint8) if raw else arr)
-        with open(path, "rb") as f:
-            digest = hashlib.sha256(f.read()).hexdigest()
+        digest = _sha(path)
         manifest["leaves"].append(
             dict(index=i, shape=list(arr.shape), dtype=str(arr.dtype),
                  sha256=digest, raw=bool(raw))
@@ -123,9 +127,7 @@ def restore(directory: str, step: int, like: Any, *, verify: bool = True) -> Any
     for i, (leaf, meta) in enumerate(zip(flat_like, manifest["leaves"])):
         fp = os.path.join(path, f"arr_{i:05d}.npy")
         if verify:
-            with open(fp, "rb") as f:
-                digest = hashlib.sha256(f.read()).hexdigest()
-            assert digest == meta["sha256"], f"corrupt leaf {i} in {path}"
+            assert _sha(fp) == meta["sha256"], f"corrupt leaf {i} in {path}"
         arr = np.load(fp)
         if meta.get("raw"):
             import ml_dtypes
@@ -143,3 +145,135 @@ def restore_resharded(directory: str, step: int, like: Any, shardings: Any) -> A
     return jax.tree.map(
         lambda a, s: jax.device_put(a, s), host, shardings
     )
+
+
+# ---------------------------------------------------------------------------
+# Key-stream checkpoints: out-of-core save/recover through the streamed
+# builder.  A "key_stream" step stores the index CONTENT (sorted key
+# chunks, optionally with values) instead of the array images, so
+# recovery rebuilds through ``Index.build_streamed`` — peak host
+# residency one chunk, any node width / backend / slack on restore.
+# ---------------------------------------------------------------------------
+
+
+def save_key_stream(directory: str, step: int, chunks, *,
+                    keep: int = 3) -> str:
+    """Atomic save of an iterator of sorted u64 key chunks (each item a
+    ``keys`` array or a ``(keys, vals)`` tuple).  Chunks are written as
+    they arrive — the full key set is never materialised.  Returns the
+    published path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest: dict = {"step": step, "kind": "key_stream", "chunks": []}
+    total = 0
+    for i, chunk in enumerate(chunks):
+        if isinstance(chunk, tuple):
+            keys, vals = chunk
+        else:
+            keys, vals = chunk, None
+        keys = np.asarray(keys, dtype=np.uint64)
+        kp = os.path.join(tmp, f"chunk_{i:05d}_keys.npy")
+        np.save(kp, keys)
+        meta = dict(index=i, count=int(len(keys)),
+                    keys_sha256=_sha(kp), has_vals=vals is not None)
+        if vals is not None:
+            vp = os.path.join(tmp, f"chunk_{i:05d}_vals.npy")
+            np.save(vp, np.asarray(vals, dtype=np.uint32))
+            meta["vals_sha256"] = _sha(vp)
+        manifest["chunks"].append(meta)
+        total += len(keys)
+    manifest["total_keys"] = total
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def save_index_stream(directory: str, step: int, index, *,
+                      chunk_keys: int = 1 << 18, keep: int = 3) -> str:
+    """Checkpoint a live ``Index`` as a key stream: walk the leaf chain,
+    buffering at most ~``chunk_keys`` keys per written chunk.  Bounded
+    host residency on save AND on the streamed restore."""
+    from repro.core.layout import MAXKEY
+
+    def chunks():
+        buf_k: list = []
+        buf_v: list = []
+        held = 0
+        with_vals = index.supports_values
+        for ks, vs in index._range_leaves(np.uint64(0),
+                                          MAXKEY - np.uint64(1)):
+            if not len(ks):
+                continue
+            buf_k.append(ks)
+            if with_vals:
+                buf_v.append(vs)
+            held += len(ks)
+            if held >= chunk_keys:
+                k = np.concatenate(buf_k)
+                if with_vals:
+                    yield k, np.concatenate(buf_v)
+                else:
+                    yield k
+                buf_k, buf_v, held = [], [], 0
+        if held:
+            k = np.concatenate(buf_k)
+            if with_vals:
+                yield k, np.concatenate(buf_v)
+            else:
+                yield k
+
+    return save_key_stream(directory, step, chunks(), keep=keep)
+
+
+def iter_key_stream(directory: str, step: int, *, verify: bool = True):
+    """Generator over a saved key stream — yields the chunks in order in
+    the same ``keys`` / ``(keys, vals)`` form they were saved, one chunk
+    resident at a time.  Feed it straight to ``Index.build_streamed`` /
+    ``build_sharded(key_source=...)``."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest.get("kind") == "key_stream", (
+        f"{path} is not a key_stream checkpoint")
+    for meta in manifest["chunks"]:
+        i = meta["index"]
+        kp = os.path.join(path, f"chunk_{i:05d}_keys.npy")
+        if verify:
+            assert _sha(kp) == meta["keys_sha256"], (
+                f"corrupt key chunk {i} in {path}")
+        keys = np.load(kp)
+        assert len(keys) == meta["count"]
+        if meta["has_vals"]:
+            vp = os.path.join(path, f"chunk_{i:05d}_vals.npy")
+            if verify:
+                assert _sha(vp) == meta["vals_sha256"], (
+                    f"corrupt vals chunk {i} in {path}")
+            yield keys, np.load(vp)
+        else:
+            yield keys
+
+
+def stream_total_keys(directory: str, step: int) -> int:
+    """Total key count of a saved key stream (manifest metadata — needed
+    up front by ``build_sharded(key_source=..., total_keys=...)``)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return int(json.load(f)["total_keys"])
+
+
+def restore_index_streamed(directory: str, step: int, *, spec=None,
+                           verify: bool = True, **spec_kw):
+    """Rebuild an ``Index`` from a key-stream checkpoint through the
+    streamed builder — recovery never holds the full key set on host.
+    ``spec``/``spec_kw`` choose the rebuilt configuration (node width,
+    backend, slack); defaults rebuild with ``IndexSpec()``."""
+    from repro.core.index import Index
+
+    return Index.build_streamed(
+        iter_key_stream(directory, step, verify=verify),
+        spec=spec, **spec_kw)

@@ -35,8 +35,10 @@ from .succ import (  # noqa: F401
     succ_gt,
     succ_gt_plane,
 )
+from .build import StreamBuilder  # noqa: F401
 from .bstree import (  # noqa: F401
     bulk_load,
+    bulk_load_host,
     compact,
     delete_batch,
     descend,
@@ -49,6 +51,7 @@ from .compress import (  # noqa: F401
     CBSTreeArrays,
     build_auto,
     cbs_bulk_load,
+    cbs_bulk_load_host,
     cbs_compact,
     cbs_delete_batch,
     cbs_insert_batch,
@@ -106,8 +109,11 @@ __all__ = [
     "succ_ge_plane",
     "succ_gt",
     "succ_gt_plane",
+    # streamed out-of-core construction
+    "StreamBuilder",
     # low-level BS-tree (stable contracts; prefer Index)
     "bulk_load",
+    "bulk_load_host",
     "compact",
     "delete_batch",
     "descend",
@@ -118,6 +124,7 @@ __all__ = [
     # low-level CBS-tree (stable contracts; prefer Index)
     "build_auto",
     "cbs_bulk_load",
+    "cbs_bulk_load_host",
     "cbs_compact",
     "cbs_delete_batch",
     "cbs_insert_batch",

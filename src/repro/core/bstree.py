@@ -113,12 +113,43 @@ def bulk_load(
     alpha: float = DEFAULT_ALPHA,
     slack: float = 1.5,
 ) -> BSTreeArrays:
-    """Build a BS-tree from sorted unique u64 keys (host-side, vectorised).
+    """Build a BS-tree from sorted unique u64 keys.
 
     Leaves get ``alpha`` occupancy with interleaved gaps; alpha grows by
     ``ALPHA_LEVEL_GROWTH`` per level (paper §4.3).  ``slack`` preallocates
     extra node rows for future splits.
+
+    Thin wrapper over the streamed device-resident builder
+    (:class:`repro.core.build.StreamBuilder`) feeding one chunk — leaf
+    rows pack on device through ``ops.spread_pack_rows``, no per-leaf
+    host loop.  ``bulk_load_host`` keeps the legacy host construction as
+    the bit-identity oracle.
     """
+    keys = np.asarray(keys, dtype=np.uint64)
+    assert keys.ndim == 1
+    if len(keys) > 1:
+        assert (keys[:-1] < keys[1:]).all(), "keys must be sorted unique"
+    if vals is None:
+        vals = np.arange(len(keys), dtype=np.uint32)
+    vals = np.asarray(vals, dtype=np.uint32)
+
+    from .build import StreamBuilder
+
+    return StreamBuilder(backend="bs", n=n, alpha=alpha,
+                         slack=slack).feed(keys, vals).finalize()
+
+
+def bulk_load_host(
+    keys: np.ndarray,
+    vals: Optional[np.ndarray] = None,
+    *,
+    n: int = DEFAULT_N,
+    alpha: float = DEFAULT_ALPHA,
+    slack: float = 1.5,
+) -> BSTreeArrays:
+    """Legacy one-shot host bulk load (numpy, per-leaf scatter).  Kept as
+    the bit-identity oracle for the streamed builder; prefer
+    :func:`bulk_load`."""
     keys = np.asarray(keys, dtype=np.uint64)
     assert keys.ndim == 1
     if len(keys) > 1:
@@ -139,7 +170,7 @@ def bulk_load(
     next_leaf[: num_leaves - 1] = np.arange(1, num_leaves, dtype=np.int32)
 
     if len(keys):
-        # scatter keys into spread positions,全 vectorised:
+        # scatter keys into spread positions, fully vectorised:
         # leaf of key i = i // per_leaf; rank within leaf = i % per_leaf.
         li = np.arange(len(keys)) // per_leaf
         rank = np.arange(len(keys)) % per_leaf

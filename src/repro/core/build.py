@@ -1,0 +1,486 @@
+"""Streamed device-resident construction: chunked out-of-core bulk load.
+
+``bulk_load`` / ``cbs_bulk_load`` used to materialise the whole sorted
+key array in host numpy and loop per leaf in Python — construction was
+the last host-resident stage and capped ``Index.build`` at host memory.
+This module replaces that core with a :class:`StreamBuilder` that
+consumes sorted u64 key (and optional value) chunks of bounded size and
+packs every *finished* leaf on device as the stream flows past:
+
+* **BS** — leaf membership is purely positional (key ``i`` lands in leaf
+  ``i // per_leaf``), so each chunk's complete leaves reshape to (B, P)
+  key planes and pack in ONE device dispatch through
+  ``ops.spread_pack_rows`` (``kernels/spread_pack``): a per-slot rank
+  table (the memoised inverse of ``spread_positions``) gathers each
+  gapped slot's key, and slots past the last key keep the MAXKEY / zero
+  fill — bit-identical to the host scatter + ``_backfill_rows`` suffix
+  scan, with no per-leaf Python loop.
+
+* **CBS** — the §5 greedy narrowest-tag plan is windowed: deciding the
+  tag at rank ``i`` inspects at most the next ``take16`` keys, so chunks
+  whose full u16 window is buffered plan *exactly* as the one-shot build
+  would (``kernels/for_encode.for_fit_flags`` computes the windowed fit
+  flags on device; the greedy chunker consumes booleans only), and the
+  planned chunks re-base + pack through ``ops.for_encode_rows``.  At
+  most ``take16 - 1`` keys carry between chunks.
+
+Between chunks the builder accumulates only the per-leaf separators /
+``k0`` frames plus O(leaves) device rows — peak host residency is one
+chunk + O(leaves) metadata.  ``finalize()`` erects the inner levels with
+one jitted scatter per level (:func:`_fill_inner_level`; the grouping
+plan is host scalar arithmetic over O(leaves) separators) and returns a
+``BSTreeArrays`` / ``CBSTreeArrays`` **bit-identical** to the legacy
+one-shot host builders (``bulk_load_host`` / ``cbs_bulk_load_host``,
+kept as oracles) for any chunking of the same input — the property
+tests/test_build_stream.py proves across chunk sizes.
+
+``bulk_load`` / ``cbs_bulk_load`` are now thin wrappers feeding one
+chunk, so every existing call site builds through this path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layout import (
+    ALPHA_LEVEL_GROWTH,
+    DEFAULT_ALPHA,
+    DEFAULT_N,
+    MAXKEY,
+    MAXKEY_HI,
+    MAXKEY_LO,
+    BSTreeArrays,
+    split_u64,
+)
+
+__all__ = ["StreamBuilder", "empty_tree"]
+
+
+# ---------------------------------------------------------------------------
+# Jitted per-level inner erection
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("mp", "n"))
+def _fill_inner_level(sep_hi, sep_lo, srow, scol, crow, ccol, cval, *,
+                      mp: int, n: int):
+    """One inner level in one jitted dispatch: scatter the kept
+    separators and the child ids into fresh MAXKEY / zero rows.  All
+    index operands are power-of-two padded (pad rows carry the drop
+    sentinel ``mp``), so level-size churn compiles O(log) programs."""
+    ik_hi = jnp.full((mp, n), MAXKEY_HI, jnp.uint32
+                     ).at[srow, scol].set(sep_hi, mode="drop")
+    ik_lo = jnp.full((mp, n), MAXKEY_LO, jnp.uint32
+                     ).at[srow, scol].set(sep_lo, mode="drop")
+    ic = jnp.zeros((mp, n), jnp.int32).at[crow, ccol].set(cval, mode="drop")
+    return ik_hi, ik_lo, ic
+
+
+def _pad1(a: np.ndarray, size: int, fill=0) -> np.ndarray:
+    if len(a) == size:
+        return a
+    out = np.full(size, fill, dtype=a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+def _erect_inner(seps_u64: np.ndarray, num_children: int, n: int,
+                 alpha: float, slack: float, *,
+                 avoid_trailing_single: bool) -> dict:
+    """Erect the inner levels above ``num_children`` leaves — the
+    device-resident analogue of ``bstree.bulk_load``'s level loop
+    (``avoid_trailing_single=True``) and ``compress._build_inner_over``
+    (False; CBS never applied the trailing-1-child adjustment).  The
+    grouping plan is host scalar arithmetic; each level's array fill is
+    one jitted scatter; separators are O(leaves) host metadata."""
+    from .maintenance import _grown_cap, _pow2
+
+    seps = np.asarray(seps_u64, dtype=np.uint64)
+    plans = []  # (per_node, m, num_children_at_level)
+    a = alpha
+    nc = num_children
+    while nc > 1:
+        a = min(1.0, a + ALPHA_LEVEL_GROWTH)
+        per_node = max(2, int(round(a * (n - 1))))
+        m = -(-nc // per_node)
+        if avoid_trailing_single and m > 1 and nc - (m - 1) * per_node < 2:
+            per_node -= 1  # avoid a trailing 1-child node
+            m = -(-nc // per_node)
+        plans.append((per_node, m, nc))
+        nc = m
+
+    height = len(plans)
+    if height == 0:
+        return dict(
+            hi=jnp.full((4, n), MAXKEY_HI, jnp.uint32),
+            lo=jnp.full((4, n), MAXKEY_LO, jnp.uint32),
+            child=jnp.zeros((4, n), jnp.int32),
+            root=0, num_inner=0, height=0,
+        )
+    offs, total = [], 0
+    for _, m, _ in plans:
+        offs.append(total)
+        total += m
+
+    parts_hi, parts_lo, parts_ch = [], [], []
+    for lvl, (per_node, m, nc) in enumerate(plans):
+        si = np.arange(len(seps))
+        # separator i sits between child i and child i+1; it stays in
+        # this level iff both children share a group, else it moves up
+        keep = (si + 1) % per_node != 0
+        kept = si[keep]
+        ci = np.arange(nc)
+        base = offs[lvl - 1] if lvl > 0 else 0
+        mp = _pow2(max(m, 1))
+        sp = _pow2(max(len(kept), 1))
+        cp = _pow2(max(nc, 1))
+        sh, sl = split_u64(seps[keep])
+        ik_hi, ik_lo, ic = _fill_inner_level(
+            jnp.asarray(_pad1(sh, sp)),
+            jnp.asarray(_pad1(sl, sp)),
+            jnp.asarray(_pad1((kept // per_node).astype(np.int32), sp,
+                              fill=mp)),
+            jnp.asarray(_pad1((kept % per_node).astype(np.int32), sp)),
+            jnp.asarray(_pad1((ci // per_node).astype(np.int32), cp,
+                              fill=mp)),
+            jnp.asarray(_pad1((ci % per_node).astype(np.int32), cp)),
+            jnp.asarray(_pad1((ci + base).astype(np.int32), cp)),
+            mp=mp, n=n,
+        )
+        parts_hi.append(ik_hi[:m])
+        parts_lo.append(ik_lo[:m])
+        parts_ch.append(ic[:m])
+        seps = seps[~keep]
+
+    icap = _grown_cap(total, slack)
+    parts_hi.append(jnp.full((icap - total, n), MAXKEY_HI, jnp.uint32))
+    parts_lo.append(jnp.full((icap - total, n), MAXKEY_LO, jnp.uint32))
+    parts_ch.append(jnp.zeros((icap - total, n), jnp.int32))
+    return dict(
+        hi=jnp.concatenate(parts_hi),
+        lo=jnp.concatenate(parts_lo),
+        child=jnp.concatenate(parts_ch),
+        root=offs[-1], num_inner=total, height=height,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The streamed builder
+# ---------------------------------------------------------------------------
+
+class StreamBuilder:
+    """Out-of-core index construction from sorted unique u64 key chunks.
+
+    ``feed()`` accepts chunks in globally ascending order (strictly
+    increasing within and across chunks; violations raise) and packs
+    every completed leaf on device; ``finalize()`` erects the inner
+    levels and returns the backend tree — bit-identical to the one-shot
+    legacy host builders for any chunking of the same input.
+
+    ``backend`` is ``"bs"`` (values supported; a missing ``vals`` chunk
+    defaults to the running key ordinal, matching ``bulk_load``) or
+    ``"cbs"`` (keys only).  ``"auto"`` must be resolved by the caller
+    (``Index.build_streamed`` samples the first chunk).
+    """
+
+    def __init__(self, spec=None, *, backend: Optional[str] = None,
+                 n: Optional[int] = None, alpha: Optional[float] = None,
+                 slack: Optional[float] = None):
+        if spec is not None:  # duck-typed IndexSpec
+            backend = backend if backend is not None else spec.backend
+            n = n if n is not None else spec.n
+            alpha = alpha if alpha is not None else spec.alpha
+            slack = slack if slack is not None else spec.slack
+        self.backend = backend if backend is not None else "bs"
+        self.n = int(n) if n is not None else DEFAULT_N
+        self.alpha = float(alpha) if alpha is not None else DEFAULT_ALPHA
+        self.slack = float(slack) if slack is not None else 1.5
+        if self.backend not in ("bs", "cbs"):
+            raise ValueError(
+                f"StreamBuilder supports backends 'bs'/'cbs', not "
+                f"{self.backend!r} (resolve 'auto' first, e.g. via "
+                f"Index.build_streamed)")
+        from .compress import TAG_U16, _take_sizes
+
+        self._per_leaf = max(1, int(round(self.alpha * self.n)))
+        self._take16 = _take_sizes(self.n, self.alpha)[TAG_U16]
+        self._carry_k = np.zeros(0, np.uint64)
+        self._carry_v = np.zeros(0, np.uint32)
+        self._chunks: list = []   # device leaf payloads (+ real row counts)
+        self._k0s: list = []      # host u64 separator / frame accumulators
+        self._leaves = 0
+        self._keys_fed = 0
+        self._last_key: Optional[int] = None
+        self._done = False
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def keys_fed(self) -> int:
+        return self._keys_fed
+
+    @property
+    def leaves_emitted(self) -> int:
+        """Leaves already packed on device (the carry may add more)."""
+        return self._leaves
+
+    # -- feeding ---------------------------------------------------------
+    def feed(self, keys: np.ndarray,
+             vals: Optional[np.ndarray] = None) -> "StreamBuilder":
+        """Absorb one sorted chunk.  Returns ``self`` (chainable)."""
+        if self._done:
+            raise RuntimeError("StreamBuilder already finalized")
+        keys = np.asarray(keys, dtype=np.uint64)
+        if keys.ndim != 1:
+            raise ValueError("keys chunk must be 1-D")
+        if len(keys) == 0:
+            return self
+        if len(keys) > 1 and not (keys[:-1] < keys[1:]).all():
+            raise ValueError("chunk keys must be sorted strictly increasing")
+        if self._last_key is not None and not keys[0] > self._last_key:
+            raise ValueError(
+                "chunks must arrive in globally ascending key order")
+        if self.backend == "cbs":
+            if vals is not None:
+                raise ValueError("cbs backend is keys-only; drop vals")
+        else:
+            if vals is None:
+                # same default as the legacy bulk_load: the key ordinal
+                vals = np.arange(
+                    self._keys_fed, self._keys_fed + len(keys),
+                    dtype=np.uint64).astype(np.uint32)
+            vals = np.asarray(vals, dtype=np.uint32)
+            if vals.shape != keys.shape:
+                raise ValueError("vals chunk must align with keys")
+        self._last_key = keys[-1]
+        self._keys_fed += len(keys)
+
+        if self.backend == "bs":
+            self._feed_bs(keys, vals)
+        else:
+            self._feed_cbs(keys)
+        return self
+
+    # -- BS: positional leaves, spread-scatter pack ----------------------
+    def _feed_bs(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        avail_k = np.concatenate([self._carry_k, keys])
+        avail_v = np.concatenate([self._carry_v, vals])
+        p = self._per_leaf
+        m = len(avail_k) // p
+        if m:
+            full = m * p
+            self._emit_bs_rows(avail_k[:full].reshape(m, p),
+                               avail_v[:full].reshape(m, p))
+            self._k0s.append(avail_k[0:full:p].copy())
+        self._carry_k = avail_k[m * p:].copy()
+        self._carry_v = avail_v[m * p:].copy()
+
+    def _emit_bs_rows(self, k2d: np.ndarray, v2d: np.ndarray,
+                      count: Optional[int] = None) -> None:
+        """Pack (B, P) chunk rows into gapped (B, N) leaf rows in one
+        device dispatch.  ``count`` overrides the per-row key count for
+        the final partial leaf (rows are MAXKEY / zero padded to P)."""
+        from repro.kernels import ops
+        from .compress import _slot_ranks_cached
+        from .maintenance import _pow2
+
+        m = k2d.shape[0]
+        c = self._per_leaf if count is None else count
+        mp = _pow2(max(m, 1))
+        if mp != m:
+            pad = mp - m
+            k2d = np.concatenate(
+                [k2d, np.full((pad, k2d.shape[1]), MAXKEY, np.uint64)])
+            v2d = np.concatenate(
+                [v2d, np.zeros((pad, v2d.shape[1]), np.uint32)])
+        hi, lo = split_u64(k2d)
+        # slot -> rank of the first key at or right of it (rank == c for
+        # "none": those slots keep the MAXKEY / zero fill in the kernel)
+        rank = np.broadcast_to(
+            _slot_ranks_cached(c, self.n, self.alpha).astype(np.int32),
+            (mp, self.n))
+        out_hi, out_lo, out_v = ops.spread_pack_rows(
+            jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(v2d),
+            jnp.asarray(rank))
+        # trim the pow2 pad rows now: what accumulates between chunks is
+        # exactly the real leaf payload, not the dispatch-bucket shape
+        self._chunks.append((out_hi[:m], out_lo[:m], out_v[:m], m))
+        self._leaves += m
+
+    # -- CBS: windowed greedy plan, device FOR encode --------------------
+    def _feed_cbs(self, keys: np.ndarray) -> None:
+        avail = np.concatenate([self._carry_k, keys])
+        consumed = self._emit_cbs(avail, final=False)
+        self._carry_k = avail[consumed:].copy()
+
+    def _emit_cbs(self, avail: np.ndarray, *, final: bool) -> int:
+        """Plan + pack every chunk whose greedy decision is already
+        exact (mid-stream: full u16 lookahead window buffered; final:
+        everything).  Returns the number of keys consumed."""
+        from repro.kernels import ops
+        from . import compress as C
+        from .maintenance import _pow2
+
+        cnt = len(avail)
+        stop = cnt if final else cnt - self._take16 + 1
+        if cnt == 0 or stop <= 0:
+            return 0
+        takes = C._take_sizes(self.n, self.alpha)
+        hi, lo = split_u64(avail)
+        wp = _pow2(cnt)
+        dense_hi = jnp.asarray(_pad1(hi, wp, fill=MAXKEY_HI)[None, :])
+        dense_lo = jnp.asarray(_pad1(lo, wp, fill=MAXKEY_LO)[None, :])
+        f16, f32 = ops.for_fit_flags(
+            dense_hi, dense_lo, jnp.asarray(np.array([cnt], np.int32)),
+            take16=takes[C.TAG_U16], take32=takes[C.TAG_U32])
+        f16 = np.asarray(f16)[0]
+        f32 = np.asarray(f32)[0]
+        chunks = []
+        i = 0
+        while i < stop:  # same boundary/tag decisions as _greedy_chunks
+            if f16[i]:
+                tag = C.TAG_U16
+            elif f32[i]:
+                tag = C.TAG_U32
+            else:
+                tag = C.TAG_U64
+            c = min(takes[tag], cnt - i)
+            chunks.append((i, c, tag))
+            i += c
+        if not chunks:
+            return 0
+        rank, in_row, ctags = C._encode_slot_tables(chunks, self.n,
+                                                    self.alpha)
+        words, k0h, k0l, tags_dev, k0 = C._device_reencode(
+            dense_hi, dense_lo, np.zeros(len(chunks), np.int64), rank,
+            in_row, ctags)
+        r = len(chunks)
+        # trim the pow2 pad rows now: what accumulates between chunks is
+        # exactly the real leaf payload, not the dispatch-bucket shape
+        self._chunks.append((words[:r], k0h[:r], k0l[:r], tags_dev[:r], r))
+        self._k0s.append(k0)
+        self._leaves += len(chunks)
+        return i
+
+    # -- finalize --------------------------------------------------------
+    def finalize(self):
+        """Erect the inner levels and return the finished tree
+        (``BSTreeArrays`` or ``CBSTreeArrays``).  One-shot."""
+        if self._done:
+            raise RuntimeError("StreamBuilder already finalized")
+        self._done = True
+        if self.backend == "bs":
+            return self._finalize_bs()
+        return self._finalize_cbs()
+
+    def _finalize_bs(self) -> BSTreeArrays:
+        from .maintenance import _grown_cap
+
+        n, p = self.n, self._per_leaf
+        c = len(self._carry_k)
+        if c:
+            row_k = np.full((1, p), MAXKEY, np.uint64)
+            row_v = np.zeros((1, p), np.uint32)
+            row_k[0, :c] = self._carry_k
+            row_v[0, :c] = self._carry_v
+            self._emit_bs_rows(row_k, row_v, count=c)
+            self._k0s.append(self._carry_k[:1].copy())
+            self._carry_k = self._carry_k[:0]
+            self._carry_v = self._carry_v[:0]
+
+        num_leaves = max(1, self._leaves)
+        lcap = _grown_cap(num_leaves, self.slack)
+        parts_hi = [h[:m] for h, _, _, m in self._chunks]
+        parts_lo = [lo_[:m] for _, lo_, _, m in self._chunks]
+        parts_v = [v[:m] for _, _, v, m in self._chunks]
+        pad = lcap - self._leaves
+        parts_hi.append(jnp.full((pad, n), MAXKEY_HI, jnp.uint32))
+        parts_lo.append(jnp.full((pad, n), MAXKEY_LO, jnp.uint32))
+        parts_v.append(jnp.zeros((pad, n), jnp.uint32))
+        self._chunks.clear()
+        iota = jnp.arange(lcap, dtype=jnp.int32)
+        next_leaf = jnp.where(iota < num_leaves - 1, iota + 1, -1)
+        k0s = (np.concatenate(self._k0s) if self._k0s
+               else np.zeros(0, np.uint64))
+        inner = _erect_inner(k0s[1:], num_leaves, n, self.alpha, self.slack,
+                             avoid_trailing_single=True)
+        return BSTreeArrays(
+            leaf_hi=jnp.concatenate(parts_hi),
+            leaf_lo=jnp.concatenate(parts_lo),
+            leaf_val=jnp.concatenate(parts_v),
+            next_leaf=next_leaf,
+            inner_hi=inner["hi"],
+            inner_lo=inner["lo"],
+            inner_child=inner["child"],
+            root=jnp.asarray(inner["root"], jnp.int32),
+            num_leaves=jnp.asarray(num_leaves, jnp.int32),
+            num_inner=jnp.asarray(inner["num_inner"], jnp.int32),
+            height=inner["height"],
+            node_width=n,
+        )
+
+    def _finalize_cbs(self):
+        from . import compress as C
+        from .maintenance import _grown_cap
+
+        n = self.n
+        if len(self._carry_k):
+            self._emit_cbs(self._carry_k, final=True)
+            self._carry_k = self._carry_k[:0]
+        if self._leaves == 0:
+            # empty tree: ONE empty u64 leaf, still encoded on device
+            # (all-False in_row -> all-sentinel words, k0 = 0) — no
+            # _pack_leaf host encode anywhere on this path
+            zero = jnp.zeros((1, 1), jnp.uint32)
+            payload = C._device_reencode(
+                zero, zero, np.zeros(1, np.int64),
+                np.zeros((1, 4 * n), np.int32), np.zeros((1, 4 * n), bool),
+                np.full(1, C.TAG_U64, np.int32))
+            words, k0h, k0l, tags_dev, k0 = payload
+            self._chunks.append((words, k0h, k0l, tags_dev, 1))
+            self._k0s.append(k0)
+            self._leaves = 1
+
+        num_leaves = self._leaves
+        # no pow2 pad here: _assemble_leaves scatters by row id (extra
+        # rows would just drop), its compile is keyed on the build-unique
+        # lcap anyway, and skipping the pad keeps the finalize transient
+        # at ~2x the leaf payload — what the RSS-capped out-of-core test
+        # budgets for
+        words = jnp.concatenate([w[:r] for w, _, _, _, r in self._chunks])
+        k0h = jnp.concatenate([x[:r] for _, x, _, _, r in self._chunks])
+        k0l = jnp.concatenate([x[:r] for _, _, x, _, r in self._chunks])
+        tags = jnp.concatenate([t[:r] for _, _, _, t, r in self._chunks])
+        self._chunks.clear()
+        lcap = _grown_cap(num_leaves, self.slack)
+        lw, lt, lk0h, lk0l, nxt = C._assemble_leaves(
+            words, k0h, k0l, tags, num_leaves, lcap=lcap, n=n)
+        k0s = np.concatenate(self._k0s)
+        inner = _erect_inner(k0s[1:], num_leaves, n, self.alpha, self.slack,
+                             avoid_trailing_single=False)
+        return C.CBSTreeArrays(
+            leaf_words=lw,
+            leaf_k0_hi=lk0h,
+            leaf_k0_lo=lk0l,
+            leaf_tag=lt,
+            next_leaf=nxt,
+            inner_hi=inner["hi"],
+            inner_lo=inner["lo"],
+            inner_child=inner["child"],
+            root=jnp.asarray(inner["root"], jnp.int32),
+            num_leaves=jnp.asarray(num_leaves, jnp.int32),
+            num_inner=jnp.asarray(inner["num_inner"], jnp.int32),
+            height=inner["height"],
+            node_width=n,
+        )
+
+
+def empty_tree(backend: str, *, n: int = DEFAULT_N,
+               alpha: float = DEFAULT_ALPHA, slack: float = 1.5):
+    """A zero-key tree built through the device path (the maintenance
+    empty-compact edge uses this instead of a host ``_pack_leaf``)."""
+    return StreamBuilder(backend=backend, n=n, alpha=alpha,
+                         slack=slack).finalize()

@@ -63,6 +63,7 @@ __all__ = [
     "CBSTreeArrays",
     "decide",
     "cbs_bulk_load",
+    "cbs_bulk_load_host",
     "cbs_lookup_batch",
     "cbs_lookup_u64",
     "cbs_insert_batch",
@@ -214,7 +215,34 @@ def cbs_bulk_load(
     slack: float = 1.5,
 ) -> CBSTreeArrays:
     """One pass over sorted keys; each leaf takes the narrowest delta width
-    that fits 75%-occupancy-many keys (paper §5 Tree construction)."""
+    that fits 75%-occupancy-many keys (paper §5 Tree construction).
+
+    Thin wrapper over the streamed device-resident builder
+    (:class:`repro.core.build.StreamBuilder`) feeding one chunk — the
+    greedy plan consumes device fit flags and the blocks pack through
+    ``ops.for_encode_rows``, no host ``_pack_leaf``.  ``cbs_bulk_load_host``
+    keeps the legacy host encoder as the bit-identity oracle.
+    """
+    keys = np.asarray(keys, dtype=np.uint64)
+    assert keys.ndim == 1
+    if len(keys) > 1:
+        assert (keys[:-1] < keys[1:]).all(), "keys must be sorted unique"
+    from .build import StreamBuilder
+
+    return StreamBuilder(backend="cbs", n=n, alpha=alpha,
+                         slack=slack).feed(keys).finalize()
+
+
+def cbs_bulk_load_host(
+    keys: np.ndarray,
+    *,
+    n: int = DEFAULT_N,
+    alpha: float = DEFAULT_ALPHA,
+    slack: float = 1.5,
+) -> CBSTreeArrays:
+    """Legacy one-shot host bulk load (``_pack_leaf`` per leaf).  Kept as
+    the bit-identity oracle for the streamed builder; prefer
+    :func:`cbs_bulk_load`."""
     keys = np.asarray(keys, dtype=np.uint64)
     leaves = [(tag, words, k0)
               for tag, words, k0, _ in _for_chunks(keys, n, alpha)]
@@ -228,6 +256,8 @@ def cbs_bulk_load(
 
     lcap = _grown_cap(num_leaves, slack)
     leaf_words = np.zeros((lcap, 2 * n), dtype=np.uint32)
+    # empty preallocated rows are all-MAXKEY blocks (what _pack_leaf of
+    # zero keys encodes): one broadcast fill, no per-leaf loop
     leaf_words[num_leaves:] = 0xFFFFFFFF
     leaf_tag = np.full((lcap,), TAG_U64, dtype=np.int32)
     k0s = np.zeros((lcap,), dtype=np.uint64)
@@ -235,9 +265,6 @@ def cbs_bulk_load(
         leaf_words[li] = words
         leaf_tag[li] = tag
         k0s[li] = k0
-    # empty preallocated u64 leaves: all-MAXKEY blocks
-    for li in range(num_leaves, lcap):
-        leaf_words[li] = _pack_leaf(np.zeros(0, np.uint64), TAG_U64, n, alpha)
     next_leaf = np.full((lcap,), -1, dtype=np.int32)
     next_leaf[: num_leaves - 1] = np.arange(1, num_leaves, dtype=np.int32)
 
@@ -1070,8 +1097,11 @@ def cbs_compact(tree: CBSTreeArrays, *, min_occupancy: float = 0.5,
     src_flat = chain[flat // w16] * w16 + flat % w16
     total = len(src_flat)
     if total == 0:
-        new = cbs_bulk_load(np.zeros(0, np.uint64), n=n, alpha=alpha,
-                            slack=slack)
+        # empty tree: encode the single empty leaf on device too — no
+        # _pack_leaf host encode anywhere on the maintenance path
+        from .build import empty_tree
+
+        new = empty_tree("cbs", n=n, alpha=alpha, slack=slack)
     else:
         wp = _pow2(total)
         src = np.zeros(wp, np.int64)
@@ -1147,7 +1177,7 @@ def cbs_host_compact(tree: CBSTreeArrays, *, min_occupancy: float = 0.5,
     # the chain walk (without decoding every leaf a second time)
     keys = (np.sort(np.concatenate(decoded)) if decoded
             else np.zeros(0, np.uint64))
-    new = cbs_bulk_load(keys, n=n, alpha=alpha)
+    new = cbs_bulk_load_host(keys, n=n, alpha=alpha)
     counters["leaves_after"] = int(new.num_leaves)
     counters["compacted"] = True
     counters["reclaimed_bytes"] = max(
@@ -1204,7 +1234,7 @@ def _cbs_host_rebuild(tree: CBSTreeArrays, new_keys: np.ndarray) -> CBSTreeArray
     utility (tests assert the insert path never calls it)."""
     keys = cbs_items(tree)
     merged = np.unique(np.concatenate([keys, new_keys.astype(np.uint64)]))
-    return cbs_bulk_load(merged, n=tree.node_width)
+    return cbs_bulk_load_host(merged, n=tree.node_width)
 
 
 def build_auto(keys: np.ndarray, *, n: int = DEFAULT_N, alpha: float = DEFAULT_ALPHA):

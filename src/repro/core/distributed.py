@@ -186,14 +186,16 @@ def _shard_tree(st: ShardedBSTree, s: int):
 
 
 def build_sharded(
-    keys: np.ndarray,
-    num_shards: int,
+    keys: Optional[np.ndarray] = None,
+    num_shards: int = 1,
     *,
     vals: Optional[np.ndarray] = None,
     n: int = 128,
     alpha: float = 0.75,
     backend: str = "bs",
     slack: float = 1.5,
+    key_source=None,
+    total_keys: Optional[int] = None,
 ) -> ShardedBSTree:
     """Equal-count range partition of sorted unique u64 keys into
     ``num_shards`` local trees with uniform static shapes.
@@ -201,7 +203,29 @@ def build_sharded(
     ``backend`` is any registered backend name or ``"auto"`` (the §6
     decision mechanism, applied once to the whole key set so all shards
     agree).  Keys-only backends reject ``vals``.
+
+    ``key_source`` (exclusive with ``keys``/``vals``) bootstraps the
+    shards out-of-core: an iterator of sorted u64 chunks is routed into
+    per-shard :class:`repro.core.build.StreamBuilder`\\ s at the
+    equal-count boundaries implied by ``total_keys`` (required), so the
+    full dataset never materialises on host — bit-identical to the
+    one-shot build of the concatenated keys (``backend="auto"`` resolves
+    on the first chunk instead of the full set).
     """
+    if key_source is not None:
+        if keys is not None or vals is not None:
+            raise ValueError(
+                "pass either a keys array or key_source=, not both "
+                "(streamed shard bootstrap is keys-only)")
+        if total_keys is None:
+            raise ValueError(
+                "streamed build_sharded needs total_keys= to place the "
+                "equal-count shard boundaries up front")
+        return _build_sharded_streamed(
+            key_source, int(total_keys), num_shards,
+            n=n, alpha=alpha, backend=backend, slack=slack)
+    if keys is None:
+        raise ValueError("build_sharded needs keys (or key_source=)")
     keys = np.asarray(keys, dtype=np.uint64)
     backend = resolve_backend(backend, keys, n, has_values=vals is not None)
     impl = get_backend(backend)
@@ -229,6 +253,71 @@ def build_sharded(
     return ShardedBSTree(
         trees=trees, fence_hi=jnp.asarray(fhi), fence_lo=jnp.asarray(flo),
         num_shards=num_shards, backend=backend, alpha=alpha,
+        slack=slack,
+    )
+
+
+def _build_sharded_streamed(key_source, total_keys: int, num_shards: int,
+                            *, n: int, alpha: float, backend: str,
+                            slack: float) -> ShardedBSTree:
+    """Streamed shard bootstrap: route sorted chunks into per-shard
+    StreamBuilders at the equal-count boundaries of ``total_keys`` keys.
+    The last shard absorbs any keys past ``total_keys``; peak host
+    residency is one chunk + O(leaves) metadata per shard."""
+    from .build import StreamBuilder
+    from .index import _default_vals
+
+    bounds = [total_keys * s // num_shards for s in range(num_shards + 1)]
+    builders: list = [None] * num_shards
+    fences = np.full(num_shards, MAXKEY, dtype=np.uint64)
+    name = backend
+    spec = None
+    off = 0
+    for chunk in key_source:
+        chunk = np.asarray(chunk, dtype=np.uint64)
+        if len(chunk) == 0:
+            continue
+        if spec is None:
+            name = resolve_backend(name, chunk, n, has_values=False)
+            spec = IndexSpec(n=n, alpha=alpha, backend=name, slack=slack)
+        start, end = off, off + len(chunk)
+        s = max(0, min(num_shards - 1,
+                       int(np.searchsorted(bounds, start, side="right")) - 1))
+        while start < end:
+            stop = end if s == num_shards - 1 else min(end, bounds[s + 1])
+            sl = chunk[start - off: stop - off]
+            if len(sl):
+                if builders[s] is None:
+                    builders[s] = StreamBuilder(
+                        backend=name, n=n, alpha=alpha, slack=slack)
+                    fences[s] = sl[0]
+                vals = (_default_vals(sl)
+                        if get_backend(name).supports_values else None)
+                builders[s].feed(sl, vals)
+            start = stop
+            s += 1
+        off = end
+    if spec is None:  # empty stream
+        name = resolve_backend(name, np.zeros(0, np.uint64), n,
+                               has_values=False)
+    parts = [
+        (b.finalize() if b is not None
+         else StreamBuilder(backend=name, n=n, alpha=alpha,
+                            slack=slack).finalize())
+        for b in builders
+    ]
+    trees = _stack_trees(parts, slack=slack)
+    # empty shards adopt the next shard's fence (keeps fences sorted for
+    # routing — same as the one-shot keys[bounds[s]] choice)
+    for s in range(num_shards - 2, -1, -1):
+        if builders[s] is None:
+            fences[s] = fences[s + 1]
+    if off:
+        fences[0] = 0  # shard 0 catches everything below the first key
+    fhi, flo = split_u64(fences)
+    return ShardedBSTree(
+        trees=trees, fence_hi=jnp.asarray(fhi), fence_lo=jnp.asarray(flo),
+        num_shards=num_shards, backend=name, alpha=alpha,
         slack=slack,
     )
 

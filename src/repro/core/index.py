@@ -433,15 +433,29 @@ class Index:
 
     # -- construction ----------------------------------------------------
     @classmethod
-    def build(cls, keys: np.ndarray, vals: Optional[np.ndarray] = None,
-              spec: Optional[IndexSpec] = None, **spec_kw) -> "Index":
+    def build(cls, keys: Optional[np.ndarray] = None,
+              vals: Optional[np.ndarray] = None,
+              spec: Optional[IndexSpec] = None, *,
+              key_source=None, **spec_kw) -> "Index":
         """Build an index from u64 keys (sorted or not; duplicates keep
         the last value).  ``spec.backend="auto"`` applies the paper §6
         decision mechanism; when ``vals`` are supplied, auto restricts
         itself to value-bearing backends.  A missing ``vals`` on a
         value-bearing backend stores each key's low 32 bits — the same
         default as :meth:`insert`.
+
+        ``key_source`` (keyword-only, exclusive with ``keys``/``vals``)
+        streams the input instead: an iterator of sorted chunks consumed
+        by :meth:`build_streamed`, so the full key array never
+        materialises on host.
         """
+        if key_source is not None:
+            if keys is not None or vals is not None:
+                raise ValueError(
+                    "pass either keys/vals arrays or key_source=, not both")
+            return cls.build_streamed(key_source, spec=spec, **spec_kw)
+        if keys is None:
+            raise ValueError("build needs keys (or key_source=)")
         if spec is None:
             spec = IndexSpec(**spec_kw)
         elif spec_kw:
@@ -465,6 +479,58 @@ class Index:
                 f"backend {name!r} is keys-only; drop vals or use 'bs'")
         return cls(tree=impl.build(keys_u, vals_u, spec), backend=name,
                    spec=spec)
+
+    @classmethod
+    def build_streamed(cls, key_source,
+                       spec: Optional[IndexSpec] = None, **spec_kw
+                       ) -> "Index":
+        """Out-of-core build: consume an iterator of sorted u64 key
+        chunks (each item either a ``keys`` array or a ``(keys, vals)``
+        tuple) through :class:`repro.core.build.StreamBuilder`, packing
+        finished leaves on device as chunks arrive — peak host residency
+        is one chunk plus O(leaves) metadata, never the full key set.
+
+        Unlike :meth:`build`, chunks must already be globally sorted and
+        unique (strictly increasing within and across chunks; the
+        builder raises otherwise).  ``backend="auto"`` resolves the §6
+        decision on the FIRST chunk's distribution.  A value-bearing
+        backend with no vals in a chunk stores each key's low 32 bits —
+        the same default as :meth:`build` / :meth:`insert`.  The result
+        is bit-identical to the one-shot :meth:`build` of the
+        concatenated input.
+        """
+        from .build import StreamBuilder
+
+        if spec is None:
+            spec = IndexSpec(**spec_kw)
+        elif spec_kw:
+            spec = dataclasses.replace(spec, **spec_kw)
+        builder: Optional[StreamBuilder] = None
+        name = spec.backend
+        for chunk in key_source:
+            if isinstance(chunk, tuple):
+                keys_c, vals_c = chunk
+            else:
+                keys_c, vals_c = chunk, None
+            keys_c = np.asarray(keys_c, dtype=np.uint64)
+            if builder is None:
+                name = resolve_backend(name, keys_c, spec.n,
+                                       has_values=vals_c is not None)
+                impl = get_backend(name)
+                if vals_c is not None and not impl.supports_values:
+                    raise ValueError(
+                        f"backend {name!r} is keys-only; drop vals or "
+                        f"use 'bs'")
+                builder = StreamBuilder(backend=name, n=spec.n,
+                                        alpha=spec.alpha, slack=spec.slack)
+            if vals_c is None and get_backend(name).supports_values:
+                vals_c = _default_vals(keys_c)
+            builder.feed(keys_c, vals_c)
+        if builder is None:  # empty source: resolve on an empty key set
+            name = resolve_backend(name, np.zeros(0, np.uint64), spec.n)
+            builder = StreamBuilder(backend=name, n=spec.n,
+                                    alpha=spec.alpha, slack=spec.slack)
+        return cls(tree=builder.finalize(), backend=name, spec=spec)
 
     @classmethod
     def wrap(cls, tree: Any, spec: Optional[IndexSpec] = None) -> "Index":

@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.core.layout import BSTreeArrays, split_u64
 from . import (for_encode, for_succ, gather_succ, leaf_insert, leaf_split,
-               level_stream as _level_stream, succ_kernel)
+               level_stream as _level_stream, spread_pack as _spread_pack,
+               succ_kernel)
 
 
 def _interp() -> bool:
@@ -107,6 +108,20 @@ def for_encode_rows(key_hi, key_lo, in_row, tag, *, use_kernel=None, **kw):
         kw.setdefault("interpret", _interp())
         return for_encode.for_encode_pack(key_hi, key_lo, in_row, tag, **kw)
     return for_encode.for_encode_jnp(key_hi, key_lo, in_row, tag)
+
+
+def spread_pack_rows(key_hi, key_lo, vals, rank, *, use_kernel=None, **kw):
+    """Device spread-scatter leaf pack (streamed bulk load): gather each
+    output slot's ranked chunk key into a gapped (B, N) row, MAXKEY /
+    zero-fill past the last key (tables built by ``core.build``; same
+    rank convention as ``compress._slot_ranks_cached``).  Dispatches to
+    the Pallas kernel on TPU and the jitted jnp reference elsewhere."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        kw.setdefault("interpret", _interp())
+        return _spread_pack.spread_pack(key_hi, key_lo, vals, rank, **kw)
+    return _spread_pack.spread_pack_jnp(key_hi, key_lo, vals, rank)
 
 
 def for_fit_flags(key_hi, key_lo, cnt, *, take16: int, take32: int):

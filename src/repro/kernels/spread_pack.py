@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: spread-scatter leaf pack (streamed bulk load).
+
+The device half of ``core.build``'s BS leaf packer: a chunk of sorted
+keys arrives as (B, P) row-major planes — row ``b`` holds the ``P`` keys
+of output leaf ``b`` — and every output slot ``i`` of the gapped (B, N)
+row is described by a *rank table*: ``rank[b, i]`` is the index of the
+key whose ``spread_positions`` slot is the first at or right of ``i``
+(the exact inverse of ``bulk_load``'s scatter + ``_backfill_rows``
+suffix fill, shared with ``compress._slot_ranks_cached``).  Slots whose
+rank is past the row's key count keep the MAXKEY / zero-value fill, so
+the gap-duplication invariant holds by construction.
+
+Like :mod:`.leaf_split`, selection by rank avoids cross-lane variable
+shuffles: the kernel sweeps the ``P`` source columns once with a static
+loop of one-hot predicated selects — ``P`` lane-static vector ops:
+
+    pick[:, i] = (rank[:, i] == j)
+    acc        = select(pick, broadcast(col j), acc)
+
+Ranks are strictly increasing per row, so each output lane matches at
+most one column.  Rows shorter than ``P`` keys pad their key columns
+with MAXKEY (values 0): a tail slot ranking the first pad column then
+reproduces the host builder's "no subsequent key" fill exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_MAX32 = np.uint32(0xFFFFFFFF)
+
+
+def _spread_pack_kernel(khi_ref, klo_ref, val_ref, rank_ref,
+                        ohi_ref, olo_ref, oval_ref):
+    khi, klo, vals = khi_ref[...], klo_ref[...], val_ref[...]
+    rank = rank_ref[...]
+    p = khi.shape[1]
+
+    acc_hi = jnp.full(rank.shape, _MAX32, jnp.uint32)
+    acc_lo = jnp.full(rank.shape, _MAX32, jnp.uint32)
+    acc_v = jnp.zeros(rank.shape, jnp.uint32)
+    # one static sweep of one-hot predicated selects (no lane gathers)
+    for j in range(p):
+        pick = rank == j
+        acc_hi = jnp.where(pick, khi[:, j : j + 1], acc_hi)
+        acc_lo = jnp.where(pick, klo[:, j : j + 1], acc_lo)
+        acc_v = jnp.where(pick, vals[:, j : j + 1], acc_v)
+    ohi_ref[...] = acc_hi
+    olo_ref[...] = acc_lo
+    oval_ref[...] = acc_v
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spread_pack(
+    key_hi, key_lo,  # (B, P) uint32: chunk key planes, MAXKEY-padded rows
+    vals,            # (B, P) uint32: chunk values (0-padded)
+    rank,            # (B, N) int32: output slot -> source key index (P = none)
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+):
+    """Pack ``B`` gapped leaf rows in one launch.  Returns
+    ``(out_hi, out_lo, out_val)`` — (B, N) planes, bit-identical to the
+    host ``bulk_load`` scatter + backfill for the same rank tables."""
+    b, p = key_hi.shape
+    n = rank.shape[1]
+    tb = min(block_rows, max(b, 1))
+    pad = (-b) % tb
+    if pad:
+        padk = ((0, pad), (0, 0))
+        key_hi = jnp.pad(key_hi, padk, constant_values=_MAX32)
+        key_lo = jnp.pad(key_lo, padk, constant_values=_MAX32)
+        vals = jnp.pad(vals, padk)
+        rank = jnp.pad(rank, padk, constant_values=p)
+    bp = key_hi.shape[0]
+    in_spec = pl.BlockSpec((tb, p), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tb, n), lambda i: (i, 0))
+    ohi, olo, oval = pl.pallas_call(
+        _spread_pack_kernel,
+        grid=(bp // tb,),
+        in_specs=[in_spec, in_spec, in_spec, out_spec],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+            jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(key_hi, key_lo, vals, rank.astype(jnp.int32))
+    return ohi[:b], olo[:b], oval[:b]
+
+
+@jax.jit
+def spread_pack_jnp(key_hi, key_lo, vals, rank):
+    """jnp reference path — same contract as :func:`spread_pack`, used
+    off-TPU (and as the kernel's parity oracle in tests)."""
+    p = key_hi.shape[1]
+    rc = jnp.clip(rank, 0, p - 1)
+    g_hi = jnp.take_along_axis(key_hi, rc, axis=1)
+    g_lo = jnp.take_along_axis(key_lo, rc, axis=1)
+    g_v = jnp.take_along_axis(vals, rc, axis=1)
+    in_p = rank < p
+    out_hi = jnp.where(in_p, g_hi, _MAX32)
+    out_lo = jnp.where(in_p, g_lo, _MAX32)
+    out_v = jnp.where(in_p, g_v, 0)
+    return out_hi, out_lo, out_v

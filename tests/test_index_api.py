@@ -39,13 +39,22 @@ def backend(request):
     return request.param
 
 
-@pytest.fixture
-def loaded(rng, backend):
+@pytest.fixture(params=["oneshot", "streamed"])
+def loaded(rng, backend, request):
+    """The whole conformance battery runs twice per backend: once over
+    the one-shot ``Index.build`` and once over the chunked
+    ``Index.build_streamed`` (which must be indistinguishable)."""
     keys = clustered(rng)
     vals = np.arange(len(keys), dtype=np.uint32)
     use_vals = backend == "bs"  # keys-only backends build without vals
-    idx = Index.build(keys, vals if use_vals else None,
-                      spec=IndexSpec(n=N, backend=backend))
+    spec = IndexSpec(n=N, backend=backend)
+    if request.param == "streamed":
+        kc = np.array_split(keys, 9)
+        vc = np.array_split(vals, 9)
+        source = (zip(kc, vc) if use_vals else iter(kc))
+        idx = Index.build_streamed(source, spec=spec)
+    else:
+        idx = Index.build(keys, vals if use_vals else None, spec=spec)
     oracle = ReferenceBSTree.bulk_load(keys, vals, n=N)
     return idx, oracle, keys, vals
 

@@ -341,15 +341,17 @@ def _ban_full_roundtrip(monkeypatch):
 
 
 def _ban_host_reencode(monkeypatch):
-    """Make any host leaf-block decode on the update/compact path a test
-    failure — the PR 5 tentpole closes the last two host paths (the
-    out-of-frame FOR re-encode and ``cbs_compact``), so neither
-    ``_leaf_keys_host`` nor ``cbs_to_host`` may run there."""
+    """Make any host leaf-block decode OR encode on the update/compact
+    path a test failure — the PR 5 tentpole closed the host decode paths
+    (out-of-frame FOR re-encode, ``cbs_compact``), and the streamed
+    builder closed the last host *encode* (``_pack_leaf``, formerly the
+    empty-tree compact edge), so none of the three may run there."""
     def boom(*a, **k):  # pragma: no cover - failure path
-        raise AssertionError("host leaf decode on the update/compact path")
+        raise AssertionError("host leaf codec on the update/compact path")
 
     monkeypatch.setattr(C, "_leaf_keys_host", boom)
     monkeypatch.setattr(C, "cbs_to_host", boom)
+    monkeypatch.setattr(C, "_pack_leaf", boom)
 
 
 def test_device_maintenance_no_full_tree_roundtrip(rng, monkeypatch):
@@ -504,6 +506,30 @@ def test_cbs_update_delete_compact_never_decode_on_host(rng, monkeypatch):
     np.testing.assert_array_equal(C.cbs_items(t4), want)
     f, _, _ = C.cbs_lookup_u64(t4, want)
     assert f.all()
+
+
+def test_cbs_empty_compact_stays_on_device(rng, monkeypatch):
+    """Delete EVERY key, then compact: the empty-tree edge used to be
+    the last ``_pack_leaf`` host encode on the maintenance path — it now
+    routes through the streamed device builder, so the whole sequence
+    survives the host-codec ban and the result is bit-identical to an
+    empty bulk load."""
+    keys = np.unique(
+        np.uint64(1 << 30) + rng.integers(0, 3000, 200, dtype=np.uint64) * 7)
+    t = C.cbs_bulk_load(keys, n=N)
+    with monkeypatch.context() as mp:
+        _ban_full_roundtrip(mp)
+        _ban_host_reencode(mp)
+        t2, n_del = C.cbs_delete_batch(t, keys)
+        t3, cc = C.cbs_compact(t2, force=True)
+    assert n_del == len(keys)
+    assert cc["compacted"] and cc["leaves_after"] == 1
+    empty = C.cbs_bulk_load(np.zeros(0, np.uint64), n=N)
+    for f in ("leaf_words", "leaf_tag", "leaf_k0_hi", "leaf_k0_lo",
+              "next_leaf", "inner_hi", "inner_lo", "inner_child"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(t3, f)), np.asarray(getattr(empty, f)), f)
+    assert int(t3.num_leaves) == 1 and int(t3.num_inner) == 0
 
 
 def test_cbs_device_compact_matches_bulk_load_bit_for_bit(rng):
