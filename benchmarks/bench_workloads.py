@@ -3,7 +3,10 @@ plus three structural-maintenance rows: wlF_skew (deferred-heavy skewed
 insert — batched k-way splits / targeted CBS repack), wlG_compact (mass
 delete + ``compact()`` reclaim) and wlH_device_maint (deferred batch
 absorbed by the on-device split pass into preallocated slack — zero
-full-tree device<->host copies).
+full-tree device<->host copies).  Serving rows: wlJ_engine_step (fused
+decode + index dispatch), wlL_group_commit (1/2/4 submitter threads
+coalescing through the group-commit writer) and wlM_engine_startup
+(cold/warm construction->first-step, informational ``gate: "info"``).
 
 One backend-agnostic code path through the ``Index`` facade — pick the
 tree with ``--backend {bs,cbs,auto,all}`` instead of duplicated BS/CBS
@@ -259,9 +262,111 @@ def bench_engine_step(rows: list) -> None:
             r = min(int(rng.zipf(1.5)) - 1, len(act) - 1)
             eng.complete(act[r])
     dt = (time.perf_counter() - t0) * 1e6
+    eng.close()
     _emit(rows, "wlJ_engine_step/bs/zipf", dt / steps,
           f"{steps / (dt / 1e6):.1f}steps_per_s", backend="bs",
           resolved="bs", dist="zipf", workload="J_engine")
+
+
+def bench_group_commit(rows: list) -> None:
+    """Workload L: group-commit serving throughput vs submitter count.
+    1/2/4 threads split the same total work — Zipf-skewed 16-op
+    admit/complete/lookup batches against one ``RequestIndex`` — so the
+    rows are directly comparable: the writer coalesces concurrently
+    queued batches into ONE fused dispatch per commit, and multi-writer
+    wall time must hold at (or beat) the single-writer serial line
+    instead of degrading with contention."""
+    import threading
+
+    from repro.core.index import OP_DELETE, OP_INSERT, OP_LOOKUP
+    from repro.serve.request_index import RequestIndex
+
+    total_batches, batch_ops = 240, 16
+    pool = np.arange(1, 4097, dtype=np.uint64) * np.uint64(2654435761)
+    for n_threads in (1, 2, 4):
+        ridx = RequestIndex()
+        ridx.admit(pool, np.arange(len(pool), dtype=np.uint32))
+        per_thread = total_batches // n_threads
+        barrier = threading.Barrier(n_threads + 1)
+
+        def worker(tid, per_thread=per_thread):
+            rng = np.random.default_rng(100 + tid)
+            barrier.wait()
+            for _ in range(per_thread):
+                r = rng.random(batch_ops)
+                ops = np.where(
+                    r < 0.6, OP_LOOKUP,
+                    np.where(r < 0.85, OP_INSERT, OP_DELETE),
+                ).astype(np.int32)
+                # Zipf(1.5)-skewed targets over the hot pool
+                ids = pool[np.minimum(rng.zipf(1.5, batch_ops) - 1,
+                                      len(pool) - 1)].copy()
+                n_ins = int((ops == OP_INSERT).sum())
+                # fresh admits land uniformly across the key space so
+                # in-leaf gaps absorb them — the row times the commit
+                # pipeline, not edge-leaf split storms
+                ids[ops == OP_INSERT] = rng.integers(
+                    1, 2**48, n_ins, dtype=np.uint64)
+                ridx.apply_ops(ops, ids,
+                               np.arange(batch_ops, dtype=np.uint32))
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        barrier.wait()
+        t0 = time.perf_counter()
+        for t in threads:
+            t.join()
+        ridx.flush()
+        dt = (time.perf_counter() - t0) * 1e6
+        st = ridx.writer.stats
+        n_ops = total_batches * batch_ops
+        # multi-writer rows are OS-scheduler-dependent (how many batches
+        # queue up between drains decides the coalescing) and jitter
+        # beyond the gate threshold on 1-2 core runners: informational.
+        # The single-writer serial row stays gated — it IS the commit
+        # pipeline's latency floor.
+        tags = {"gate": "info"} if n_threads > 1 else {}
+        _emit(rows, f"wlL_group_commit/bs/w{n_threads}", dt,
+              f"{n_ops / (dt / 1e6) / 1e3:.1f}kops_c{st['commits']}"
+              f"_coal{st['coalesced_batches']}_spl{st['conflict_splits']}",
+              backend="bs", resolved="bs", dist="zipf",
+              workload="L_group_commit", writers=n_threads, **tags)
+        ridx.close()
+
+
+def bench_engine_startup(rows: list) -> None:
+    """Workload M (informational, ``gate: "info"``): engine construction
+    through the first decode step.  With ``JAX_COMPILATION_CACHE_DIR``
+    set (the CI bench lane) the compiled programs persist across runs,
+    so the trajectory of this row shows the warm-restart win; cold and
+    warm runs legitimately differ by 10x+, which is why the row never
+    gates."""
+    from repro.configs import get_config
+    from repro.models.model import init_lm
+    from repro.serve.compilation import (
+        persistent_cache_dir,
+        persistent_cache_entries,
+    )
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    cache = persistent_cache_dir()
+    t0 = time.perf_counter()
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    params = init_lm(cfg, jax.random.key(0))
+    ecfg = EngineConfig(slots=4, ctx=32, page_size=4,
+                        compilation_cache_dir=cache)
+    with ServeEngine(cfg, params, ecfg) as eng:
+        eng.admit(1, prompt_token=1)
+        eng.step()
+        dt = (time.perf_counter() - t0) * 1e6
+    _emit(rows, "wlM_engine_startup/bs/startup", dt,
+          f"{dt / 1e6:.2f}s_to_first_step"
+          f"_cache_{'on' if cache else 'off'}"
+          f"_e{persistent_cache_entries()}",
+          backend="bs", resolved="bs", dist="startup",
+          workload="M_startup", gate="info")
 
 
 def main(argv=None) -> None:
@@ -309,6 +414,8 @@ def main(argv=None) -> None:
                   f"{args.ops/us:.2f}Mops", backend="sorted_array",
                   resolved="sorted_array", dist=dist, workload="A")
         bench_engine_step(rows)
+        bench_group_commit(rows)
+        bench_engine_startup(rows)
         for r in rows:
             cur = merged.get(r["name"])
             if cur is None or r["us_per_call"] < cur["us_per_call"]:

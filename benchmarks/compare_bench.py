@@ -37,7 +37,11 @@ never skews the machine-speed factor.
 
 Rows present in only one file are reported but never fail the gate — new
 benchmarks must be able to land together with their first baseline.
-Exit code 1 iff at least one row regresses.
+Rows tagged ``"gate": "info"`` (e.g. ``wlM_engine_startup``, whose wall
+time is dominated by whether the persistent compilation cache was warm)
+are always informational: they are excluded from gating **and** from the
+machine-speed median so a legitimately cold run cannot skew the
+normalisation of real rows.  Exit code 1 iff at least one row regresses.
 """
 from __future__ import annotations
 
@@ -139,6 +143,12 @@ def main(argv=None) -> int:
               f"baseline with the CI workload size")
         return 1
 
+    # rows either side tags "gate": "info" never gate and never shape
+    # the normalisation median (collected before history medians replace
+    # the baseline dict, which drops row tags)
+    info = {name for rows in (base, cand) for name, r in rows.items()
+            if r.get("gate") == "info"}
+
     hist_times, hist_runs = load_history(args.history, cand_meta,
                                          args.history_n)
     use_history = hist_runs >= 1
@@ -168,6 +178,8 @@ def main(argv=None) -> int:
     shared = sorted(set(base) & set(cand))
     ratios, degenerate = {}, []
     for name in shared:
+        if name in info:
+            continue
         b = float(base[name]["us_per_call"])
         c = float(cand[name]["us_per_call"])
         if b <= 0.0:
@@ -202,6 +214,11 @@ def main(argv=None) -> int:
             continue
         b = float(base[name]["us_per_call"])
         c = float(cand[name]["us_per_call"])
+        if name in info:
+            ratio = c / b if b > 0 else float("nan")
+            print(f"{name:44s} {b:12.1f} {c:12.1f} {ratio:7.2f} "
+                  f"{'INFO':>6s}")
+            continue
         if name not in ratios:
             print(f"{name:44s} {b:12.1f} {c:12.1f} {'CLAMP':>7s}      -")
             continue

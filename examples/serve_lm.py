@@ -45,6 +45,7 @@ def main():
     print(f"\n{completed} requests completed in {dt:.1f}s "
           f"({next_rid - 1000} admitted); request index + page pool clean: "
           f"{len(eng.index)} live, util={eng.pages.utilization():.2f}")
+    eng.close()  # drain + stop the group-commit writer thread
 
 
 if __name__ == "__main__":

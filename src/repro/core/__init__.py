@@ -17,6 +17,8 @@ Modules:
               CBS repack, touched-rows parent patching, compaction)
   distributed range-partitioned sharded index (shard_map + all_to_all)
   versioning  MVCC snapshots (OLC adaptation, paper §7)
+  group_commit queue-draining writer that coalesces op batches into one
+              fused dispatch per commit; snapshot readers never block
 """
 from .layout import (  # noqa: F401
     DEFAULT_ALPHA,
@@ -62,6 +64,7 @@ from .compress import (  # noqa: F401
 from .reference import ReferenceBSTree  # noqa: F401
 from .index import (  # noqa: F401
     APPLY_STATS_KEYS,
+    ApplyResult,
     Backend,
     Index,
     IndexSpec,
@@ -76,10 +79,16 @@ from .index import (  # noqa: F401
     resolve_backend,
 )
 from .versioning import VersionedIndex  # noqa: F401
+from .group_commit import (  # noqa: F401
+    CommitTicket,
+    GroupCommitWriter,
+    group_commit_update,
+)
 
 __all__ = [
     # facade (the public API surface)
     "APPLY_STATS_KEYS",
+    "ApplyResult",
     "Backend",
     "Index",
     "IndexSpec",
@@ -93,6 +102,10 @@ __all__ = [
     "register_backend",
     "resolve_backend",
     "VersionedIndex",
+    # group-commit serving core
+    "CommitTicket",
+    "GroupCommitWriter",
+    "group_commit_update",
     # layout / containers
     "DEFAULT_ALPHA",
     "DEFAULT_N",

@@ -68,6 +68,7 @@ __all__ = [
     "cbs_lookup_u64",
     "cbs_insert_batch",
     "cbs_delete_batch",
+    "cbs_apply_ops_fused",
     "cbs_compact",
     "cbs_host_compact",
     "build_auto",
@@ -619,7 +620,8 @@ def cbs_insert_batch(tree: CBSTreeArrays, keys_u64: np.ndarray, *,
     active = ~found  # keys-only tree: present keys are no-ops
     stats["present"] = int(jnp.sum(found.astype(jnp.int32)))
 
-    tree, deferred, n_ins = _cbs_insert_merge(tree, k_hi, k_lo, leaf, active)
+    tree, deferred, n_ins, _ = _cbs_insert_merge(tree, k_hi, k_lo, leaf,
+                                                 active)
     stats["inserted"] = int(n_ins)
     stats["rounds"] = 1
 
@@ -662,6 +664,10 @@ def _frame_deltas(tree: CBSTreeArrays, k_hi, k_lo, leaf):
 
 @jax.jit
 def _cbs_insert_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
+    """Segmented in-frame insert merge.  Returns ``(tree, deferred,
+    n_new, n_upserted)`` — ``n_upserted`` counts active keys that were
+    already present (their rows re-merge in place); callers that
+    pre-filter with ``active = ~found`` always see 0 there."""
     from .bstree import segmented_rows_upsert
 
     n = tree.node_width
@@ -674,23 +680,27 @@ def _cbs_insert_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
     # width; predicate by tag (the TPU-idiomatic replacement for the CPU's
     # per-leaf branch).  The merge generalizes the one-key row formula, so
     # the unpack -> merge -> repack planes pipeline is unchanged.
-    new_words, writes, merges, overflows = [], [], [], []
+    new_words, writes, merges, upserts, overflows = [], [], [], [], []
     for tc in (TAG_U16, TAG_U32, TAG_U64):
         d_hi, d_lo = _unpack_tag(words, tc, n)
         ins_hi = (dq_hi if tc == TAG_U64 else jnp.zeros_like(dq_hi)).astype(
             jnp.uint32)
         row_v = jnp.zeros(d_lo.shape, jnp.uint32)
-        nh, nl, _, write, merged_new, _, overflow = segmented_rows_upsert(
-            d_hi, d_lo, row_v, ins_hi, dq_lo, dummy_v, leaf, act
+        nh, nl, _, write, merged_new, upserted, overflow = (
+            segmented_rows_upsert(
+                d_hi, d_lo, row_v, ins_hi, dq_lo, dummy_v, leaf, act
+            )
         )
         new_words.append(_pack_tag(nh, nl, tc, n))
         writes.append(write)
         merges.append(merged_new)
+        upserts.append(upserted)
         overflows.append(overflow)
 
     merged = _select_by_tag(tag[:, None], new_words)
     write = _select_by_tag(tag, writes)
     merged_new = _select_by_tag(tag, merges)
+    upserted = _select_by_tag(tag, upserts)
     overflow = _select_by_tag(tag, overflows)
 
     deferred = active & (~in_frame | overflow)
@@ -698,7 +708,8 @@ def _cbs_insert_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
     tree = dataclasses.replace(
         tree, leaf_words=tree.leaf_words.at[tgt].set(merged, mode="drop")
     )
-    return tree, deferred, jnp.sum(merged_new.astype(jnp.int32))
+    return (tree, deferred, jnp.sum(merged_new.astype(jnp.int32)),
+            jnp.sum(upserted.astype(jnp.int32)))
 
 
 def cbs_delete_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
@@ -711,18 +722,19 @@ def cbs_delete_batch(tree: CBSTreeArrays, keys_u64: np.ndarray):
     hi, lo = split_u64(keys_u64)
     k_hi, k_lo = jnp.asarray(hi), jnp.asarray(lo)
     _, leaf, _ = cbs_lookup_batch(tree, k_hi, k_lo)
-    tree, n_deleted = _cbs_delete_merge(tree, k_hi, k_lo, leaf)
+    tree, n_deleted = _cbs_delete_merge(tree, k_hi, k_lo, leaf,
+                                        jnp.ones(k_hi.shape, bool))
     return tree, int(n_deleted)
 
 
 @jax.jit
-def _cbs_delete_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf):
+def _cbs_delete_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf, active):
     from .bstree import segmented_rows_delete
 
     n = tree.node_width
     words = tree.leaf_words[leaf]
     tag, dq_hi, dq_lo, in_frame, ge_k0 = _frame_deltas(tree, k_hi, k_lo, leaf)
-    act = in_frame
+    act = active & in_frame
     dq_lo_c = jnp.where(ge_k0, dq_lo, 0)
 
     new_words, writes, founds = [], [], []
@@ -747,6 +759,45 @@ def _cbs_delete_merge(tree: CBSTreeArrays, k_hi, k_lo, leaf):
         tree, leaf_words=tree.leaf_words.at[tgt].set(merged, mode="drop")
     )
     return tree, jnp.sum(found.astype(jnp.int32))
+
+
+@jax.jit
+def cbs_apply_ops_fused(tree: CBSTreeArrays, k_hi, k_lo, is_del, is_ins):
+    """ONE jitted dispatch for a fixed-shape mixed-op batch on the CBS
+    backend — the keys-only counterpart of
+    ``index._bs_apply_ops_fused``: device lexsort -> shared sorted
+    descent -> pre-state leaf probe -> tag-predicated segmented delete
+    merge -> tag-predicated segmented insert merge.
+
+    ``is_del`` / ``is_ins`` are (B,) boolean masks aligned with the key
+    planes (padding entries carry both False; op codes stay in
+    ``index`` to keep the dependency one-way).  Semantics match the BS
+    fused path: the probe observes the tree *before* the batch; deletes
+    apply before inserts; leaf ids from the single descent stay valid
+    throughout because in-dispatch merges never restructure —
+    out-of-frame or overflowing insert segments come back ``deferred``
+    for the caller's device-maintenance pass.  The caller guarantees
+    active keys are batch-unique per op.
+
+    Returns ``(tree, found0, pos0, n_deleted, n_inserted, n_upserted,
+    deferred)`` with ``pos0`` the stable record position
+    ``leaf * 4n + rank`` of pre-state hits (0 elsewhere).
+    """
+    order = jnp.lexsort((k_lo, k_hi))
+    inv = jnp.argsort(order)
+    qh, ql = k_hi[order], k_lo[order]
+    dels, inss = is_del[order], is_ins[order]
+    leaf = traverse.descend_sorted(tree, qh, ql)
+    found0, _, rank0 = leaf_probe(tree, leaf, qh, ql)
+    cap = 4 * tree.node_width
+    pos0 = jnp.where(
+        found0,
+        leaf.astype(jnp.uint32) * jnp.uint32(cap) + rank0.astype(jnp.uint32),
+        0,
+    )
+    tree, n_del = _cbs_delete_merge(tree, qh, ql, leaf, dels)
+    tree, deferred, n_ins, n_ups = _cbs_insert_merge(tree, qh, ql, leaf, inss)
+    return tree, found0[inv], pos0[inv], n_del, n_ins, n_ups, deferred[inv]
 
 
 # ---------------------------------------------------------------------------
@@ -1237,19 +1288,23 @@ def _cbs_host_rebuild(tree: CBSTreeArrays, new_keys: np.ndarray) -> CBSTreeArray
     return cbs_bulk_load_host(merged, n=tree.node_width)
 
 
-def build_auto(keys: np.ndarray, *, n: int = DEFAULT_N, alpha: float = DEFAULT_ALPHA):
-    """§6 decision mechanism: returns ('cbs', CBSTreeArrays) or
-    ('bs', BSTreeArrays) based on the key distribution.
+def build_auto(keys: np.ndarray = None, *, n: int = DEFAULT_N,
+               alpha: float = DEFAULT_ALPHA):
+    """§6 decision mechanism — REMOVED compatibility shim.
 
-    .. deprecated:: thin compatibility shim.  The tagged-tuple return
-       forces callers to branch on kind and pick the matching function
-       family; use ``Index.build(keys, spec=IndexSpec(backend="auto"))``
-       from :mod:`repro.core.index`, which resolves the decision and
-       exposes one uniform API (``idx.backend`` reports the choice).
+    .. deprecated:: the tagged-tuple return (``('bs'|'cbs', tree)``)
+       forced every caller to branch on kind and pick the matching
+       function family.  The shim now raises so breakage is loud; use
+       ``Index.build(keys, spec=IndexSpec(backend="auto"))`` from
+       :mod:`repro.core.index` — ``idx.backend`` reports the decision
+       and the facade exposes one uniform API.  The raw §6 rule remains
+       available as :func:`decide`.
     """
-    from .bstree import bulk_load
-
-    keys = np.asarray(keys, dtype=np.uint64)
-    if decide(keys, n):
-        return "cbs", cbs_bulk_load(keys, n=n, alpha=alpha)
-    return "bs", bulk_load(keys, n=n, alpha=alpha)
+    del keys, n, alpha
+    raise DeprecationWarning(
+        "build_auto was removed: it returned a ('bs'|'cbs', tree) tagged "
+        "tuple that forced callers to branch on the kind.  Use "
+        "repro.core.Index.build(keys, spec=IndexSpec(backend='auto')) "
+        "instead (idx.backend reports the decision); the raw decision "
+        "rule is still exported as repro.core.decide."
+    )

@@ -1,0 +1,333 @@
+"""Group-commit writer: coalesce queued op batches into ONE fused dispatch.
+
+`VersionedIndex` gives writers optimistic commits, but each caller still
+pays one `Index.apply_ops` dispatch and one version bump per batch.  At
+serving rates the dispatch overhead dominates: FB+-tree (PAPERS.md)
+gets its write throughput from writers that *coalesce* while readers
+never block.  This module is that discipline for the functional index:
+
+    writer thread            submitters (engine steps, API handlers)
+    -------------            ----------------------------------------
+    drain the queue    <--   submit(ops, keys[, vals]) -> CommitTicket
+    concat batches
+    ONE apply_ops      -->   ticket.result() slices the caller's rows
+    ONE VersionedIndex.commit (version v+1)
+
+Readers keep pinning snapshots of version v the whole time (§7 OLC
+adaptation) — a commit is one atomic pointer swap, so a snapshot always
+observes whole committed groups, never a partial batch.
+
+Coalescing preserves *serial* (queue-order) semantics.  Concatenating
+batches is safe because `Index.apply_ops` already dedups (inserts keep
+the last entry = last-writer-wins; deletes keep the first = the first
+deleter observes the hit) — with two exceptions that the writer handles
+by SEALING the open group and starting a new one (a "conflict split"):
+
+* a LOOKUP of a key the open group already writes (insert or delete):
+  coalesced lookups observe pre-group state, serial lookups would see
+  the earlier batch's write;
+* a DELETE of a key the open group INSERTs: fused deletes run before
+  inserts, so coalescing would resurrect the key the serial order
+  removes.
+
+Groups always commit in submission order, so a split only costs an
+extra dispatch, never reordering.  `ApplyResult.stats` on a coalesced
+ticket describes the whole group (documented; per-caller `found`/`vals`
+rows are exact because they are positional slices).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+from .index import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_LOOKUP,
+    OP_NOOP,
+    ApplyResult,
+    Index,
+    _default_vals,
+)
+from .versioning import VersionedIndex
+
+__all__ = ["CommitTicket", "GroupCommitWriter", "group_commit_update"]
+
+
+class CommitTicket:
+    """Handle for one submitted batch; resolves when its group commits.
+
+    ``result()`` returns the caller's own :class:`ApplyResult` slice
+    (found/vals rows aligned with the submitted batch, ``version`` set
+    to the commit that made it visible) or re-raises the error that
+    failed the group.
+    """
+
+    __slots__ = ("_event", "_result", "_error")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._result: Optional[ApplyResult] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> ApplyResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError("group commit did not land in time")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result: ApplyResult) -> None:
+        self._result = result
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+
+class _PendingBatch:
+    __slots__ = ("ops", "keys", "vals", "ticket")
+
+    def __init__(self, ops, keys, vals):
+        self.ops = ops
+        self.keys = keys
+        self.vals = vals
+        self.ticket = CommitTicket()
+
+
+class GroupCommitWriter:
+    """The single-writer group-commit loop over a :class:`VersionedIndex`.
+
+    Submitters from any thread enqueue op batches; the (daemon) writer
+    thread drains the whole queue, splits it into serializable groups
+    (module docstring), concatenates each group and commits it as ONE
+    fused ``Index.apply_ops`` dispatch + ONE ``VersionedIndex.commit``.
+    With ``start=False`` nothing runs in the background: ``submit``
+    only queues, and :meth:`drain_once` commits synchronously —
+    deterministic mode for tests and single-threaded callers
+    (``apply``/``flush``/``close`` drain inline there, so those never
+    hang).
+
+    ``stats`` (plain dict, monotone counters): ``batches`` submitted,
+    ``commits`` published, ``coalesced_batches`` (batches that shared a
+    commit with an earlier one), ``conflict_splits`` (groups sealed
+    early to preserve serial semantics).
+    """
+
+    def __init__(self, versioned: VersionedIndex, *,
+                 max_group_ops: int = 65536, start: bool = True):
+        self._versioned = versioned
+        self._cv = threading.Condition()
+        self._queue: list[_PendingBatch] = []
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        self.max_group_ops = int(max_group_ops)
+        self.stats = {"batches": 0, "commits": 0, "coalesced_batches": 0,
+                      "conflict_splits": 0}
+        if start:
+            self.start()
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> None:
+        with self._cv:
+            if self._thread is not None and self._thread.is_alive():
+                return
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._run, name="group-commit-writer", daemon=True)
+            self._thread.start()
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        """Stop the writer thread; queued batches drain first (no ticket
+        is left hanging).  Idempotent; the writer can be restarted with
+        :meth:`start`."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+        self._thread = None
+        self.drain_once()  # leftovers from a raced submit
+
+    def __enter__(self) -> "GroupCommitWriter":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    # -- submitters ------------------------------------------------------
+    def submit(self, ops: np.ndarray, keys: np.ndarray,
+               vals: Optional[np.ndarray] = None) -> CommitTicket:
+        """Enqueue one op batch; returns its :class:`CommitTicket`.
+
+        Shape/op-code validation happens here, synchronously, so a bad
+        batch raises in the submitting thread instead of poisoning the
+        group it would have joined.
+        """
+        ops = np.asarray(ops, dtype=np.int32)
+        keys = np.asarray(keys, dtype=np.uint64)
+        if ops.shape != keys.shape or ops.ndim != 1:
+            raise ValueError("ops and keys must be aligned (B,) arrays")
+        known = np.isin(ops, (OP_NOOP, OP_LOOKUP, OP_INSERT, OP_DELETE))
+        if not known.all():
+            raise ValueError(f"unknown op codes: {np.unique(ops[~known])}")
+        if vals is not None:
+            vals = np.asarray(vals, dtype=np.uint32)
+            if vals.shape != ops.shape:
+                raise ValueError("vals must align with ops")
+        pending = _PendingBatch(ops, keys, vals)
+        with self._cv:
+            self._queue.append(pending)
+            self.stats["batches"] += 1
+            self._cv.notify_all()
+        return pending.ticket
+
+    def apply(self, ops: np.ndarray, keys: np.ndarray,
+              vals: Optional[np.ndarray] = None, *,
+              timeout: Optional[float] = None) -> ApplyResult:
+        """submit + wait: the synchronous serving entry point.  With a
+        stopped writer (``start=False``) the queue drains inline so the
+        call never hangs."""
+        ticket = self.submit(ops, keys, vals)
+        if not self.running:
+            self.drain_once()
+        return ticket.result(timeout)
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Block until everything queued at call time has committed."""
+        with self._cv:
+            pending = list(self._queue)
+        if not self.running:
+            self.drain_once()
+        for p in pending:
+            p.ticket.result(timeout)
+
+    # -- the writer ------------------------------------------------------
+    def drain_once(self) -> int:
+        """Drain the queue in the calling thread: split into
+        serializable groups, commit each as one fused dispatch.  Returns
+        the number of commits (0 when the queue was empty).  This is the
+        same path the background thread runs; with ``start=False`` tests
+        call it directly for deterministic dispatch counting."""
+        with self._cv:
+            batch, self._queue = self._queue, []
+        if not batch:
+            return 0
+        commits = 0
+        for group in self._split_serializable(batch):
+            self._commit_group(group)
+            commits += 1
+        return commits
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait()
+                if self._stop and not self._queue:
+                    return
+            self.drain_once()
+
+    def _split_serializable(self, batch: list) -> list:
+        """Partition queued batches into groups whose coalesced result
+        equals serial queue-order execution (module docstring)."""
+        groups: list[list[_PendingBatch]] = []
+        cur: list[_PendingBatch] = []
+        written: set[int] = set()    # keys inserted or deleted by `cur`
+        inserted: set[int] = set()   # keys inserted by `cur`
+        size = 0
+        for p in batch:
+            split = False
+            if cur:
+                if size + len(p.ops) > self.max_group_ops:
+                    split = True
+                else:
+                    reads = p.keys[p.ops == OP_LOOKUP]
+                    dels = p.keys[p.ops == OP_DELETE]
+                    split = (
+                        any(int(k) in written for k in reads)
+                        or any(int(k) in inserted for k in dels))
+                    if split:
+                        self.stats["conflict_splits"] += 1
+            if split:
+                groups.append(cur)
+                cur, written, inserted, size = [], set(), set(), 0
+            cur.append(p)
+            size += len(p.ops)
+            for k in p.keys[p.ops == OP_INSERT]:
+                inserted.add(int(k))
+                written.add(int(k))
+            for k in p.keys[p.ops == OP_DELETE]:
+                written.add(int(k))
+        if cur:
+            groups.append(cur)
+        return groups
+
+    def _commit_group(self, group: list) -> None:
+        try:
+            ops = np.concatenate([p.ops for p in group])
+            keys = np.concatenate([p.keys for p in group])
+            vals = None
+            if any(p.vals is not None for p in group):
+                vals = np.concatenate([
+                    p.vals if p.vals is not None else _default_vals(p.keys)
+                    for p in group])
+            for _ in range(8):
+                base, idx = self._versioned.pin()
+                try:
+                    new_idx, res = idx.apply_ops(ops, keys, vals)
+                finally:
+                    self._versioned.unpin(base)
+                if self._versioned.commit(base, new_idx):
+                    version = base + 1
+                    break
+            else:  # external writers racing this VersionedIndex
+                raise RuntimeError(
+                    "group commit lost 8 optimistic-commit races; route "
+                    "all writers through one GroupCommitWriter")
+        except BaseException as exc:  # noqa: BLE001 — tickets re-raise
+            for p in group:
+                p.ticket._fail(exc)
+            return
+        self.stats["commits"] += 1
+        self.stats["coalesced_batches"] += len(group) - 1
+        off = 0
+        for p in group:
+            b = len(p.ops)
+            p.ticket._resolve(ApplyResult(
+                ops=p.ops, keys=p.keys,
+                found=res.found[off:off + b],
+                vals=res.vals[off:off + b],
+                stats=res.stats, version=version))
+            off += b
+
+
+def group_commit_update(vi: VersionedIndex, ops, keys, vals=None
+                        ) -> ApplyResult:
+    """One-shot helper: apply a batch through a transient writer-less
+    commit (pin -> fused apply_ops -> optimistic commit with rebase).
+    Equivalent to ``VersionedIndex.update`` but returns the
+    :class:`ApplyResult` with its committed version."""
+    out: dict = {}
+
+    def fn(ix: Index) -> Index:
+        ix2, res = ix.apply_ops(ops, keys, vals)
+        out["res"] = res
+        return ix2
+
+    version, _ = vi.update(fn)
+    res = out["res"]
+    return ApplyResult(ops=res.ops, keys=res.keys, found=res.found,
+                       vals=res.vals, stats=res.stats, version=version)

@@ -36,6 +36,7 @@ should use the device kernels ``bstree.range_scan`` /
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional, Protocol, runtime_checkable
 
 import jax
@@ -56,6 +57,7 @@ from .layout import (
 )
 
 __all__ = [
+    "ApplyResult",
     "Backend",
     "Index",
     "IndexSpec",
@@ -96,6 +98,78 @@ INSERT_STATS_KEYS = frozenset(
 
 
 @dataclasses.dataclass(frozen=True)
+class ApplyResult:
+    """Typed result of :meth:`Index.apply_ops` (and of the group-commit
+    serving core built on it, :mod:`repro.core.group_commit`).
+
+    ``ops``/``keys`` echo the submitted batch so positions stay
+    self-describing.  ``found`` is (B,) pre-batch membership, meaningful
+    at LOOKUP positions and at non-demoted DELETE positions (a DELETE
+    entry's ``found`` is True iff it actually removed a key — the first
+    DELETE of each key in the batch; duplicates report False).  ``vals``
+    is (B,) uint32, meaningful at LOOKUP positions only (the stored
+    value, or the stable record position ``leaf * 4n + rank`` on
+    keys-only backends).  ``stats`` has exactly the
+    :data:`APPLY_STATS_KEYS` schema; under group commit it describes the
+    whole coalesced commit, not one caller's slice.  ``version`` is the
+    :class:`~repro.core.versioning.VersionedIndex` version the batch
+    became visible at when routed through a
+    :class:`~repro.core.group_commit.GroupCommitWriter` (None when
+    applied directly).
+
+    The pre-redesign positional dict view (``res["found"][i]`` …) is
+    kept as a deprecated ``__getitem__`` shim; new code uses the named
+    fields or the :meth:`value_of` / :meth:`found_of` accessors.
+    """
+
+    ops: np.ndarray
+    keys: np.ndarray
+    found: np.ndarray
+    vals: np.ndarray
+    stats: dict
+    version: Optional[int] = None
+
+    def _entries(self, key: int, op: int) -> np.ndarray:
+        k = np.uint64(key)
+        return np.nonzero((self.ops == op) & (self.keys == k))[0]
+
+    def found_of(self, key: int, *, op: int = None) -> bool:
+        """Pre-batch membership recorded for ``key``'s first entry with
+        op code ``op`` (default: OP_LOOKUP).  Raises ``KeyError`` when
+        the batch holds no such entry — serving code catches a typed
+        error instead of tripping a positional assert."""
+        op = OP_LOOKUP if op is None else op
+        pos = self._entries(key, op)
+        if len(pos) == 0:
+            raise KeyError(
+                f"no op-{op} entry for key {key} in this batch")
+        return bool(self.found[pos[0]])
+
+    def value_of(self, key: int) -> int:
+        """The value this batch's LOOKUP of ``key`` observed (pre-batch
+        state).  Raises ``KeyError`` when the batch holds no LOOKUP for
+        ``key`` or the key was not found."""
+        pos = self._entries(key, OP_LOOKUP)
+        if len(pos) == 0:
+            raise KeyError(f"no LOOKUP entry for key {key} in this batch")
+        hit = pos[self.found[pos]]
+        if len(hit) == 0:
+            raise KeyError(f"key {key} not found by this batch's LOOKUP")
+        return int(self.vals[hit[0]])
+
+    def __getitem__(self, name: str):
+        """Deprecated positional-dict view (pre-redesign API)."""
+        if name not in ("found", "vals", "stats"):
+            raise KeyError(name)
+        warnings.warn(
+            "indexing ApplyResult like the old results dict is "
+            f"deprecated; use the .{name} field (or the value_of/"
+            "found_of accessors)",
+            DeprecationWarning, stacklevel=2)
+        return getattr(self, name)
+
+
+@dataclasses.dataclass(frozen=True)
 class IndexSpec:
     """Build-time configuration, shared verbatim by all backends.
 
@@ -117,10 +191,22 @@ class Backend(Protocol):
     All keys cross this boundary as u64 numpy arrays; trees are immutable
     pytrees (functional updates return new trees).  ``insert`` must emit
     the :data:`INSERT_STATS_KEYS` schema.
+
+    ``supports_fused_ops`` is the single-dispatch capability flag: a
+    backend that sets it True must provide ``apply_ops_fused(tree, work,
+    keys, vals, spec, stats)`` executing the whole deduped mixed-op
+    batch as ONE jitted dispatch (plus, at most, the shared deferred
+    structural-maintenance pass), returning ``(tree', found, vals)``
+    where ``found``/``vals`` are (B,) *pre-batch* probe results for
+    every position — the facade masks them per op code.  The
+    group-commit writer (:mod:`repro.core.group_commit`) relies on this
+    flag for its one-dispatch-per-commit invariant; backends without it
+    fall back to the composed three-phase path.
     """
 
     name: str
     supports_values: bool
+    supports_fused_ops: bool
     tree_cls: type  # array container this backend owns (for inference)
 
     def build(self, keys: np.ndarray, vals: Optional[np.ndarray],
@@ -158,6 +244,7 @@ class Backend(Protocol):
 class _BSBackend:
     name = "bs"
     supports_values = True
+    supports_fused_ops = True
     tree_cls = BSTreeArrays
 
     def build(self, keys, vals, spec: IndexSpec):
@@ -177,6 +264,40 @@ class _BSBackend:
 
     def delete(self, tree, keys):
         return _bs.delete_batch(tree, keys)
+
+    def apply_ops_fused(self, tree, work, keys, vals, spec, stats):
+        """Single-dispatch contract (``supports_fused_ops``): one
+        :func:`_bs_apply_ops_fused` dispatch, then the shared device
+        maintenance pass for overflowing insert segments.  Returns
+        ``(tree', found, vals)`` — (B,) pre-batch probe results for
+        every position (the facade masks per op code)."""
+        b = len(work)
+        if vals is None:
+            vals = _default_vals(keys)
+        vals = np.asarray(vals, dtype=np.uint32)
+        pad_ops = _traverse.pad_to_bucket(work, OP_NOOP)
+        hi, lo = split_u64(_traverse.pad_to_bucket(keys))
+        tree, f, v, n_del, n_ins, n_ups, overflow = _bs_apply_ops_fused(
+            tree, jnp.asarray(pad_ops), jnp.asarray(hi), jnp.asarray(lo),
+            jnp.asarray(_traverse.pad_to_bucket(vals)))
+        stats["deleted"] = int(n_del)
+        stats["inserted"] = int(n_ins)
+        stats["present"] = int(n_ups)
+        stats["rounds"] = 1
+
+        d = np.asarray(overflow)[:b] & (work == OP_INSERT)
+        if d.any():
+            from .maintenance import bs_device_split_insert
+
+            idx = np.nonzero(d)[0]
+            order = np.argsort(keys[idx], kind="stable")
+            stats["deferred"] = len(idx)
+            tree, h_ins, h_ups = bs_device_split_insert(
+                tree, keys[idx][order], vals[idx][order],
+                stats["maintenance"], slack=spec.slack)
+            stats["inserted"] += h_ins
+            stats["present"] += h_ups
+        return tree, np.asarray(f)[:b], np.asarray(v)[:b]
 
     def compact(self, tree, spec, *, min_occupancy, force):
         return _bs.compact(tree, min_occupancy=min_occupancy,
@@ -214,6 +335,7 @@ class _BSBackend:
 class _CBSBackend:
     name = "cbs"
     supports_values = False
+    supports_fused_ops = True
     tree_cls = _cbs.CBSTreeArrays
 
     def build(self, keys, vals, spec: IndexSpec):
@@ -236,6 +358,39 @@ class _CBSBackend:
 
     def delete(self, tree, keys):
         return _cbs.cbs_delete_batch(tree, keys)
+
+    def apply_ops_fused(self, tree, work, keys, vals, spec, stats):
+        """Keys-only single-dispatch contract: one
+        :func:`compress.cbs_apply_ops_fused` dispatch (shared sorted
+        descent + tag-predicated segmented delete/insert merges), then
+        the shared CBS device-maintenance pass for deferred inserts.
+        ``vals`` is always None here (the facade rejects it first); the
+        returned probe vals are record positions ``leaf * 4n + rank``."""
+        b = len(work)
+        pad_ops = _traverse.pad_to_bucket(work, OP_NOOP)
+        hi, lo = split_u64(_traverse.pad_to_bucket(keys))
+        tree, f, pos, n_del, n_ins, n_ups, deferred = (
+            _cbs.cbs_apply_ops_fused(
+                tree, jnp.asarray(hi), jnp.asarray(lo),
+                jnp.asarray(pad_ops == OP_DELETE),
+                jnp.asarray(pad_ops == OP_INSERT)))
+        stats["deleted"] = int(n_del)
+        stats["inserted"] = int(n_ins)
+        stats["present"] = int(n_ups)
+        stats["rounds"] = 1
+
+        d = np.asarray(deferred)[:b] & (work == OP_INSERT)
+        if d.any():
+            from .maintenance import cbs_device_maintenance
+
+            idx = np.nonzero(d)[0]
+            stats["deferred"] = len(idx)
+            tree, r_ins, r_ups = cbs_device_maintenance(
+                tree, np.unique(keys[idx]), stats["maintenance"],
+                alpha=spec.alpha, slack=spec.slack)
+            stats["inserted"] += r_ins
+            stats["present"] += r_ups
+        return tree, np.asarray(f)[:b], np.asarray(pos)[:b]
 
     def compact(self, tree, spec, *, min_occupancy, force):
         return _cbs.cbs_compact(tree, min_occupancy=min_occupancy,
@@ -641,7 +796,7 @@ class Index:
 
     def apply_ops(self, ops: np.ndarray, keys: np.ndarray,
                   vals: Optional[np.ndarray] = None
-                  ) -> tuple["Index", dict]:
+                  ) -> tuple["Index", "ApplyResult"]:
         """Fused mixed-op dispatch: lookups + deletes + inserts in ONE
         fixed-shape op batch.  ``ops`` (B,) holds :data:`OP_NOOP` /
         :data:`OP_LOOKUP` / :data:`OP_INSERT` / :data:`OP_DELETE` codes
@@ -649,18 +804,22 @@ class Index:
 
         Semantics (identical on every backend): lookups observe the index
         *before* the batch, then deletes apply, then inserts.  Returns
-        ``(new Index, results)`` with ``results = {"found", "vals",
-        "stats"}``; ``found``/``vals`` are (B,) arrays meaningful only at
-        LOOKUP positions (False/0 elsewhere) and ``stats`` has exactly
-        the :data:`APPLY_STATS_KEYS` schema.
+        ``(new Index, ApplyResult)``: ``.found`` is pre-batch membership
+        at LOOKUP positions *and* at effective DELETE positions (True iff
+        that entry removed a key — duplicate deletes of one key report
+        True only at the first), ``.vals`` is meaningful at LOOKUP
+        positions only, ``.stats`` has exactly the
+        :data:`APPLY_STATS_KEYS` schema.  The pre-redesign
+        ``res["found"]`` dict access still works as a deprecated view.
 
-        On the BS backend the whole batch executes as a single jitted
-        dispatch (padded to the ``traverse.bucket_size`` bucket, so a
-        serving loop with batch-size churn never recompiles); overflowing
-        insert segments defer to the device maintenance pass exactly like
-        :meth:`insert`.  Other backends compose the three phases through
-        their own batch kernels (documented capability difference, same
-        results contract).
+        On backends with the ``supports_fused_ops`` capability (both
+        built-ins) the whole batch executes as a single jitted dispatch
+        (padded to the ``traverse.bucket_size`` bucket, so a serving loop
+        with batch-size churn never recompiles); overflowing or
+        out-of-frame insert segments defer to the backend's device
+        maintenance pass exactly like :meth:`insert`.  Backends without
+        the capability compose the three phases through their own batch
+        kernels (same results contract, one dispatch per phase).
         """
         from .maintenance import new_counters
 
@@ -682,61 +841,46 @@ class Index:
                  "maintenance": new_counters()}
         found = np.zeros(b, bool)
         out_vals = np.zeros(b, np.uint32)
-        results = {"found": found, "vals": out_vals, "stats": stats}
         if b == 0:
-            return self, results
+            return self, ApplyResult(ops=ops, keys=keys, found=found,
+                                     vals=out_vals, stats=stats)
 
         work = ops.copy()
         _dedup_op(work, keys, OP_INSERT, keep="last")
         _dedup_op(work, keys, OP_DELETE, keep="first")
 
-        if self.backend != "bs":
-            return self._apply_ops_composed(work, keys, vals, results)
+        if not getattr(self.impl, "supports_fused_ops", False):
+            idx = self._apply_ops_composed(work, keys, vals, found,
+                                           out_vals, stats)
+            return idx, ApplyResult(ops=ops, keys=keys, found=found,
+                                    vals=out_vals, stats=stats)
 
-        if vals is None:
-            vals = _default_vals(keys)
-        vals = np.asarray(vals, dtype=np.uint32)
-
-        pad_ops = _traverse.pad_to_bucket(work, OP_NOOP)
-        hi, lo = split_u64(_traverse.pad_to_bucket(keys))
-        tree, f, v, n_del, n_ins, n_ups, overflow = _bs_apply_ops_fused(
-            self.tree, jnp.asarray(pad_ops), jnp.asarray(hi),
-            jnp.asarray(lo), jnp.asarray(_traverse.pad_to_bucket(vals)))
-        stats["deleted"] = int(n_del)
-        stats["inserted"] = int(n_ins)
-        stats["present"] = int(n_ups)
-        stats["rounds"] = 1
+        tree, f, v = self.impl.apply_ops_fused(self.tree, work, keys, vals,
+                                               self.spec, stats)
         is_lk = ops == OP_LOOKUP
-        found[is_lk] = np.asarray(f)[:b][is_lk]
-        out_vals[is_lk] = np.asarray(v)[:b][is_lk]
+        live = is_lk | (work == OP_DELETE)  # probe is meaningful here
+        found[live] = f[live]
+        out_vals[is_lk] = v[is_lk]
+        return (dataclasses.replace(self, tree=tree),
+                ApplyResult(ops=ops, keys=keys, found=found, vals=out_vals,
+                            stats=stats))
 
-        d = np.asarray(overflow)[:b] & (work == OP_INSERT)
-        if d.any():
-            from .maintenance import bs_device_split_insert
-
-            idx = np.nonzero(d)[0]
-            order = np.argsort(keys[idx], kind="stable")
-            stats["deferred"] = len(idx)
-            tree, h_ins, h_ups = bs_device_split_insert(
-                tree, keys[idx][order], vals[idx][order],
-                stats["maintenance"], slack=self.spec.slack)
-            stats["inserted"] += h_ins
-            stats["present"] += h_ups
-        return dataclasses.replace(self, tree=tree), results
-
-    def _apply_ops_composed(self, work, keys, vals, results):
+    def _apply_ops_composed(self, work, keys, vals, found, out_vals, stats):
         """Backend-agnostic three-phase fallback for :meth:`apply_ops`
-        (same semantics, one dispatch per phase instead of one total)."""
-        stats = results["stats"]
+        (same semantics and result contract, one dispatch per phase
+        instead of one total).  Mutates ``found``/``out_vals``/``stats``
+        in place and returns the new index."""
         is_lk = work == OP_LOOKUP
         if is_lk.any():
             f, v = self.lookup(keys[is_lk])
-            results["found"][is_lk] = f
-            results["vals"][is_lk] = v
+            found[is_lk] = f
+            out_vals[is_lk] = v
         idx = self
-        dels = keys[work == OP_DELETE]
-        if len(dels):
-            idx, d_stats = idx.delete(dels)
+        is_dl = work == OP_DELETE
+        if is_dl.any():
+            # pre-delete membership = the DELETE entries' found contract
+            found[is_dl], _ = self.lookup(keys[is_dl])
+            idx, d_stats = idx.delete(keys[is_dl])
             stats["deleted"] = d_stats["deleted"]
             stats["rounds"] += 1
         is_ins = work == OP_INSERT
@@ -747,7 +891,7 @@ class Index:
             for k in ("inserted", "present", "deferred", "rounds"):
                 stats[k] += i_stats[k]
             stats["maintenance"] = i_stats["maintenance"]
-        return idx, results
+        return idx
 
     def compact(self, *, min_occupancy: float = 0.5, force: bool = False
                 ) -> tuple["Index", dict]:

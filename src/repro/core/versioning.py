@@ -51,6 +51,9 @@ class VersionedIndex(Generic[T]):
 
     def __init__(self, initial: T):
         self._lock = threading.Lock()
+        # commit notifications for version waiters (group-commit flush
+        # discipline); shares the lock so commit+notify is atomic
+        self._commit_cv = threading.Condition(self._lock)
         self._current = _Version(initial, 0)
         self._pinned: dict[int, _Version] = {}
 
@@ -103,7 +106,24 @@ class VersionedIndex(Generic[T]):
             self._current = _Version(new_value, base_version + 1)
             if old.refs <= 0:
                 self._pinned.pop(old.version, None)
+            self._commit_cv.notify_all()
             return True
+
+    def wait_for_version(self, min_version: int,
+                         timeout: Optional[float] = None) -> int:
+        """Block until the published version reaches ``min_version``;
+        returns the current version.  Readers never need this (snapshots
+        are always consistent) — it is the writer-side flush primitive:
+        a group-commit submitter waits for its batch's version without
+        polling.  Raises ``TimeoutError`` on expiry."""
+        with self._commit_cv:
+            ok = self._commit_cv.wait_for(
+                lambda: self._current.version >= min_version, timeout)
+            if not ok:
+                raise TimeoutError(
+                    f"version {min_version} not reached within {timeout}s "
+                    f"(current: {self._current.version})")
+            return self._current.version
 
     def update(
         self,

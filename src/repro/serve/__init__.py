@@ -1,3 +1,21 @@
-from .kv_cache import PagedKVCache  # noqa: F401
-from .request_index import RequestIndex  # noqa: F401
-from .engine import ServeEngine  # noqa: F401
+"""Serving layer: continuous-batching engine over the BS-tree request
+index.
+
+Curated public surface (the serve API):
+
+  ServeEngine    admit/step/complete lifecycle; group-commit index
+                 writes, snapshot-pinned reads, async commit overlap
+  EngineConfig   slots/ctx/sampling plus the serving-core knobs
+                 (group_commit, async_commit, compilation_cache_dir,
+                 max_step_compiles)
+  RequestIndex   request_id -> slot mapping on the versioned Index
+  PagedKVCache   paged KV block allocator behind the engine
+
+Compilation hygiene helpers (persistent cache, recompile counters) live
+in :mod:`repro.serve.compilation`.
+"""
+from .engine import EngineConfig, ServeEngine
+from .kv_cache import PagedKVCache
+from .request_index import RequestIndex
+
+__all__ = ["ServeEngine", "EngineConfig", "RequestIndex", "PagedKVCache"]

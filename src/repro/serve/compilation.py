@@ -1,0 +1,86 @@
+"""Serving-grade compilation hygiene.
+
+Two disciplines keep a serving process from paying XLA compile time at
+the worst moment:
+
+* **Bounded recompiles at runtime.**  Every hot entry point is already
+  shape-bucketed (``traverse.pad_to_bucket``), so the steady state
+  compiles O(log B) programs and then stops.  :func:`jit_cache_sizes`
+  exposes the per-function compiled-program counts so the engine can
+  *assert* that invariant instead of hoping (``EngineConfig.
+  max_step_compiles``).
+
+* **Warm restarts via the persistent compilation cache.**
+  :func:`enable_persistent_cache` points ``jax.experimental``'s
+  on-disk cache at a directory (``EngineConfig.compilation_cache_dir``,
+  or the ``JAX_COMPILATION_CACHE_DIR`` environment variable in the CI
+  bench lane), with the min-compile-time/entry-size thresholds lowered
+  to zero — a serving engine compiles many small programs, and all of
+  them should hit on restart so a rebooted server is warm in seconds
+  instead of re-tracing the whole decode + index stack.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+__all__ = ["enable_persistent_cache", "persistent_cache_dir",
+           "persistent_cache_entries", "jit_cache_sizes"]
+
+_cache_dir: Optional[str] = None
+
+
+def enable_persistent_cache(cache_dir: str) -> str:
+    """Enable JAX's on-disk compilation cache rooted at ``cache_dir``
+    (created if missing; idempotent — re-pointing at a new dir works).
+    Returns the absolute cache path.
+
+    Thresholds are lowered so *every* compiled program is cached: the
+    default min-compile-time gate (>1s) would skip exactly the many
+    small bucketed programs a serving engine accumulates.
+    """
+    global _cache_dir
+    cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    try:
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except (AttributeError, ValueError):  # knob absent on old jax
+        pass
+    try:
+        # jax memoizes the cache-enabled decision at first compile; a
+        # process that compiled anything before this call (or re-points
+        # at a new dir) must reset it or the new dir is never consulted
+        from jax.experimental.compilation_cache import compilation_cache
+
+        compilation_cache.reset_cache()
+    except (ImportError, AttributeError):  # layout drift on old jax
+        pass
+    _cache_dir = cache_dir
+    return cache_dir
+
+
+def persistent_cache_dir() -> Optional[str]:
+    """The directory :func:`enable_persistent_cache` activated (this
+    process), or the ambient ``JAX_COMPILATION_CACHE_DIR``, or None."""
+    return _cache_dir or os.environ.get("JAX_COMPILATION_CACHE_DIR") or None
+
+
+def persistent_cache_entries(cache_dir: Optional[str] = None) -> int:
+    """Number of compiled programs persisted in the cache directory (0
+    when disabled/empty) — the warm-restart coverage metric benches
+    report."""
+    d = cache_dir or persistent_cache_dir()
+    if not d or not os.path.isdir(d):
+        return 0
+    return sum(1 for name in os.listdir(d) if name.endswith("-cache"))
+
+
+def jit_cache_sizes(**fns) -> dict:
+    """``{name: compiled-program count}`` for jitted functions — the
+    recompile counters behind the engine's ``max_step_compiles``
+    assertion (``jit_cache_sizes(step=self._step)``)."""
+    return {name: int(fn._cache_size()) for name, fn in fns.items()}

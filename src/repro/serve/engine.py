@@ -5,7 +5,23 @@ Request lifecycle: admit (BS-tree request index insert + KV page alloc)
 release).  The decode step is the jitted model ``decode_step`` over a
 fixed (B_slots, ...) cache; empty slots are masked.  Greedy or top-p
 sampling; top-p uses the branchless succ/searchsorted primitive on the
-sorted CDF (the same operator family as the index)."""
+sorted CDF (the same operator family as the index).
+
+Serving core (PR: group-commit redesign):
+
+* index writes flow through the request index's
+  :class:`~repro.core.group_commit.GroupCommitWriter` — queued
+  admissions/completions from this engine (and any concurrent
+  submitter) coalesce into ONE fused ``apply_ops`` dispatch per commit;
+* with ``async_commit`` the step *submits* its index batch and launches
+  the decode dispatch before waiting on the commit ticket, so the index
+  commit overlaps device decode (the ``block_until_ready`` discipline:
+  sampling synchronises on logits only after the ticket resolves);
+* compilation hygiene: ``compilation_cache_dir`` wires the persistent
+  JAX compilation cache so a restarted server is warm in seconds, and
+  ``max_step_compiles`` turns the bounded-recompile invariant into a
+  hard assertion (:meth:`ServeEngine.recompiles` exposes the counters).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -15,9 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import OP_DELETE, OP_INSERT, OP_LOOKUP
+from repro.core.group_commit import CommitTicket
+from repro.core.index import OP_DELETE, OP_INSERT, OP_LOOKUP, ApplyResult
 from repro.core.succ import searchsorted_right
 from repro.models.model import decode_step, make_cache
+from .compilation import enable_persistent_cache, jit_cache_sizes
 from .kv_cache import PagedKVCache
 from .request_index import RequestIndex
 
@@ -46,15 +64,29 @@ class EngineConfig:
     page_size: int = 16
     top_p: float = 0.0  # 0 -> greedy
     seed: int = 0
+    #: route index writes through the group-commit writer (coalesced
+    #: single-dispatch commits; False = legacy per-caller commits)
+    group_commit: bool = True
+    #: overlap the index commit with the decode dispatch inside step()
+    #: (needs group_commit; sync fallback otherwise)
+    async_commit: bool = True
+    #: persistent JAX compilation-cache directory (None = disabled); a
+    #: restarted engine re-loads its compiled programs from here
+    compilation_cache_dir: Optional[str] = None
+    #: hard cap on decode_step compiled-program count (None = no check);
+    #: the slot batch is fixed-shape, so steady state is exactly 1
+    max_step_compiles: Optional[int] = None
 
 
 class ServeEngine:
     def __init__(self, cfg, params, ecfg: EngineConfig):
+        if ecfg.compilation_cache_dir:
+            enable_persistent_cache(ecfg.compilation_cache_dir)
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.cache = make_cache(cfg, ecfg.slots, ecfg.ctx)
-        self.index = RequestIndex()
+        self.index = RequestIndex(group_commit=ecfg.group_commit)
         self.pages = PagedKVCache(
             num_pages=ecfg.slots * (ecfg.ctx // ecfg.page_size),
             page_size=ecfg.page_size,
@@ -75,19 +107,24 @@ class ServeEngine:
         )
 
     # -- lifecycle -------------------------------------------------------
-    def _flush(self, extra: list[tuple[int, int, int]] = ()) -> dict | None:
-        """Commit all queued index ops (+ ``extra``) as one fused
-        dispatch.  Returns the results dict (aligned with queue + extra
-        order) or None when there was nothing to commit."""
+    def _flush(self, extra: list[tuple[int, int, int]] = (), *,
+               wait: bool = True) -> ApplyResult | CommitTicket | None:
+        """Commit all queued index ops (+ ``extra``) as one submitted
+        batch (one fused dispatch, possibly shared with other coalesced
+        submitters).  ``wait=True`` returns the :class:`ApplyResult`
+        (aligned with queue + extra order); ``wait=False`` returns the
+        :class:`CommitTicket` so the caller can overlap work with the
+        commit.  None when there was nothing to commit."""
         batch = self._pending + list(extra)
         self._pending = []
         if not batch:
             return None
-        return self.index.apply_ops(
-            np.array([op for op, _, _ in batch], np.int32),
-            np.array([rid for _, rid, _ in batch], np.uint64),
-            np.array([slot for _, _, slot in batch], np.uint32),
-        )
+        ops = np.array([op for op, _, _ in batch], np.int32)
+        ids = np.array([rid for _, rid, _ in batch], np.uint64)
+        slots = np.array([slot for _, _, slot in batch], np.uint32)
+        if not wait and self.index.writer is not None:
+            return self.index.submit_ops(ops, ids, slots)
+        return self.index.apply_ops(ops, ids, slots)
 
     def admit(self, request_id: int, prompt_token: int) -> bool:
         free = np.nonzero(~self.active)[0]
@@ -105,33 +142,71 @@ class ServeEngine:
         return True
 
     def complete(self, request_id: int) -> list[int]:
-        # a still-queued admit of this id must land first: apply_ops
-        # lookups read pre-batch state
+        # a still-queued admit of this id must land in an EARLIER batch:
+        # apply_ops lookups read pre-batch state (under group commit the
+        # writer's conflict split keeps the two commits serial)
         if any(rid == request_id for _, rid, _ in self._pending):
-            self._flush()
+            self._flush(wait=self.index.writer is None)
         res = self._flush(extra=[(OP_LOOKUP, request_id, 0),
                                  (OP_DELETE, request_id, 0)])
-        slot_pos = len(res["found"]) - 2  # the OP_LOOKUP entry
-        assert res["found"][slot_pos], f"unknown request {request_id}"
-        slot = int(res["vals"][slot_pos])
+        try:
+            slot = res.value_of(request_id)
+        except KeyError:
+            raise KeyError(f"unknown request id {request_id}") from None
         self.active[slot] = False
         self.pages.release(request_id)
         return self.outputs.pop(request_id)
+
+    def close(self) -> None:
+        """Drain and stop the index writer thread."""
+        self.index.close()
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- compilation hygiene --------------------------------------------
+    def recompiles(self) -> dict:
+        """Compiled-program counts of the engine's jitted hot paths."""
+        return jit_cache_sizes(decode_step=self._step)
+
+    def _check_compile_budget(self) -> None:
+        limit = self.ecfg.max_step_compiles
+        if limit is None:
+            return
+        n = self.recompiles()["decode_step"]
+        if n > limit:
+            raise RuntimeError(
+                f"decode recompile budget exceeded: {n} compiled programs "
+                f"> max_step_compiles={limit} — shape churn in the serving "
+                "loop (the slot batch should be fixed-shape)")
 
     # -- decoding --------------------------------------------------------
     def step(self) -> dict:
         """One decode step over the whole slot batch (inactive masked).
         Queued admissions/completions commit first as one fused index
-        dispatch — one engine step, one index dispatch."""
-        self._flush()
+        dispatch — one engine step, one index dispatch.  With
+        ``async_commit`` the commit is submitted as a ticket and runs on
+        the writer thread while the decode dispatch is in flight; the
+        step synchronises on the ticket before touching results."""
+        use_async = self.ecfg.async_commit and self.index.writer is not None
+        ticket = self._flush(wait=not use_async)
         if not self.active.any():
+            if isinstance(ticket, CommitTicket):
+                ticket.result()
             return {"active": 0}
         pos = int(self.positions[self.active].max())
         tokens = jnp.asarray(self.last_token[:, None])
         logits, self.cache = self._step(
             self.params, tokens, self.cache, jnp.asarray(pos, jnp.int32)
         )
-        logits = logits[:, 0]
+        if isinstance(ticket, CommitTicket):
+            # decode dispatch is in flight; the index commit overlaps it
+            ticket.result()
+        logits = jax.block_until_ready(logits)[:, 0]
         if self.ecfg.top_p > 0:
             self.key, sub = jax.random.split(self.key)
             nxt = np.asarray(top_p_sample(sub, logits, self.ecfg.top_p))
@@ -144,6 +219,7 @@ class ServeEngine:
             self.last_token[slot] = tok
             self.positions[slot] += 1
             self.pages.extend_to(rid, int(self.positions[slot]) + 1)
+        self._check_compile_budget()
         return {
             "active": int(self.active.sum()),
             "page_util": self.pages.utilization(),

@@ -4,23 +4,47 @@ A real in-memory-index workload inside the framework: the engine maps
 ``request_id (u64) -> slot`` (KV-cache slot / page-table root) with
 admissions (inserts), completions (deletes) and lookups on every step —
 exactly the read/write mix of the paper's Workload E.  Backed by the
-versioned, backend-agnostic ``Index`` facade, so concurrent readers
-(e.g. metric scrapes) pin consistent snapshots while the engine commits
-new versions (§7 OLC adaptation)."""
+versioned, backend-agnostic ``Index`` facade.
+
+Concurrency model (the group-commit serving core):
+
+* every read (``lookup``, ``__len__``, metric scrapes) pins a
+  ``VersionedIndex.snapshot()`` — reads never wait on the writer and
+  always observe whole committed groups;
+* every write routes through one :class:`~repro.core.group_commit.
+  GroupCommitWriter` (``group_commit=True``, the default): concurrent
+  submitters coalesce into ONE fused ``apply_ops`` dispatch and ONE
+  version bump per commit.  ``submit_ops`` exposes the async ticket so
+  the engine can overlap its decode step with the index commit.
+  ``group_commit=False`` keeps the legacy per-caller optimistic-update
+  path (one dispatch per batch, still snapshot-isolated).
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import numpy as np
 
-from repro.core.index import Index, IndexSpec
+from repro.core.group_commit import (
+    CommitTicket,
+    GroupCommitWriter,
+    group_commit_update,
+)
+from repro.core.index import (
+    OP_DELETE,
+    OP_INSERT,
+    ApplyResult,
+    Index,
+    IndexSpec,
+)
 from repro.core.versioning import VersionedIndex
 
 __all__ = ["RequestIndex"]
 
 
 class RequestIndex:
-    def __init__(self, *, node_width: int = 16, backend: str = "bs"):
+    def __init__(self, *, node_width: int = 16, backend: str = "bs",
+                 group_commit: bool = True):
         spec = IndexSpec(n=node_width, backend=backend)
         empty = Index.build(np.zeros(0, np.uint64), spec=spec)
         if not empty.supports_values:
@@ -29,43 +53,55 @@ class RequestIndex:
                 f"backend; {empty.backend!r} is keys-only")
         self.n = node_width
         self.idx: VersionedIndex[Index] = VersionedIndex(empty)
+        self.writer: Optional[GroupCommitWriter] = (
+            GroupCommitWriter(self.idx) if group_commit else None)
+
+    # -- writes ----------------------------------------------------------
+    def apply_ops(self, ops: np.ndarray, request_ids: np.ndarray,
+                  slots: np.ndarray) -> ApplyResult:
+        """Synchronous mixed-op commit: one fused ``Index.apply_ops``
+        dispatch for a whole admit/complete/lookup batch.  Under group
+        commit the batch may share its dispatch and version bump with
+        other queued submitters; the returned :class:`ApplyResult` is
+        always this caller's own slice, with ``version`` set."""
+        ops = np.asarray(ops, dtype=np.int32)
+        ids = np.asarray(request_ids, dtype=np.uint64)
+        slots = np.asarray(slots, dtype=np.uint32)
+        if self.writer is not None:
+            return self.writer.apply(ops, ids, slots)
+        return group_commit_update(self.idx, ops, ids, slots)
+
+    def submit_ops(self, ops: np.ndarray, request_ids: np.ndarray,
+                   slots: np.ndarray) -> CommitTicket:
+        """Async write path: enqueue the batch with the group-commit
+        writer and return its ticket without waiting — the engine
+        overlaps its decode dispatch with the index commit and resolves
+        the ticket afterwards.  Requires ``group_commit=True``."""
+        if self.writer is None:
+            raise RuntimeError(
+                "submit_ops needs group_commit=True (this RequestIndex "
+                "was built with the synchronous per-caller path)")
+        return self.writer.submit(
+            np.asarray(ops, dtype=np.int32),
+            np.asarray(request_ids, dtype=np.uint64),
+            np.asarray(slots, dtype=np.uint32))
 
     def admit(self, request_ids: np.ndarray, slots: np.ndarray) -> None:
         ids = np.asarray(request_ids, dtype=np.uint64)
         slots = np.asarray(slots, dtype=np.uint32)
-        self.idx.update(lambda ix: ix.insert(ids, slots)[0])
+        self.apply_ops(np.full(len(ids), OP_INSERT, np.int32), ids, slots)
 
     def complete(self, request_ids: np.ndarray) -> int:
+        """Remove finished requests; returns how many were present.
+        Exact even when the commit coalesced with other batches: the
+        count comes from this batch's own DELETE-position ``found`` rows
+        (pre-batch membership), not the shared group stats."""
         ids = np.asarray(request_ids, dtype=np.uint64)
-        removed = []
+        res = self.apply_ops(np.full(len(ids), OP_DELETE, np.int32), ids,
+                             np.zeros(len(ids), np.uint32))
+        return int(np.sum(res.found))
 
-        def fn(ix: Index) -> Index:
-            ix, stats = ix.delete(ids)
-            removed.append(stats["deleted"])
-            return ix
-
-        self.idx.update(fn)
-        return removed[-1]
-
-    def apply_ops(self, ops: np.ndarray, request_ids: np.ndarray,
-                  slots: np.ndarray) -> dict:
-        """Fused mixed-op commit: one ``Index.apply_ops`` dispatch for a
-        whole admit/complete/lookup batch (the engine's per-step path —
-        one version bump, one device dispatch).  Returns the facade's
-        ``{"found", "vals", "stats"}`` results dict."""
-        ops = np.asarray(ops, dtype=np.int32)
-        ids = np.asarray(request_ids, dtype=np.uint64)
-        slots = np.asarray(slots, dtype=np.uint32)
-        out: dict = {}
-
-        def fn(ix: Index) -> Index:
-            ix2, res = ix.apply_ops(ops, ids, slots)
-            out.update(res)
-            return ix2
-
-        self.idx.update(fn)
-        return out
-
+    # -- snapshot-pinned reads ------------------------------------------
     def lookup(self, request_ids: np.ndarray):
         ids = np.asarray(request_ids, dtype=np.uint64)
         with self.idx.snapshot() as s:
@@ -75,3 +111,13 @@ class RequestIndex:
         with self.idx.snapshot() as s:
             s.value.check_invariants()
             return len(s.value)
+
+    # -- lifecycle -------------------------------------------------------
+    def flush(self) -> None:
+        """Wait until every batch submitted so far is visible."""
+        if self.writer is not None:
+            self.writer.flush()
+
+    def close(self) -> None:
+        if self.writer is not None:
+            self.writer.close()

@@ -170,3 +170,34 @@ def test_workload_mismatch_is_fatal(tmp_path):
     base = _write(tmp_path / "base.json", ROWS, build_keys=1_000_000)
     cand = _write(tmp_path / "cand.json", ROWS)
     assert main([base, cand]) == 1
+
+
+def _write_with_info(path, rows, info_us, **meta):
+    payload = _payload(rows, **meta)
+    payload["rows"].append({"name": "wlM_engine_startup/bs/startup",
+                            "us_per_call": info_us, "derived": "",
+                            "gate": "info"})
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+def test_info_rows_never_gate_or_normalise(tmp_path, capsys):
+    """Satellite: rows tagged gate="info" (engine startup: cold vs warm
+    compilation cache legitimately differs 10x+) print with an INFO flag
+    but never regress and never skew the machine-speed median."""
+    base = _write_with_info(tmp_path / "base.json", ROWS, 1_000_000.0)
+    # candidate: real rows a uniform 1.2x, the info row 20x (cold start)
+    cand = _write_with_info(
+        tmp_path / "cand.json", {k: v * 1.2 for k, v in ROWS.items()},
+        20_000_000.0)
+    assert main([base, cand]) == 0
+    out = capsys.readouterr().out
+    assert "INFO" in out and "REGRESSION" not in out
+    # history mode excludes it the same way
+    hist = tmp_path / "hist"
+    hist.mkdir()
+    for i in range(3):
+        _write_with_info(hist / f"run-{i:03d}.json", ROWS, 1_000_000.0)
+    assert main([base, cand, "--history", str(hist)]) == 0
+    out = capsys.readouterr().out
+    assert "INFO" in out and "REGRESSION" not in out

@@ -69,9 +69,15 @@ def test_backend_decision_on_paper_distributions(dist, expect):
     idx = Index.build(keys, spec=IndexSpec(n=128, backend="auto"))
     assert idx.backend == expect, (
         f"{dist}: decided {idx.backend}, paper behaviour {expect}")
-    # the deprecated build_auto shim agrees with the facade
-    kind, _ = C.build_auto(keys, n=128)
-    assert kind == expect
+    # the raw §6 rule agrees with the facade's resolution
+    assert C.decide(keys, 128) == (expect == "cbs")
+
+
+def test_build_auto_removed_shim_raises():
+    """PR-2 deprecation, finished: the tagged-tuple shim raises a
+    DeprecationWarning-backed error that names the replacement."""
+    with pytest.raises(DeprecationWarning, match="Index.build"):
+        C.build_auto(np.arange(10, dtype=np.uint64), n=16)
 
 
 def test_cbs_memory_smaller_on_compressible(rng):

@@ -125,14 +125,23 @@ class DifferentialIndex:
             want_del += self.oracle.delete(int(k))
         for k in ks[codes == OP_INSERT]:  # in-order: last dup wins
             self.oracle.insert(int(k), int(k) & 0xFFFFFFFF)
+        seen_del: set = set()
         for i, (c, k) in enumerate(zip(codes.tolist(), ks.tolist())):
             if c == OP_LOOKUP:
-                assert bool(res["found"][i]) == (k in pre), (i, k)
-                if res["found"][i] and self.idx.supports_values:
-                    assert int(res["vals"][i]) == pre[k], (i, k)
-            else:  # found/vals meaningful only at LOOKUP positions
-                assert not res["found"][i] and res["vals"][i] == 0
-        st = res["stats"]
+                assert bool(res.found[i]) == (k in pre), (i, k)
+                if res.found[i] and self.idx.supports_values:
+                    assert int(res.vals[i]) == pre[k], (i, k)
+            elif c == OP_DELETE:
+                # DELETE found = "this entry removed the key": pre-batch
+                # membership at the first DELETE of each key, False at
+                # demoted duplicates; vals stay 0
+                expect = (k in pre) and (k not in seen_del)
+                seen_del.add(k)
+                assert bool(res.found[i]) == expect, (i, k)
+                assert res.vals[i] == 0
+            else:  # NOOP / INSERT: found/vals carry nothing
+                assert not res.found[i] and res.vals[i] == 0
+        st = res.stats
         assert st["deleted"] == want_del, (st, want_del)
         assert st["requested"] == BATCH
 

@@ -1,0 +1,325 @@
+"""Group-commit serving core: coalescing, serializability, threading.
+
+The tentpole battery: k queued batches commit as ONE fused dispatch and
+ONE version bump (counter-proved on bs, cbs AND auto); conflicting
+batches split into serial groups; N reader threads pin snapshots while
+the writer commits and only ever observe whole committed batches,
+without blocking behind a (deliberately slowed) writer.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core.compress as _cbs
+import repro.core.index as _ix
+from repro.core import (
+    GroupCommitWriter,
+    Index,
+    IndexSpec,
+    OP_DELETE,
+    OP_INSERT,
+    OP_LOOKUP,
+    VersionedIndex,
+    group_commit_update,
+)
+
+BACKENDS = ("bs", "cbs", "auto")
+
+
+def _build(backend, *, size=300, n=16, seed=7):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(1, 2**48, size=size, dtype=np.uint64))
+    ix = Index.build(keys, spec=IndexSpec(n=n, backend=backend))
+    return ix, keys
+
+
+def _count_fused(monkeypatch):
+    """Patch BOTH backends' fused dispatch entry points with counters."""
+    calls = {"n": 0}
+    real_bs = _ix._bs_apply_ops_fused
+    real_cbs = _cbs.cbs_apply_ops_fused
+
+    def bs_counting(*a, **kw):
+        calls["n"] += 1
+        return real_bs(*a, **kw)
+
+    def cbs_counting(*a, **kw):
+        calls["n"] += 1
+        return real_cbs(*a, **kw)
+
+    monkeypatch.setattr(_ix, "_bs_apply_ops_fused", bs_counting)
+    monkeypatch.setattr(_cbs, "cbs_apply_ops_fused", cbs_counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# One dispatch per commit (counter-proved, every backend)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_k_batches_one_dispatch_one_version(backend, monkeypatch):
+    """The tentpole invariant: k queued non-conflicting batches drain as
+    ONE fused dispatch + ONE VersionedIndex commit, on every backend."""
+    ix, keys = _build(backend)
+    vi = VersionedIndex(ix)
+    w = GroupCommitWriter(vi, start=False)
+    calls = _count_fused(monkeypatch)
+
+    k = 5
+    tickets = [
+        w.submit(np.full(4, OP_INSERT, np.int32),
+                 np.arange(10_000 + 100 * i, 10_000 + 100 * i + 4,
+                           dtype=np.uint64))
+        for i in range(k)
+    ]
+    # lookups of keys the group does NOT write coalesce too
+    t_lk = w.submit(np.full(2, OP_LOOKUP, np.int32), keys[:2])
+    assert vi.version == 0 and calls["n"] == 0  # nothing ran yet
+
+    assert w.drain_once() == 1
+    assert calls["n"] == 1, "coalesced group must be ONE fused dispatch"
+    assert vi.version == 1, "coalesced group must be ONE version bump"
+    assert w.stats["commits"] == 1
+    assert w.stats["coalesced_batches"] == k
+
+    for t in tickets:
+        res = t.result(timeout=5)
+        assert res.version == 1 and len(res.found) == 4
+    assert t_lk.result().found_of(int(keys[0]))
+    assert t_lk.result().found_of(int(keys[1]))
+    # the inserts actually landed
+    with vi.snapshot() as s:
+        f, _ = s.value.lookup(np.arange(10_000, 10_004, dtype=np.uint64))
+        assert f.all()
+        s.value.check_invariants()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conflict_split_preserves_serial_semantics(backend):
+    """A lookup of a key the open group wrote — and a delete of a key it
+    inserted — must observe the earlier batch's effect, i.e. seal the
+    group and commit serially."""
+    ix, keys = _build(backend)
+    vi = VersionedIndex(ix)
+    w = GroupCommitWriter(vi, start=False)
+
+    fresh = np.uint64(55_555)
+    w.submit(np.array([OP_INSERT], np.int32), np.array([fresh]))
+    t_read = w.submit(np.array([OP_LOOKUP], np.int32), np.array([fresh]))
+    assert w.drain_once() == 2, "read-your-writes forces a second commit"
+    assert w.stats["conflict_splits"] == 1
+    assert t_read.result().found_of(int(fresh)) is True
+    assert t_read.result().version == 2  # the later serial group
+
+    # delete-after-insert: coalescing would resurrect the key
+    other = np.uint64(66_666)
+    w.submit(np.array([OP_INSERT], np.int32), np.array([other]))
+    t_del = w.submit(np.array([OP_DELETE], np.int32), np.array([other]))
+    assert w.drain_once() == 2
+    assert t_del.result().found_of(int(other), op=OP_DELETE) is True
+    with vi.snapshot() as s:
+        f, _ = s.value.lookup(np.array([other]))
+        assert not f[0], "serial order deletes the key it just inserted"
+
+
+def test_safe_overlaps_still_coalesce():
+    """insert-after-delete, repeated deletes and repeated inserts of one
+    key are serializable inside one group (dedup keep=last/first)."""
+    ix, keys = _build("bs")
+    vi = VersionedIndex(ix)
+    w = GroupCommitWriter(vi, start=False)
+    k = np.array([keys[0]], np.uint64)
+    t1 = w.submit(np.array([OP_DELETE], np.int32), k)
+    t2 = w.submit(np.array([OP_DELETE], np.int32), k)   # second del: miss
+    t3 = w.submit(np.array([OP_INSERT], np.int32), k,
+                  np.array([42], np.uint32))
+    t4 = w.submit(np.array([OP_INSERT], np.int32), k,
+                  np.array([43], np.uint32))  # last wins
+    assert w.drain_once() == 1
+    assert t1.result().found_of(int(k[0]), op=OP_DELETE) is True
+    assert t2.result().found_of(int(k[0]), op=OP_DELETE) is False
+    assert t3.result().version == t4.result().version == 1
+    with vi.snapshot() as s:
+        f, v = s.value.lookup(k)
+        assert f[0] and int(v[0]) == 43
+
+
+def test_submit_validates_synchronously_and_errors_fail_tickets(monkeypatch):
+    ix, _ = _build("bs")
+    vi = VersionedIndex(ix)
+    w = GroupCommitWriter(vi, start=False)
+    with pytest.raises(ValueError, match="unknown op"):
+        w.submit(np.array([9], np.int32), np.array([1], np.uint64))
+    with pytest.raises(ValueError, match="aligned"):
+        w.submit(np.array([OP_INSERT], np.int32),
+                 np.array([1, 2], np.uint64))
+
+    # an unexpected apply failure fails every ticket of the group, and
+    # the writer stays usable afterwards
+    def boom(self, *a, **kw):
+        raise RuntimeError("device fell over")
+
+    t = w.submit(np.array([OP_INSERT], np.int32), np.array([5], np.uint64))
+    monkeypatch.setattr(Index, "apply_ops", boom)
+    assert w.drain_once() == 1
+    with pytest.raises(RuntimeError, match="fell over"):
+        t.result(timeout=5)
+    monkeypatch.undo()
+    t2 = w.submit(np.array([OP_INSERT], np.int32), np.array([6], np.uint64))
+    w.drain_once()
+    assert t2.result().version == 1
+
+
+def test_group_commit_update_helper():
+    ix, keys = _build("bs")
+    vi = VersionedIndex(ix)
+    res = group_commit_update(
+        vi, np.array([OP_LOOKUP, OP_INSERT], np.int32),
+        np.array([keys[0], 999_999], np.uint64))
+    assert res.version == 1 and res.found[0]
+    assert vi.version == 1
+
+
+# ---------------------------------------------------------------------------
+# Threaded battery: background writer + snapshot-pinned readers
+# ---------------------------------------------------------------------------
+
+
+def test_background_writer_thread_commits_submissions():
+    ix, _ = _build("bs")
+    vi = VersionedIndex(ix)
+    with GroupCommitWriter(vi) as w:
+        tickets = [
+            w.submit(np.full(4, OP_INSERT, np.int32),
+                     np.arange(1_000 * i + 1, 1_000 * i + 5,
+                               dtype=np.uint64))
+            for i in range(8)
+        ]
+        for t in tickets:
+            assert t.result(timeout=30).version >= 1
+        w.flush(timeout=30)
+        assert w.stats["commits"] >= 1
+        assert vi.version == w.stats["commits"]
+    assert not w.running  # context exit stopped the thread
+
+
+@pytest.mark.parametrize("backend", ("bs", "cbs"))
+def test_readers_never_block_and_see_whole_batches(backend, monkeypatch):
+    """N reader threads pin snapshots during a slowed writer's group
+    commits: every snapshot observes each submitted batch either fully
+    or not at all, and readers make progress while commits are in
+    flight (bounded by timeouts, not serialised behind the writer)."""
+    ix, _ = _build(backend, size=64)
+    vi = VersionedIndex(ix)
+
+    # slow every commit's apply so reader progress during an in-flight
+    # commit is observable (readers use lookup, never apply_ops)
+    real_apply = Index.apply_ops
+
+    def slow_apply(self, *a, **kw):
+        time.sleep(0.05)
+        return real_apply(self, *a, **kw)
+
+    monkeypatch.setattr(Index, "apply_ops", slow_apply)
+
+    n_batches, batch = 10, 32
+    batches = [
+        np.arange(1_000_000 * (g + 1), 1_000_000 * (g + 1) + batch,
+                  dtype=np.uint64)
+        for g in range(n_batches)
+    ]
+    stop = threading.Event()
+    violations: list = []
+    reads = [0, 0, 0, 0]
+
+    def reader(r):
+        while not stop.is_set():
+            with vi.snapshot() as s:
+                for g, bk in enumerate(batches):
+                    found, _ = s.value.lookup(bk)
+                    n = int(found.sum())
+                    if n not in (0, batch):  # torn batch
+                        violations.append((r, g, n))
+            reads[r] += 1
+
+    readers = [threading.Thread(target=reader, args=(r,), daemon=True)
+               for r in range(len(reads))]
+    for t in readers:
+        t.start()
+
+    with GroupCommitWriter(vi) as w:
+        tickets = [w.submit(np.full(batch, OP_INSERT, np.int32), bk)
+                   for bk in batches]
+        for t in tickets:
+            t.result(timeout=60)
+    stop.set()
+    for t in readers:
+        t.join(timeout=30)
+        assert not t.is_alive(), "reader blocked behind the writer"
+
+    assert not violations, f"torn batches observed: {violations[:5]}"
+    # >=0.5s of writer sleep elapsed; snapshot readers kept running
+    assert sum(reads) >= len(reads), reads
+    assert vi.version >= 1
+    with vi.snapshot() as s:
+        for bk in batches:
+            f, _ = s.value.lookup(bk)
+            assert f.all()
+
+
+def test_concurrent_submitters_coalesce():
+    """Many threads hammering submit() end with every key present and
+    strictly fewer commits than batches (the writer coalesced)."""
+    ix, _ = _build("bs")
+    vi = VersionedIndex(ix)
+    per_thread, n_threads = 30, 4
+    barrier = threading.Barrier(n_threads)
+
+    with GroupCommitWriter(vi) as w:
+        def submitter(tid):
+            barrier.wait()
+            for i in range(per_thread):
+                base = 10_000_000 * (tid + 1) + 10 * i
+                w.apply(np.full(4, OP_INSERT, np.int32),
+                        np.arange(base, base + 4, dtype=np.uint64),
+                        timeout=60)
+
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+            assert not t.is_alive()
+        w.flush(timeout=60)
+        total = per_thread * n_threads
+        assert w.stats["batches"] == total
+        assert w.stats["commits"] == vi.version
+        assert w.stats["commits"] <= total
+    with vi.snapshot() as s:
+        for tid in range(n_threads):
+            base = 10_000_000 * (tid + 1)
+            f, _ = s.value.lookup(
+                np.arange(base, base + 4, dtype=np.uint64))
+            assert f.all()
+
+
+def test_wait_for_version():
+    vi = VersionedIndex(Index.build(np.arange(1, 50, dtype=np.uint64),
+                                    spec=IndexSpec(n=8, backend="bs")))
+    with pytest.raises(TimeoutError):
+        vi.wait_for_version(1, timeout=0.05)
+
+    def late_commit():
+        time.sleep(0.1)
+        base, val = vi.pin()
+        vi.unpin(base)
+        vi.commit(base, val)
+
+    t = threading.Thread(target=late_commit)
+    t.start()
+    assert vi.wait_for_version(1, timeout=10) == 1
+    t.join()

@@ -237,3 +237,28 @@ def test_auto_with_values_picks_value_backend(rng):
     found, got = idx.lookup(keys[:50])
     assert found.all()
     np.testing.assert_array_equal(got, vals[:50])
+
+
+@pytest.mark.parametrize("be", BACKENDS)
+def test_backends_advertise_fused_ops_capability(rng, be):
+    """Every shipped backend coalesces mixed batches into one dispatch
+    and says so via the capability flag (the composed fallback stays
+    reachable for third-party backends only)."""
+    idx = Index.build(clustered(rng, n_clusters=20, per=10),
+                      spec=IndexSpec(n=N, backend=be))
+    assert idx.impl.supports_fused_ops is True
+
+
+def test_apply_result_dict_view_is_deprecated(rng):
+    from repro.core import OP_LOOKUP, ApplyResult
+
+    keys = clustered(rng, n_clusters=20, per=10)
+    idx = Index.build(keys, spec=IndexSpec(n=N, backend="bs"))
+    _, res = idx.apply_ops(np.full(4, OP_LOOKUP, np.int32), keys[:4])
+    assert isinstance(res, ApplyResult)
+    np.testing.assert_array_equal(res.found, [True] * 4)
+    with pytest.warns(DeprecationWarning, match=r"\.found field"):
+        legacy = res["found"]
+    np.testing.assert_array_equal(legacy, res.found)
+    with pytest.raises(KeyError):
+        res["nonsense"]

@@ -197,9 +197,11 @@ def test_apply_ops_matches_sequential(backend, rng):
                    newk[1], newk[2], present[2], newk[0]], np.uint64)
     ix2, res = ix.apply_ops(ops, ks)
     # lookups read pre-batch state
-    assert res["found"][0] and res["found"][2]
-    assert not res["found"][7]  # inserted in this batch -> pre-state miss
-    assert res["stats"]["deleted"] == 2
+    assert res.found[0] and res.found[2]
+    assert not res.found[7]  # inserted in this batch -> pre-state miss
+    # effective DELETE entries report the key they removed
+    assert res.found[1] and res.found[6]
+    assert res.stats["deleted"] == 2
     found, _ = ix2.lookup(np.array(
         [present[1], present[2], 10, 20], np.uint64))
     np.testing.assert_array_equal(found, [False, False, True, True])
