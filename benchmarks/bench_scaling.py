@@ -34,11 +34,11 @@ qs = rng.choice(keys, 131072)
 qh, ql = split_u64(qs)
 sh = NamedSharding(mesh, P(('data', 'model')))
 qh = jax.device_put(jnp.asarray(qh), sh); ql = jax.device_put(jnp.asarray(ql), sh)
-f, v, o = lookup(st, qh, ql); jax.block_until_ready(f)
+out = lookup(st, qh, ql); f = out[0]; jax.block_until_ready(f)
 times = []
 for _ in range(5):
     t0 = time.perf_counter()
-    f, v, o = lookup(st, qh, ql)
+    f = lookup(st, qh, ql)[0]
     jax.block_until_ready(f)
     times.append(time.perf_counter() - t0)
 dt = float(np.median(times))

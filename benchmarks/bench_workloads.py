@@ -7,10 +7,12 @@ full-tree device<->host copies).  Serving rows: wlJ_engine_step (fused
 decode + index dispatch), wlL_group_commit (1/2/4 submitter threads
 coalescing through the group-commit writer) and wlM_engine_startup
 (cold/warm construction->first-step, informational ``gate: "info"``).
+wlN_learned_lookup pits the learned ``lrn`` backend against bs/cbs on
+the learnable read-only distributions (books/fb/uniform).
 
 One backend-agnostic code path through the ``Index`` facade — pick the
-tree with ``--backend {bs,cbs,auto,all}`` instead of duplicated BS/CBS
-blocks.  A sorted-array + vmapped-binary-search baseline (the strongest
+tree with ``--backend {bs,cbs,lrn,auto,all}`` instead of duplicated
+per-backend blocks.  A sorted-array + vmapped-binary-search baseline (the strongest
 simple read-only competitor on TPU-like hardware) rides along for
 workload A.
 
@@ -33,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Index, IndexSpec
+from repro.core import Index, IndexSpec, get_backend
 from repro.core.layout import split_u64
 from repro.data.keys import gen_keys
 from .common import row, time_fn
@@ -65,7 +67,10 @@ def run_backend(backend: str, dist: str, build: np.ndarray,
     rng = np.random.default_rng(1)
     vals0 = np.arange(len(build), dtype=np.uint32)
     spec = IndexSpec(n=128, backend=backend)
-    idx = Index.build(build, vals0 if backend == "bs" else None, spec=spec)
+    # "auto" resolves at build time, so only named backends can declare
+    # value support up front
+    use_vals = backend != "auto" and get_backend(backend).supports_values
+    idx = Index.build(build, vals0 if use_vals else None, spec=spec)
     resolved = idx.backend  # what "auto" decided
     tag = f"{backend}@{resolved}" if backend == "auto" else resolved
     qh, ql = map(jnp.asarray, split_u64(reads))
@@ -228,6 +233,26 @@ def bench_build(dist: str, build: np.ndarray, rows: list) -> None:
                   resolved=be, dist=dist, workload="K_build")
 
 
+def bench_learned_lookup(build_n: int, ops: int, rows: list) -> None:
+    """Workload N: the learned-backend headline — batched lookups over
+    the three learnable SOSD-style distributions (books/fb/uniform),
+    bs vs cbs vs lrn through the same facade call.  This is the row the
+    FITing-tree backend exists for: the model replaces the inner-level
+    descent with one predict+probe, so lrn's margin over bs here is the
+    read-path payoff the ``auto`` heuristic banks on."""
+    rng = np.random.default_rng(7)
+    for dist in ("books", "fb", "uniform"):
+        keys = gen_keys(dist, build_n, seed=0)
+        reads = rng.choice(keys, ops)
+        qh, ql = map(jnp.asarray, split_u64(reads))
+        for be in ("bs", "cbs", "lrn"):
+            idx = Index.build(keys, spec=IndexSpec(n=128, backend=be))
+            us = time_fn(lambda: idx.lookup_batch(qh, ql))
+            _emit(rows, f"wlN_learned_lookup/{be}/{dist}", us,
+                  f"{ops/us:.2f}Mops", backend=be, resolved=be,
+                  dist=dist, workload="N_learned")
+
+
 def bench_engine_step(rows: list) -> None:
     """Workload J: fused serving engine step — decode over the slot batch
     plus a Zipf-skewed admit/complete mix, all queued index ops committed
@@ -372,7 +397,7 @@ def bench_engine_startup(rows: list) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", default="all",
-                    choices=("bs", "cbs", "auto", "all"))
+                    choices=("bs", "cbs", "lrn", "auto", "all"))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + metadata as JSON")
     ap.add_argument("--build", type=int, default=BUILD)
@@ -386,7 +411,8 @@ def main(argv=None) -> None:
                          "apart decorrelates CI-runner noise bursts that "
                          "back-to-back repeats sit inside.  CI uses 3.")
     args = ap.parse_args(argv)
-    backends = ("bs", "cbs") if args.backend == "all" else (args.backend,)
+    backends = (("bs", "cbs", "lrn") if args.backend == "all"
+                else (args.backend,))
 
     merged: dict[str, dict] = {}
     for p in range(max(1, args.repeat)):
@@ -413,6 +439,7 @@ def main(argv=None) -> None:
             _emit(rows, f"wlA/sorted_array/{dist}", us,
                   f"{args.ops/us:.2f}Mops", backend="sorted_array",
                   resolved="sorted_array", dist=dist, workload="A")
+        bench_learned_lookup(args.build, args.ops, rows)
         bench_engine_step(rows)
         bench_group_commit(rows)
         bench_engine_startup(rows)

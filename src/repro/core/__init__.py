@@ -7,6 +7,8 @@ decision mechanism as ``backend="auto"``.
 
 Modules:
   index       the Index facade + Backend protocol/registry  <- start here
+  learned     FITing-tree learned routing over the gapped leaves
+              (registered as backend "lrn")
   layout      node layout, MAXKEY, u64<->u32-plane helpers, derived bitmap
   succ        branchless successor operators (paper Snippet 1/2)
   reference   host-side scalar oracle (paper Algorithms 3-6)
@@ -76,8 +78,10 @@ from .index import (  # noqa: F401
     backend_for_tree,
     get_backend,
     register_backend,
+    registered_backends,
     resolve_backend,
 )
+from .learned import LearnedTreeArrays  # noqa: F401
 from .versioning import VersionedIndex  # noqa: F401
 from .group_commit import (  # noqa: F401
     CommitTicket,
@@ -100,6 +104,7 @@ __all__ = [
     "backend_for_tree",
     "get_backend",
     "register_backend",
+    "registered_backends",
     "resolve_backend",
     "VersionedIndex",
     # group-commit serving core
@@ -112,6 +117,7 @@ __all__ = [
     "MAXKEY",
     "BSTreeArrays",
     "CBSTreeArrays",
+    "LearnedTreeArrays",
     "join_u64",
     "split_u64",
     "used_mask",

@@ -182,26 +182,33 @@ class StreamBuilder:
     legacy host builders for any chunking of the same input.
 
     ``backend`` is ``"bs"`` (values supported; a missing ``vals`` chunk
-    defaults to the running key ordinal, matching ``bulk_load``) or
-    ``"cbs"`` (keys only).  ``"auto"`` must be resolved by the caller
+    defaults to the running key ordinal, matching ``bulk_load``),
+    ``"cbs"`` (keys only) or ``"lrn"`` (streams through the bs leaf
+    path, then fits the learned routing model over the finished tree at
+    ``finalize()`` — the fit needs only the separators, never the key
+    stream).  ``"auto"`` must be resolved by the caller
     (``Index.build_streamed`` samples the first chunk).
     """
 
     def __init__(self, spec=None, *, backend: Optional[str] = None,
                  n: Optional[int] = None, alpha: Optional[float] = None,
-                 slack: Optional[float] = None):
+                 slack: Optional[float] = None,
+                 lrn_eps: Optional[int] = None):
         if spec is not None:  # duck-typed IndexSpec
             backend = backend if backend is not None else spec.backend
             n = n if n is not None else spec.n
             alpha = alpha if alpha is not None else spec.alpha
             slack = slack if slack is not None else spec.slack
+            if lrn_eps is None:
+                lrn_eps = getattr(spec, "lrn_eps", None)
         self.backend = backend if backend is not None else "bs"
         self.n = int(n) if n is not None else DEFAULT_N
         self.alpha = float(alpha) if alpha is not None else DEFAULT_ALPHA
         self.slack = float(slack) if slack is not None else 1.5
-        if self.backend not in ("bs", "cbs"):
+        self.lrn_eps = int(lrn_eps) if lrn_eps is not None else 16
+        if self.backend not in ("bs", "cbs", "lrn"):
             raise ValueError(
-                f"StreamBuilder supports backends 'bs'/'cbs', not "
+                f"StreamBuilder supports backends 'bs'/'cbs'/'lrn', not "
                 f"{self.backend!r} (resolve 'auto' first, e.g. via "
                 f"Index.build_streamed)")
         from .compress import TAG_U16, _take_sizes
@@ -258,10 +265,10 @@ class StreamBuilder:
         self._last_key = keys[-1]
         self._keys_fed += len(keys)
 
-        if self.backend == "bs":
-            self._feed_bs(keys, vals)
-        else:
+        if self.backend == "cbs":
             self._feed_cbs(keys)
+        else:  # bs and lrn share the gapped leaf stream
+            self._feed_bs(keys, vals)
         return self
 
     # -- BS: positional leaves, spread-scatter pack ----------------------
@@ -368,13 +375,19 @@ class StreamBuilder:
     # -- finalize --------------------------------------------------------
     def finalize(self):
         """Erect the inner levels and return the finished tree
-        (``BSTreeArrays`` or ``CBSTreeArrays``).  One-shot."""
+        (``BSTreeArrays``, ``CBSTreeArrays`` or ``LearnedTreeArrays``).
+        One-shot."""
         if self._done:
             raise RuntimeError("StreamBuilder already finalized")
         self._done = True
-        if self.backend == "bs":
-            return self._finalize_bs()
-        return self._finalize_cbs()
+        if self.backend == "cbs":
+            return self._finalize_cbs()
+        tree = self._finalize_bs()
+        if self.backend == "lrn":
+            from .learned import fit_tree
+
+            return fit_tree(tree, eps=self.lrn_eps)
+        return tree
 
     def _finalize_bs(self) -> BSTreeArrays:
         from .maintenance import _grown_cap

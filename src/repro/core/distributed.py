@@ -60,6 +60,18 @@ from .succ import succ_gt
 AxisName = Union[str, tuple[str, ...]]
 
 
+def _reject_lrn(backend: str) -> None:
+    """The learned backend cannot stack: per-shard fence/segment tables
+    have shard-specific padded sizes and static error bounds, which the
+    equal-shape ``_stack_trees`` container cannot hold.  Build per-shard
+    ``Index`` objects instead (or shard the base 'bs' trees)."""
+    if backend == "lrn":
+        raise NotImplementedError(
+            "build_sharded does not support the learned 'lrn' backend "
+            "(per-shard model tables are shard-shaped); use backend='bs' "
+            "or standalone Index objects per shard")
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ShardedBSTree:
@@ -228,6 +240,7 @@ def build_sharded(
         raise ValueError("build_sharded needs keys (or key_source=)")
     keys = np.asarray(keys, dtype=np.uint64)
     backend = resolve_backend(backend, keys, n, has_values=vals is not None)
+    _reject_lrn(backend)
     impl = get_backend(backend)
     if vals is not None and not impl.supports_values:
         raise ValueError(f"backend {backend!r} is keys-only; drop vals")
@@ -279,6 +292,7 @@ def _build_sharded_streamed(key_source, total_keys: int, num_shards: int,
             continue
         if spec is None:
             name = resolve_backend(name, chunk, n, has_values=False)
+            _reject_lrn(name)
             spec = IndexSpec(n=n, alpha=alpha, backend=name, slack=slack)
         start, end = off, off + len(chunk)
         s = max(0, min(num_shards - 1,
@@ -300,6 +314,7 @@ def _build_sharded_streamed(key_source, total_keys: int, num_shards: int,
     if spec is None:  # empty stream
         name = resolve_backend(name, np.zeros(0, np.uint64), n,
                                has_values=False)
+        _reject_lrn(name)
     parts = [
         (b.finalize() if b is not None
          else StreamBuilder(backend=name, n=n, alpha=alpha,
@@ -348,9 +363,12 @@ def _local_tree(trees):
 
 def _local_lookup(tree, q_hi, q_lo):
     """Per-shard batched lookup: dispatch to the registered backend's
-    device-level kernel — the same (found, vals) normalisation as the
-    facade, so new backends shard without touching this module."""
-    return backend_for_tree(tree).lookup_device(tree, q_hi, q_lo)
+    device-level kernel.  Value backends return ``(found, vals)``,
+    keys-only backends ``(found, pos_hi, pos_lo)`` — normalise to
+    ``(found, payload_planes)`` so the exchange below stays
+    backend-agnostic (the plane count is static per compiled backend)."""
+    out = backend_for_tree(tree).lookup_device(tree, q_hi, q_lo)
+    return out[0], tuple(out[1:])
 
 
 def make_sharded_lookup(
@@ -362,12 +380,15 @@ def make_sharded_lookup(
 ):
     """Build the jitted SPMD lookup for a mesh.
 
-    Returns ``lookup(st, q_hi, q_lo) -> (found, vals, overflow)`` where the
-    query batch is sharded over (data_axes x model_axis) — every device
-    contributes and receives its own slice, like MoE token dispatch.
-    Works with any backend the sharded index was built with; ``vals``
-    follows the facade contract (stored value, or record position on
-    keys-only backends).
+    Returns ``lookup(st, q_hi, q_lo) -> (found, *payload, overflow)``
+    where the query batch is sharded over (data_axes x model_axis) —
+    every device contributes and receives its own slice, like MoE token
+    dispatch.  Works with any backend the sharded index was built with;
+    ``payload`` follows the backend's ``lookup_device`` contract — one
+    ``vals`` plane on value backends, two ``(pos_hi, pos_lo)`` record
+    position planes on keys-only backends.  Unpack arity-safely
+    (``out[0]``/``out[-1]`` for found/overflow) when the backend is not
+    known statically.
     """
     model_axes = (model_axis,) if isinstance(model_axis, str) else tuple(model_axis)
     m_total = int(np.prod([mesh.shape[a] for a in model_axes]))
@@ -419,18 +440,18 @@ def make_sharded_lookup(
         recv_hi, recv_lo, recv_valid = a2a(send_hi), a2a(send_lo), a2a(send_valid)
 
         # 4. local lookup (invalid slots give garbage; masked out)
-        found, vals = _local_lookup(tree, recv_hi, recv_lo)
+        found, planes = _local_lookup(tree, recv_hi, recv_lo)
         found = found & (recv_valid == 1)
 
-        # 5. return results and unpermute
+        # 5. return results and unpermute (each payload plane exchanges
+        # independently — one for value backends, two for positions)
         back_f = a2a(found.astype(jnp.int32))
-        back_v = a2a(vals)
-        res_f = back_f[slot_safe.clip(0, m_total * cap - 1)] == 1
-        res_v = back_v[slot_safe.clip(0, m_total * cap - 1)]
-        res_f = jnp.where(ok, res_f, False)
-        res_v = jnp.where(ok, res_v, 0)
+        back_p = tuple(a2a(v) for v in planes)
+        home = slot_safe.clip(0, m_total * cap - 1)
+        res_f = jnp.where(ok, back_f[home] == 1, False)
+        res_p = tuple(jnp.where(ok, v[home], 0) for v in back_p)
         inv = jnp.argsort(order, stable=True)
-        return res_f[inv], res_v[inv], (~ok)[inv]
+        return (res_f[inv], *(v[inv] for v in res_p), (~ok)[inv])
 
     qspec = P((*data_axes, *model_axes))
     cache: dict = {}
@@ -440,10 +461,13 @@ def make_sharded_lookup(
                st.num_shards)
         if key not in cache:
             tree_specs = jax.tree.map(lambda _: P(model_axes), st.trees)
+            # found + payload planes + overflow; keys-only backends carry
+            # the record position as two u32 planes instead of one vals
+            n_out = 3 if get_backend(st.backend).supports_values else 4
             kwargs = dict(
                 mesh=mesh,
                 in_specs=(tree_specs, P(), P(), qspec, qspec),
-                out_specs=(qspec, qspec, qspec),
+                out_specs=(qspec,) * n_out,
             )
             try:
                 smapped = shard_map(body, check_vma=False, **kwargs)

@@ -126,6 +126,7 @@ class GroupCommitWriter:
         self._cv = threading.Condition()
         self._queue: list[_PendingBatch] = []
         self._stop = False
+        self._closed = False
         self._thread: Optional[threading.Thread] = None
         self.max_group_ops = int(max_group_ops)
         self.stats = {"batches": 0, "commits": 0, "coalesced_batches": 0,
@@ -139,16 +140,19 @@ class GroupCommitWriter:
             if self._thread is not None and self._thread.is_alive():
                 return
             self._stop = False
+            self._closed = False
             self._thread = threading.Thread(
                 target=self._run, name="group-commit-writer", daemon=True)
             self._thread.start()
 
     def close(self, timeout: Optional[float] = 10.0) -> None:
         """Stop the writer thread; queued batches drain first (no ticket
-        is left hanging).  Idempotent; the writer can be restarted with
-        :meth:`start`."""
+        is left hanging) and later ``submit`` calls raise instead of
+        enqueueing a forever-pending ticket.  Idempotent; the writer can
+        be restarted with :meth:`start` (which re-opens submission)."""
         with self._cv:
             self._stop = True
+            self._closed = True
             self._cv.notify_all()
         t = self._thread
         if t is not None and t.is_alive():
@@ -189,6 +193,10 @@ class GroupCommitWriter:
                 raise ValueError("vals must align with ops")
         pending = _PendingBatch(ops, keys, vals)
         with self._cv:
+            if self._closed:
+                raise RuntimeError(
+                    "GroupCommitWriter is closed; start() it again to "
+                    "resume submissions")
             self._queue.append(pending)
             self.stats["batches"] += 1
             self._cv.notify_all()

@@ -21,9 +21,10 @@ learned leaves, GPU layouts — plug in without touching any caller:
 Capability differences are surfaced as *flags*, not signature divergence:
 the CBS backend stores keys only (the paper's evaluated configuration), so
 ``idx.supports_values`` is False and ``lookup`` returns the stable record
-*position* ``leaf * 4n + rank`` instead of a stored value; passing values
-to a keys-only backend raises ``ValueError`` instead of silently dropping
-them.
+*position* ``leaf * 4n + rank`` (as uint64 — positions exceed 2^32 at
+scale, so the device kernels carry them as two u32 planes) instead of a
+stored value; passing values to a keys-only backend raises ``ValueError``
+instead of silently dropping them.
 
 Hot paths: the facade's batch entry points (``lookup``, ``insert``,
 ``delete`` and the device-level ``lookup_batch``) dispatch straight to the
@@ -70,6 +71,7 @@ __all__ = [
     "backend_for_tree",
     "get_backend",
     "register_backend",
+    "registered_backends",
     "resolve_backend",
 ]
 
@@ -173,15 +175,22 @@ class ApplyResult:
 class IndexSpec:
     """Build-time configuration, shared verbatim by all backends.
 
-    ``backend`` is ``"bs"``, ``"cbs"`` or ``"auto"`` (the paper §6
-    decision mechanism picks per key distribution).  Hashable so it can
-    ride in the static part of the :class:`Index` pytree.
+    ``backend`` is a registered backend name (``"bs"``, ``"cbs"``,
+    ``"lrn"``) or ``"auto"`` (the paper §6 decision mechanism picks per
+    key distribution).  ``workload`` is an auto-only hint:
+    ``"read_heavy"`` lets the decision pick the learned backend on
+    learnable distributions; the default ``"mixed"`` keeps the original
+    bs/cbs rule.  ``lrn_eps`` is the learned backend's fit error bound
+    in ranks (the probe window is ``2*eps + 1`` fences).  Hashable so it
+    can ride in the static part of the :class:`Index` pytree.
     """
 
     n: int = DEFAULT_N
     alpha: float = DEFAULT_ALPHA
     backend: str = "auto"
     slack: float = 1.5
+    lrn_eps: int = 16
+    workload: str = "mixed"
 
 
 @runtime_checkable
@@ -213,7 +222,13 @@ class Backend(Protocol):
               spec: IndexSpec) -> Any: ...
 
     def lookup_device(self, tree: Any, q_hi: jnp.ndarray,
-                      q_lo: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+                      q_lo: jnp.ndarray) -> tuple:
+        """Value-bearing backends return ``(found, vals)``; keys-only
+        backends return ``(found, pos_hi, pos_lo)`` — the record
+        position ``leaf * 4n + rank`` as two u32 planes, since positions
+        exceed 2^32 at scale and devices have no u64 lanes.  The facade
+        (and the sharded lookup) normalise both shapes for callers."""
+        ...
 
     def insert(self, tree: Any, keys: np.ndarray,
                vals: Optional[np.ndarray],
@@ -422,16 +437,35 @@ class _CBSBackend:
         assert (keys[:-1] < keys[1:]).all(), "leaf chain out of order"
 
 
+def _record_position(leaf, rank, cap):
+    """``leaf * cap + rank`` as (pos_hi, pos_lo) u32 planes, exact past
+    the 2^32 boundary.  ``leaf`` is split into 16-bit halves so every
+    partial product fits u32 (devices have no u64 lanes; trace-time
+    assert below pins the precondition ``cap < 2^16``)."""
+    assert cap < (1 << 16), f"two-plane position math assumes 4n < 2^16, got {cap}"
+    l32 = leaf.astype(jnp.uint32)
+    a = l32 >> 16
+    b = l32 & jnp.uint32(0xFFFF)
+    t = a * jnp.uint32(cap)  # high-half product, < 2^32
+    x = t << 16  # its low 32 bits
+    y = b * jnp.uint32(cap) + rank.astype(jnp.uint32)  # < 2^32
+    s = x + y
+    carry = (s < x).astype(jnp.uint32)
+    return (t >> 16) + carry, s
+
+
 @jax.jit
 def _cbs_lookup_normalised(tree, q_hi, q_lo):
     """One fused dispatch: cbs kernel + the (found, leaf, rank) ->
-    (found, record position) normalisation, position = leaf * 4n + rank
-    (rank-is-the-record, module docstring of compress)."""
+    (found, position planes) normalisation, position = leaf * 4n + rank
+    (rank-is-the-record, module docstring of compress).  The position is
+    computed in two u32 planes — uint32 alone silently wraps once
+    ``num_leaves * 4n`` exceeds 2^32."""
     found, leaf, rank = _cbs.cbs_lookup_batch(tree, q_hi, q_lo)
-    cap = 4 * tree.node_width
-    pos = (leaf.astype(jnp.uint32) * jnp.uint32(cap)
-           + rank.astype(jnp.uint32))
-    return found, jnp.where(found, pos, 0)
+    pos_hi, pos_lo = _record_position(leaf, rank, 4 * tree.node_width)
+    zero = jnp.uint32(0)
+    return (found, jnp.where(found, pos_hi, zero),
+            jnp.where(found, pos_lo, zero))
 
 
 @jax.jit
@@ -539,6 +573,13 @@ def get_backend(name: str) -> Backend:
         ) from None
 
 
+def registered_backends() -> tuple[str, ...]:
+    """Sorted names of every registered backend (``"auto"`` excluded —
+    it is a resolution rule, not a backend).  Conformance batteries
+    parametrize over this so new backends are picked up automatically."""
+    return tuple(sorted(_BACKENDS))
+
+
 def backend_for_tree(tree: Any) -> Backend:
     """The registered backend whose array container ``tree`` is."""
     for impl in _BACKENDS.values():
@@ -551,12 +592,26 @@ def backend_for_tree(tree: Any) -> Backend:
 
 
 def resolve_backend(name: str, keys: np.ndarray, n: int, *,
-                    has_values: bool = False) -> str:
+                    has_values: bool = False,
+                    workload: str = "mixed") -> str:
     """Resolve ``"auto"`` to a concrete backend name — the single home of
     the paper §6 decision rule, shared by ``Index.build`` and the sharded
-    builder.  ``has_values`` restricts auto to value-bearing backends."""
+    builder.  ``has_values`` restricts auto to value-bearing backends.
+
+    ``workload="read_heavy"`` extends the rule with the learned backend:
+    when the would-be separator stream is learnable (few piecewise-linear
+    segments at the default error bound — see
+    :func:`repro.core.learned.learnable`), reads collapse to predict +
+    bounded probe, which beats descent on TPU; churn-heavy workloads keep
+    the default rule since every structural change costs the learned
+    backend a refit."""
     if name != "auto":
         return name
+    if workload == "read_heavy":
+        from .learned import learnable
+
+        if learnable(keys, n):
+            return "lrn"
     if has_values:
         return "bs"
     return "cbs" if _cbs.decide(keys, n) else "bs"
@@ -627,7 +682,8 @@ class Index:
             vals_u = np.asarray(vals, dtype=np.uint32)[order][last]
 
         name = resolve_backend(spec.backend, keys_u, spec.n,
-                               has_values=vals is not None)
+                               has_values=vals is not None,
+                               workload=spec.workload)
         impl = get_backend(name)
         if vals_u is not None and not impl.supports_values:
             raise ValueError(
@@ -670,21 +726,25 @@ class Index:
             keys_c = np.asarray(keys_c, dtype=np.uint64)
             if builder is None:
                 name = resolve_backend(name, keys_c, spec.n,
-                                       has_values=vals_c is not None)
+                                       has_values=vals_c is not None,
+                                       workload=spec.workload)
                 impl = get_backend(name)
                 if vals_c is not None and not impl.supports_values:
                     raise ValueError(
                         f"backend {name!r} is keys-only; drop vals or "
                         f"use 'bs'")
                 builder = StreamBuilder(backend=name, n=spec.n,
-                                        alpha=spec.alpha, slack=spec.slack)
+                                        alpha=spec.alpha, slack=spec.slack,
+                                        lrn_eps=spec.lrn_eps)
             if vals_c is None and get_backend(name).supports_values:
                 vals_c = _default_vals(keys_c)
             builder.feed(keys_c, vals_c)
         if builder is None:  # empty source: resolve on an empty key set
-            name = resolve_backend(name, np.zeros(0, np.uint64), spec.n)
+            name = resolve_backend(name, np.zeros(0, np.uint64), spec.n,
+                                   workload=spec.workload)
             builder = StreamBuilder(backend=name, n=spec.n,
-                                    alpha=spec.alpha, slack=spec.slack)
+                                    alpha=spec.alpha, slack=spec.slack,
+                                    lrn_eps=spec.lrn_eps)
         return cls(tree=builder.finalize(), backend=name, spec=spec)
 
     @classmethod
@@ -707,9 +767,12 @@ class Index:
 
     # -- reads -----------------------------------------------------------
     def lookup(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Batched equality search.  Returns ``(found (B,) bool,
-        vals (B,) uint32)``; on a keys-only backend ``vals`` is the stable
-        record position ``leaf * 4n + rank`` (0 where not found).
+        """Batched equality search.  Returns ``(found (B,) bool, vals)``;
+        on a value-bearing backend ``vals`` is the (B,) uint32 stored
+        value, on a keys-only backend the (B,) *uint64* stable record
+        position ``leaf * 4n + rank`` (0 where not found — positions
+        exceed 2^32 at scale, so the u32-plane device result is joined
+        to u64 here on host).
 
         A zero-length batch returns empty results without tracing a
         degenerate descent.  Non-empty batches are padded to the next
@@ -719,15 +782,25 @@ class Index:
         keys = np.asarray(keys, dtype=np.uint64)
         b = keys.shape[0]
         if b == 0:
-            return np.zeros(0, bool), np.zeros(0, np.uint32)
+            if self.supports_values:
+                return np.zeros(0, bool), np.zeros(0, np.uint32)
+            return np.zeros(0, bool), np.zeros(0, np.uint64)
         hi, lo = split_u64(_traverse.pad_to_bucket(keys))
-        found, vals = self.impl.lookup_device(
+        out = self.impl.lookup_device(
             self.tree, jnp.asarray(hi), jnp.asarray(lo))
+        if len(out) == 3:  # keys-only: record-position planes
+            found, pos_hi, pos_lo = out
+            pos = join_u64(np.asarray(pos_hi)[:b], np.asarray(pos_lo)[:b])
+            return np.asarray(found)[:b], pos
+        found, vals = out
         return np.asarray(found)[:b], np.asarray(vals)[:b]
 
     def lookup_batch(self, q_hi: jnp.ndarray, q_lo: jnp.ndarray):
         """Device-level lookup on u32 key planes (for jit pipelines and
-        benchmarks); same normalised ``(found, vals)`` contract."""
+        benchmarks): the backend's ``lookup_device`` tuple verbatim —
+        ``(found, vals)`` on value-bearing backends, ``(found, pos_hi,
+        pos_lo)`` record-position planes on keys-only backends (see
+        :class:`Backend`)."""
         return self.impl.lookup_device(self.tree, q_hi, q_lo)
 
     def _range_leaves(self, lo: np.uint64, hi: np.uint64):
@@ -939,3 +1012,9 @@ class Index:
 
     def __len__(self) -> int:
         return self.impl.num_keys(self.tree)
+
+
+# registers the learned FITing-tree backend ("lrn") on import, the same
+# way bs/cbs register above — importing repro.core always yields the full
+# registry (the module must come after the registry definitions)
+from . import learned  # noqa: E402,F401

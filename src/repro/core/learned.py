@@ -1,0 +1,396 @@
+"""Learned FITing-tree backend (``lrn``) behind the ``Backend`` registry.
+
+:class:`LearnedTreeArrays` wraps an *unmodified* ``BSTreeArrays`` base
+with a read-side piecewise-linear model, so every write primitive —
+``segmented_rows_upsert``/``delete``, the device maintenance pass,
+``compact()`` — works unchanged by delegating to the registered ``bs``
+backend on ``base``.  Only the read path differs: descent collapses to
+predict + bounded branchless probe (``kernels/predict_probe.py``).
+
+The model
+---------
+* ``fence_hi/lo`` hold the base tree's **separators** — every used inner
+  key, sorted — MAXKEY-padded to a power of two.  For any valid BS-tree,
+  ``count(separators <= q)`` equals the chain position of the leaf a
+  full ``succ_gt`` descent routes ``q`` to, so the model routes
+  *identically* to the base tree.  Crucially it stays exact between
+  refits: in-frame upserts and lazy deletes never touch inner keys, so
+  the fences only move on structural change (splits / compact), which is
+  exactly when :meth:`_LRNBackend._refit` refits.
+* ``chain_leaf`` maps chain position -> leaf id (``next_leaf`` walk).
+* The fences are fit with a greedy shrinking-cone pass into segments of
+  guaranteed max rank error ``spec.lrn_eps``; the *achieved* error of
+  the f32 model is then measured on device over every inter-fence
+  interval boundary (the prediction is monotone inside each interval,
+  so interval endpoints realise the worst case) and rounded up to a
+  power of two with a +4 guard for TPU f32 drift.  The probe window
+  ``2*eps + 1`` is therefore sufficient by construction, making lookups
+  exact — not approximate — for every query.
+
+Retrain policy: when a refit's achieved eps degrades past
+``4 * target_eps`` (structural churn has scrambled the separator
+distribution), the backend force-compacts the base — rebuilding the
+leaf chain at the target fill — and refits once.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+from . import bstree as _bs
+from .index import IndexSpec, get_backend, register_backend
+from .layout import MAXKEY, BSTreeArrays, join_u64, split_u64, used_mask
+
+#: default fit error bound (ranks) — overridable via ``IndexSpec.lrn_eps``
+DEFAULT_LRN_EPS = 16
+
+
+# ---------------------------------------------------------------------------
+# Tree container
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LearnedTreeArrays:
+    """BS base tree + resident learned-routing tables.  Immutable pytree."""
+
+    base: BSTreeArrays
+    # --- fence table (separators of ``base``, sorted, MAXKEY-padded) ---
+    fence_hi: jnp.ndarray  # (P,) uint32
+    fence_lo: jnp.ndarray  # (P,) uint32
+    chain_leaf: jnp.ndarray  # (P,) int32: chain position -> leaf id
+    # --- per-segment model (first fence, slope, bias; MAXKEY/0-padded) ---
+    seg_key_hi: jnp.ndarray  # (G,) uint32
+    seg_key_lo: jnp.ndarray  # (G,) uint32
+    seg_slope: jnp.ndarray  # (G,) float32 — ranks per key unit, >= 0
+    seg_bias: jnp.ndarray  # (G,) float32 — rank at the segment's first fence
+    num_fences: jnp.ndarray  # () int32
+    # --- static ---
+    eps: int = dataclasses.field(metadata=dict(static=True))  # achieved
+    target_eps: int = dataclasses.field(metadata=dict(static=True))
+
+    # -- facade delegation (stats() / wrap() read these uniformly) -------
+    @property
+    def node_width(self) -> int:
+        return self.base.node_width
+
+    @property
+    def height(self) -> int:
+        return self.base.height
+
+    @property
+    def num_leaves(self) -> jnp.ndarray:
+        return self.base.num_leaves
+
+    @property
+    def num_inner(self) -> jnp.ndarray:
+        return self.base.num_inner
+
+    @property
+    def leaf_capacity(self) -> int:
+        return self.base.leaf_capacity
+
+    @property
+    def inner_capacity(self) -> int:
+        return self.base.inner_capacity
+
+    def memory_bytes(self) -> int:
+        total = self.base.memory_bytes()
+        for f in dataclasses.fields(self):
+            if f.name == "base" or f.metadata.get("static"):
+                continue
+            arr = getattr(self, f.name)
+            total += arr.size * arr.dtype.itemsize
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Fitting (host: greedy shrinking cone; device: achieved-eps measurement)
+# ---------------------------------------------------------------------------
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def _pad_maxkey(a: np.ndarray, size: int) -> np.ndarray:
+    return np.concatenate(
+        [a, np.full(size - len(a), MAXKEY, np.uint64)])
+
+
+def _extract_separators(base: BSTreeArrays) -> np.ndarray:
+    """Every used inner key of ``base``, sorted — exactly ``num_leaves-1``
+    values for a valid tree (each leaf boundary is separated once)."""
+    ni = int(base.num_inner)
+    if ni == 0:
+        return np.zeros(0, np.uint64)
+    ih = base.inner_hi[:ni]
+    il = base.inner_lo[:ni]
+    um = np.asarray(used_mask(ih, il))
+    seps = join_u64(np.asarray(ih), np.asarray(il))[um]
+    seps.sort()
+    return seps
+
+
+def _leaf_chain(base: BSTreeArrays) -> np.ndarray:
+    """Leaf ids in chain order, starting at the leaf that owns key 0."""
+    nxt = np.asarray(base.next_leaf)
+    hi, lo = split_u64(np.zeros(1, np.uint64))
+    head = int(_bs.descend(base, jnp.asarray(hi), jnp.asarray(lo))[0])
+    chain = []
+    leaf = head
+    while leaf != -1:
+        chain.append(leaf)
+        leaf = int(nxt[leaf])
+    return np.asarray(chain, np.int32)
+
+
+def _fit_segments(fences: np.ndarray, err: float) -> list:
+    """Greedy shrinking-cone fit over sorted u64 ``fences``.
+
+    Returns ``[(start_index, slope), ...]`` such that for every fence
+    ``i`` in a segment starting at ``s``::
+
+        | slope * float(fence_i - fence_s) - (i - s) | <= err
+
+    i.e. predicting with ``bias = s + 1`` lands within ``err`` ranks of
+    the true ``count(fences <= fence_i) = i + 1``.  Slopes are clamped
+    ``>= 0`` so the prediction stays monotone inside each inter-fence
+    interval (the error measurement relies on that).
+    """
+    segs = []
+    m = len(fences)
+    i = 0
+    while i < m:
+        s = i
+        lo, hi = 0.0, np.inf
+        i += 1
+        while i < m:
+            x = float(int(fences[i]) - int(fences[s]))
+            t = float(i - s)
+            nlo = max(lo, (t - err) / x)
+            nhi = min(hi, (t + err) / x)
+            if nlo > nhi:
+                break
+            lo, hi = nlo, nhi
+            i += 1
+        slope = 0.0 if hi == np.inf else max(0.0, (lo + hi) / 2.0)
+        segs.append((s, slope))
+    return segs
+
+
+def _measure_eps(seg_key_hi, seg_key_lo, seg_slope, seg_bias, num_fences,
+                 fences: np.ndarray) -> int:
+    """Max |prediction - true rank| of the f32 model, measured with the
+    exact op sequence of the lookup path (``predict_clipped_jnp``) over
+    every fence and fence-1 — the endpoints of every inter-fence
+    interval, where the monotone-per-interval prediction is extremal."""
+    if len(fences) == 0:
+        return 0
+    evals = np.unique(np.concatenate(
+        [fences, np.where(fences > 0, fences - np.uint64(1), fences)]))
+    targets = np.searchsorted(fences, evals, side="right").astype(np.int64)
+    hi, lo = split_u64(evals)
+    from repro.kernels.predict_probe import predict_clipped_jnp
+
+    c = predict_clipped_jnp(seg_key_hi, seg_key_lo, seg_slope, seg_bias,
+                            num_fences, jnp.asarray(hi), jnp.asarray(lo))
+    return int(np.max(np.abs(np.asarray(c, np.int64) - targets)))
+
+
+def fit_tree(base: BSTreeArrays, *, eps: int = DEFAULT_LRN_EPS
+             ) -> LearnedTreeArrays:
+    """Fit the learned routing model over an existing BS tree."""
+    target = max(int(eps), 1)
+    fences = _extract_separators(base)
+    chain = _leaf_chain(base)
+    if len(chain) != len(fences) + 1:
+        raise AssertionError(
+            f"separator/chain mismatch: {len(fences)} separators for a "
+            f"{len(chain)}-leaf chain (base tree is not a valid search "
+            f"tree)")
+    if len(fences) > 1:
+        assert (fences[:-1] < fences[1:]).all(), "separators not unique"
+
+    if len(fences):
+        segs = _fit_segments(fences, float(target))
+        starts = np.asarray([s for s, _ in segs], np.int64)
+        seg_keys = fences[starts]
+        slopes = np.asarray([sl for _, sl in segs], np.float32)
+        biases = (starts + 1).astype(np.float32)
+    else:  # single-leaf tree: one trivial segment predicting rank 0
+        seg_keys = np.zeros(1, np.uint64)
+        slopes = np.zeros(1, np.float32)
+        biases = np.zeros(1, np.float32)
+
+    g = _pow2(len(seg_keys))
+    skh, skl = split_u64(_pad_maxkey(seg_keys, g))
+    seg_key_hi = jnp.asarray(skh)
+    seg_key_lo = jnp.asarray(skl)
+    seg_slope = jnp.asarray(np.pad(slopes, (0, g - len(slopes))))
+    seg_bias = jnp.asarray(np.pad(biases, (0, g - len(biases))))
+    num_fences = jnp.asarray(len(fences), jnp.int32)
+
+    measured = _measure_eps(seg_key_hi, seg_key_lo, seg_slope, seg_bias,
+                            num_fences, fences)
+    # +4 guard: TPU f32 fma/rounding drift vs the jnp measurement path
+    # plus the sub-rank monotonicity wobble of the float conversion;
+    # pow2 keeps the set of compiled window widths small
+    achieved = _pow2(max(measured + 4, 4))
+    w = 2 * achieved + 1
+    p = _pow2(max(len(fences) + 1, w))
+    fh, fl = split_u64(_pad_maxkey(fences, p))
+    chain_p = np.pad(chain, (0, p - len(chain)), mode="edge")
+    return LearnedTreeArrays(
+        base=base,
+        fence_hi=jnp.asarray(fh),
+        fence_lo=jnp.asarray(fl),
+        chain_leaf=jnp.asarray(chain_p),
+        seg_key_hi=seg_key_hi,
+        seg_key_lo=seg_key_lo,
+        seg_slope=seg_slope,
+        seg_bias=seg_bias,
+        num_fences=num_fences,
+        eps=achieved,
+        target_eps=target,
+    )
+
+
+def learnable(keys: np.ndarray, n: int, *, eps: int = DEFAULT_LRN_EPS,
+              max_seg_frac: float = 1 / 128) -> bool:
+    """Cheap §6-style learnability probe for ``resolve_backend``: fit the
+    would-be separators (every ``per``-th key) and accept when one cone
+    segment covers ``1 / max_seg_frac`` separators on average (default:
+    128 — smooth macro-uniform CDFs fit in a handful of segments, while
+    multi-modal ones like OSM cells or genome loci fragment per mode and
+    keep the plain tree's descent)."""
+    keys = np.asarray(keys, np.uint64)
+    per = max(1, int(round(0.75 * n)))
+    seps = keys[per::per]
+    if len(seps) < 16:
+        return True  # tiny trees: the window covers everything anyway
+    segs = _fit_segments(seps, float(max(int(eps), 1)))
+    return len(segs) <= max(1, int(len(seps) * max_seg_frac))
+
+
+# ---------------------------------------------------------------------------
+# Lookup: ONE jitted dispatch (predict + probe + leaf probe)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def lrn_lookup(tree: LearnedTreeArrays, q_hi: jnp.ndarray,
+               q_lo: jnp.ndarray):
+    """Batched lookup: segment route -> fused multiply-add prediction ->
+    branchless fence probe (±eps window) -> gapped leaf probe.  One
+    dispatch end to end; bit-identical results to a full descent."""
+    j = kops.predict_probe_rank(
+        tree.seg_key_hi, tree.seg_key_lo, tree.seg_slope, tree.seg_bias,
+        tree.fence_hi, tree.fence_lo, tree.num_fences, q_hi, q_lo,
+        eps=tree.eps)
+    leaf = tree.chain_leaf[j]
+    return _bs.leaf_probe(tree.base, leaf, q_hi, q_lo)
+
+
+# ---------------------------------------------------------------------------
+# The backend
+# ---------------------------------------------------------------------------
+
+
+class _LRNBackend:
+    name = "lrn"
+    supports_values = True
+    supports_fused_ops = True
+    tree_cls = LearnedTreeArrays
+
+    @staticmethod
+    def _eps_of(spec) -> int:
+        return int(getattr(spec, "lrn_eps", DEFAULT_LRN_EPS) or
+                   DEFAULT_LRN_EPS)
+
+    @staticmethod
+    def _sig(base: BSTreeArrays) -> tuple:
+        """Structural signature: the model is exact while this is stable
+        (in-frame writes never move separators)."""
+        return (int(base.num_leaves), int(base.num_inner), base.height,
+                base.leaf_capacity, base.inner_capacity)
+
+    def _refit(self, tree: LearnedTreeArrays, new_base: BSTreeArrays,
+               spec) -> LearnedTreeArrays:
+        if self._sig(new_base) == self._sig(tree.base):
+            return dataclasses.replace(tree, base=new_base)
+        new_tree = fit_tree(new_base, eps=tree.target_eps)
+        if new_tree.eps > 4 * tree.target_eps and spec is not None:
+            # retrain threshold: structural churn degraded the fit —
+            # force-compact (rebuild the chain at target fill) and refit
+            base2, _ = _bs.compact(new_base, min_occupancy=0.5,
+                                   alpha=spec.alpha, force=True,
+                                   slack=spec.slack)
+            new_tree = fit_tree(base2, eps=tree.target_eps)
+        return new_tree
+
+    def build(self, keys, vals, spec: IndexSpec):
+        base = get_backend("bs").build(keys, vals, spec)
+        return fit_tree(base, eps=self._eps_of(spec))
+
+    def lookup_device(self, tree, q_hi, q_lo):
+        return lrn_lookup(tree, q_hi, q_lo)
+
+    def insert(self, tree, keys, vals, spec=None):
+        new_base, stats = get_backend("bs").insert(tree.base, keys, vals,
+                                                   spec)
+        return self._refit(tree, new_base, spec), stats
+
+    def delete(self, tree, keys):
+        new_base, n = get_backend("bs").delete(tree.base, keys)
+        return self._refit(tree, new_base, None), n
+
+    def apply_ops_fused(self, tree, work, keys, vals, spec, stats):
+        """Same single-dispatch contract as the bs backend (to which this
+        delegates on ``base``); the refit after a deferred structural
+        pass is host-side model work, not an extra index dispatch."""
+        new_base, f, v = get_backend("bs").apply_ops_fused(
+            tree.base, work, keys, vals, spec, stats)
+        return self._refit(tree, new_base, spec), f, v
+
+    def compact(self, tree, spec, *, min_occupancy, force):
+        new_base, counters = get_backend("bs").compact(
+            tree.base, spec, min_occupancy=min_occupancy, force=force)
+        return fit_tree(new_base, eps=tree.target_eps), counters
+
+    def start_leaf(self, tree, key):
+        return get_backend("bs").start_leaf(tree.base, key)
+
+    def leaf_items(self, tree, leaf):
+        return get_backend("bs").leaf_items(tree.base, leaf)
+
+    def next_leaves(self, tree):
+        return get_backend("bs").next_leaves(tree.base)
+
+    def num_keys(self, tree):
+        return get_backend("bs").num_keys(tree.base)
+
+    def check(self, tree):
+        _bs.check_invariants(tree.base)
+        nf = int(tree.num_fences)
+        seps = _extract_separators(tree.base)
+        assert nf == len(seps), (
+            f"stale model: {nf} fences vs {len(seps)} separators")
+        stored = join_u64(np.asarray(tree.fence_hi[:nf]),
+                          np.asarray(tree.fence_lo[:nf]))
+        np.testing.assert_array_equal(stored, seps, err_msg=(
+            "stale model: stored fences diverge from the base tree's "
+            "separators"))
+        chain = _leaf_chain(tree.base)
+        np.testing.assert_array_equal(
+            np.asarray(tree.chain_leaf[:nf + 1]), chain,
+            err_msg="stale model: chain table diverges from next_leaf")
+
+
+register_backend(_LRNBackend())

@@ -72,10 +72,17 @@ class VersionedIndex(Generic[T]):
             return v.version, v.value
 
     def unpin(self, version: int) -> None:
+        """Release one :meth:`pin` reference.  Unpinning a version that
+        holds no reference raises — silently decrementing would let the
+        refcount underflow, and a later pin of the same (still-current)
+        version would then sit at ``refs <= 0`` where the next commit
+        retires its buffers out from under the live reader."""
         with self._lock:
             v = self._pinned.get(version)
-            if v is None:
-                return
+            if v is None or v.refs <= 0:
+                raise RuntimeError(
+                    f"unpin({version}) without a matching pin "
+                    f"(refs={0 if v is None else v.refs})")
             v.refs -= 1
             if v.refs <= 0 and v is not self._current:
                 del self._pinned[version]  # buffers become collectable

@@ -57,6 +57,13 @@ def gen_genome(count: int, rng) -> np.ndarray:
     return _uniq_sorted(keys, count)
 
 
+def gen_uniform(count: int, rng) -> np.ndarray:
+    # i.i.d. uniform draws over the key space — the classic learned-index
+    # best case (one near-perfect linear CDF segment)
+    draws = rng.integers(0, 2**63, size=int(count * 1.05), dtype=np.uint64)
+    return _uniq_sorted(draws, count)
+
+
 def gen_planet(count: int, rng) -> np.ndarray:
     n_centres = max(count // 1000, 8)
     centres = rng.integers(0, 2**44, size=n_centres, dtype=np.uint64) * np.uint64(2**18)
@@ -73,6 +80,7 @@ KEY_DISTRIBUTIONS = {
     "fb": gen_fb,
     "genome": gen_genome,
     "planet": gen_planet,
+    "uniform": gen_uniform,
 }
 
 

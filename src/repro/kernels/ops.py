@@ -13,8 +13,9 @@ import numpy as np
 
 from repro.core.layout import BSTreeArrays, split_u64
 from . import (for_encode, for_succ, gather_succ, leaf_insert, leaf_split,
-               level_stream as _level_stream, spread_pack as _spread_pack,
-               succ_kernel)
+               level_stream as _level_stream,
+               predict_probe as _predict_probe,
+               spread_pack as _spread_pack, succ_kernel)
 
 
 def _interp() -> bool:
@@ -122,6 +123,31 @@ def spread_pack_rows(key_hi, key_lo, vals, rank, *, use_kernel=None, **kw):
         kw.setdefault("interpret", _interp())
         return _spread_pack.spread_pack(key_hi, key_lo, vals, rank, **kw)
     return _spread_pack.spread_pack_jnp(key_hi, key_lo, vals, rank)
+
+
+def predict_probe_rank(seg_hi, seg_lo, seg_slope, seg_bias, fence_hi,
+                       fence_lo, num_fences, q_hi, q_lo, *, eps,
+                       use_kernel=None, **kw):
+    """Learned-index rank per query: segment route + fused multiply-add
+    prediction + branchless fence probe over the ±eps window (see
+    kernels/predict_probe.py).  Dispatches to the Pallas kernel on TPU
+    (model tables resident in VMEM) and to the jitted jnp reference
+    elsewhere; both run the same op sequence, so the interpret-mode
+    parity covered by tests/test_learned.py is bit-exact."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        assert (_predict_probe.model_region_bytes(fence_hi, seg_hi)
+                <= gather_succ.VMEM_BUDGET), (
+            "learned model tables exceed the VMEM budget; "
+            "use the jnp predict path")
+        kw.setdefault("interpret", _interp())
+        return _predict_probe.predict_probe(
+            seg_hi, seg_lo, seg_slope, seg_bias, fence_hi, fence_lo,
+            num_fences, q_hi, q_lo, eps=eps, **kw)
+    return _predict_probe.predict_probe_jnp(
+        seg_hi, seg_lo, seg_slope, seg_bias, fence_hi, fence_lo,
+        num_fences, q_hi, q_lo, eps=eps)
 
 
 def for_fit_flags(key_hi, key_lo, cnt, *, take16: int, take32: int):

@@ -1,0 +1,223 @@
+"""Pallas TPU kernel: FITing-tree predict + bounded probe (lrn backend).
+
+The learned backend replaces tree descent with pure vectorised
+arithmetic over three tiny resident tables (see ``core/learned.py``):
+
+1. *route*: ``succ_gt`` over the per-segment first-fence planes picks the
+   piecewise-linear segment that owns the query;
+2. *predict*: one fused multiply-add ``slope * (q - x0) + bias`` in f32
+   (the u64 offset ``q - x0`` is formed by an exact two-plane subtract
+   and only then converted to float, so the conversion error scales with
+   the segment-relative offset, never the absolute key magnitude);
+3. *probe*: a branchless ``succ_ge``-style count over the fixed
+   ``2*eps + 1`` fence window around the clipped prediction.  The window
+   start is clamped into ``[0, P - W]``, which keeps the true rank
+   inside the loaded window whenever the prediction is within ``eps`` —
+   the fit in ``core/learned.py`` measures and guarantees exactly that.
+
+The returned rank ``j = count(fences <= q)`` indexes the leaf-chain
+table; fences are the base tree's separators, so ``j`` routes exactly
+like a full descent.  MAXKEY padding on the fence/segment planes never
+counts (valid keys are ``<= 2^64 - 2``).
+
+Both the jnp reference and the kernel body run the *same* op sequence,
+so interpret-mode parity is bit-exact; on real TPU hardware any f32
+rounding drift in the prediction is absorbed by the fit-time guard added
+to ``eps`` (the probe is exact for any prediction within the window).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .succ_kernel import SIGN_I32, _as_signed
+
+TWO32 = 4294967296.0  # 2^32 as f32-exact python float
+
+
+def _bits_f32(b):
+    """Value of a u32 (given as wrapped i32 bits) as f32."""
+    f = b.astype(jnp.float32)
+    return jnp.where(b < 0, f + TWO32, f)
+
+
+def _ge_u64(qh, ql, kh, kl):
+    """q >= k on sign-flipped (biased) i32 planes."""
+    return (qh > kh) | ((qh == kh) & (ql >= kl))
+
+
+def predict_clipped_jnp(
+    seg_hi: jnp.ndarray,  # (G,) uint32 — per-segment first fence, hi plane
+    seg_lo: jnp.ndarray,  # (G,) uint32
+    seg_slope: jnp.ndarray,  # (G,) float32
+    seg_bias: jnp.ndarray,  # (G,) float32
+    num_fences: jnp.ndarray,  # () int32
+    q_hi: jnp.ndarray,  # (B,) uint32
+    q_lo: jnp.ndarray,  # (B,) uint32
+) -> jnp.ndarray:
+    """Steps 1-2 only: the clipped rank *prediction* per query (no window
+    correction).  ``core/learned.py`` runs this at fit time to measure
+    the achieved error bound, so it must stay op-for-op identical to the
+    prediction half of the probe below."""
+    qh_r = q_hi.astype(jnp.int32)
+    ql_r = q_lo.astype(jnp.int32)
+    qh = qh_r ^ SIGN_I32
+    ql = ql_r ^ SIGN_I32
+    sh = _as_signed(seg_hi)
+    sl = _as_signed(seg_lo)
+    # 1. route: searchsorted_right over segment first fences
+    m = _ge_u64(qh[:, None], ql[:, None], sh[None, :], sl[None, :])
+    seg = jnp.maximum(jnp.sum(m.astype(jnp.int32), axis=1) - 1, 0)
+    # 2. predict: exact two-plane u64 subtract, then float
+    x0h_r = seg_hi[seg].astype(jnp.int32)
+    x0l_r = seg_lo[seg].astype(jnp.int32)
+    borrow = (ql < (x0l_r ^ SIGN_I32)).astype(jnp.int32)
+    dl = ql_r - x0l_r
+    dh = qh_r - x0h_r - borrow
+    d = _bits_f32(dh) * TWO32 + _bits_f32(dl)
+    ge = _ge_u64(qh, ql, x0h_r ^ SIGN_I32, x0l_r ^ SIGN_I32)
+    d = jnp.where(ge, d, 0.0)
+    pred = seg_slope[seg] * d + seg_bias[seg]
+    return jnp.clip(jnp.round(pred), 0.0,
+                    num_fences.astype(jnp.float32)).astype(jnp.int32)
+
+
+def predict_probe_jnp(
+    seg_hi: jnp.ndarray,  # (G,) uint32 — per-segment first fence, hi plane
+    seg_lo: jnp.ndarray,  # (G,) uint32
+    seg_slope: jnp.ndarray,  # (G,) float32
+    seg_bias: jnp.ndarray,  # (G,) float32
+    fence_hi: jnp.ndarray,  # (P,) uint32 — MAXKEY-padded sorted separators
+    fence_lo: jnp.ndarray,  # (P,) uint32
+    num_fences: jnp.ndarray,  # () int32
+    q_hi: jnp.ndarray,  # (B,) uint32
+    q_lo: jnp.ndarray,  # (B,) uint32
+    *,
+    eps: int,
+) -> jnp.ndarray:
+    """jnp reference: rank ``j = count(fences <= q)`` per query."""
+    p = fence_hi.shape[0]
+    w = 2 * eps + 1
+    qh = q_hi.astype(jnp.int32) ^ SIGN_I32
+    ql = q_lo.astype(jnp.int32) ^ SIGN_I32
+    c = predict_clipped_jnp(seg_hi, seg_lo, seg_slope, seg_bias,
+                            num_fences, q_hi, q_lo)
+    # 3. probe: count fences <= q inside the clamped window
+    start = jnp.clip(c - eps, 0, p - w)
+    idx = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    fh = _as_signed(fence_hi[idx])
+    fl = _as_signed(fence_lo[idx])
+    inw = jnp.sum(
+        _ge_u64(qh[:, None], ql[:, None], fh, fl).astype(jnp.int32), axis=1)
+    return start + inw
+
+
+def _predict_probe_kernel(
+    seg_hi_ref, seg_lo_ref, slope_ref, bias_ref,
+    fence_hi_ref, fence_lo_ref, nf_ref, qhi_ref, qlo_ref, out_ref, *, eps
+):
+    tb = out_ref.shape[0]
+    p = fence_hi_ref.shape[1]
+    w = 2 * eps + 1
+    sh = _as_signed(seg_hi_ref[...])  # (1, G), resident
+    sl = _as_signed(seg_lo_ref[...])
+    nf_f = nf_ref[0, 0].astype(jnp.float32)
+
+    def per_query(t, carry):
+        qh_r = pl.load(qhi_ref, (pl.dslice(t, 1), slice(None))).astype(
+            jnp.int32)[0, 0]
+        ql_r = pl.load(qlo_ref, (pl.dslice(t, 1), slice(None))).astype(
+            jnp.int32)[0, 0]
+        qh = qh_r ^ SIGN_I32
+        ql = ql_r ^ SIGN_I32
+        m = _ge_u64(qh, ql, sh, sl)  # (1, G)
+        seg = jnp.maximum(jnp.sum(m.astype(jnp.int32)) - 1, 0)
+        x0h_r = pl.load(
+            seg_hi_ref, (pl.dslice(0, 1), pl.dslice(seg, 1))
+        ).astype(jnp.int32)[0, 0]
+        x0l_r = pl.load(
+            seg_lo_ref, (pl.dslice(0, 1), pl.dslice(seg, 1))
+        ).astype(jnp.int32)[0, 0]
+        slope = pl.load(slope_ref, (pl.dslice(0, 1), pl.dslice(seg, 1)))[0, 0]
+        bias = pl.load(bias_ref, (pl.dslice(0, 1), pl.dslice(seg, 1)))[0, 0]
+        borrow = (ql < (x0l_r ^ SIGN_I32)).astype(jnp.int32)
+        dl = ql_r - x0l_r
+        dh = qh_r - x0h_r - borrow
+        d = _bits_f32(dh) * TWO32 + _bits_f32(dl)
+        ge = _ge_u64(qh, ql, x0h_r ^ SIGN_I32, x0l_r ^ SIGN_I32)
+        d = jnp.where(ge, d, 0.0)
+        pred = slope * d + bias
+        c = jnp.clip(jnp.round(pred), 0.0, nf_f).astype(jnp.int32)
+        start = jnp.clip(c - eps, 0, p - w)
+        fh = _as_signed(
+            pl.load(fence_hi_ref, (pl.dslice(0, 1), pl.dslice(start, w))))
+        fl = _as_signed(
+            pl.load(fence_lo_ref, (pl.dslice(0, 1), pl.dslice(start, w))))
+        inw = jnp.sum(_ge_u64(qh, ql, fh, fl).astype(jnp.int32))
+        j = start + inw
+        pl.store(out_ref, (pl.dslice(t, 1), slice(None)), j[None, None])
+        return carry
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "block_queries", "interpret")
+)
+def predict_probe(
+    seg_hi: jnp.ndarray,  # (G,) uint32 — must fit VMEM with the fences
+    seg_lo: jnp.ndarray,
+    seg_slope: jnp.ndarray,
+    seg_bias: jnp.ndarray,
+    fence_hi: jnp.ndarray,  # (P,) uint32
+    fence_lo: jnp.ndarray,
+    num_fences: jnp.ndarray,  # () int32
+    q_hi: jnp.ndarray,  # (B,) uint32
+    q_lo: jnp.ndarray,
+    *,
+    eps: int,
+    block_queries: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Kernel-path rank per query (same contract as the jnp reference)."""
+    b = q_hi.shape[0]
+    g = seg_hi.shape[0]
+    p = fence_hi.shape[0]
+    tb = min(block_queries, b)
+    pad = (-b) % tb
+    if pad:
+        q_hi = jnp.pad(q_hi, (0, pad))
+        q_lo = jnp.pad(q_lo, (0, pad))
+    bp = q_hi.shape[0]
+    nf2d = jnp.reshape(num_fences.astype(jnp.int32), (1, 1))
+    out = pl.pallas_call(
+        functools.partial(_predict_probe_kernel, eps=eps),
+        grid=(bp // tb,),
+        in_specs=[
+            pl.BlockSpec((1, g), lambda i: (0, 0)),  # model tables: resident
+            pl.BlockSpec((1, g), lambda i: (0, 0)),
+            pl.BlockSpec((1, g), lambda i: (0, 0)),
+            pl.BlockSpec((1, g), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),  # fence planes: resident
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        interpret=interpret,
+    )(
+        seg_hi[None, :], seg_lo[None, :], seg_slope[None, :],
+        seg_bias[None, :], fence_hi[None, :], fence_lo[None, :], nf2d,
+        q_hi[:, None], q_lo[:, None],
+    )
+    return out[:b, 0]
+
+
+def model_region_bytes(fence_hi: jnp.ndarray, seg_hi: jnp.ndarray) -> int:
+    """Bytes the resident fence + segment tables occupy in VMEM."""
+    return int(fence_hi.size) * 4 * 2 + int(seg_hi.size) * 4 * 4

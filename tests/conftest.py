@@ -1,7 +1,24 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see 1 device; multi-device tests spawn subprocesses with their own flags."""
+import jax
 import numpy as np
 import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_programs_between_modules():
+    """Release each module's compiled XLA executables when it finishes.
+
+    Every compiled program pins several memory mappings (JIT code pages +
+    pinned buffers); the suite compiles thousands of shape-specialised
+    programs, and letting them all accumulate in one process runs into
+    the kernel's ``vm.max_map_count`` default (65530) — XLA then
+    segfaults inside LLVM when mmap fails mid-compile.  Per-module
+    clearing bounds the high-water mark at the heaviest single module;
+    cross-module recompiles cost a few seconds total.  Cache-size
+    assertions are unaffected: they measure deltas within one test."""
+    yield
+    jax.clear_caches()
 
 
 @pytest.fixture

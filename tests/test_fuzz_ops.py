@@ -1,7 +1,7 @@
 """Stateful differential fuzzing of the ``Index`` facade.
 
 Random interleaved insert / delete / lookup / range_scan / count_range /
-compact sequences run on all three backends (``bs``, ``cbs``, ``auto``)
+compact sequences run on every registered backend (plus ``auto``)
 and are cross-checked against the scalar ``ReferenceBSTree`` oracle after
 **every** step.  The key pool is dense (tiny ``n=8`` nodes, clustered
 multiples) so short sequences force leaf splits, slack exhaustion
@@ -30,6 +30,7 @@ from repro.core import (
     OP_LOOKUP,
     OP_NOOP,
     ReferenceBSTree,
+    registered_backends,
 )
 
 try:
@@ -43,7 +44,7 @@ N = 8       # tiny nodes: splits/compaction kick in after a handful of ops
 BATCH = 8   # fixed op-batch shape (pad by repeating the last key)
 POOL = (np.arange(1, 1201, dtype=np.uint64) * np.uint64(7919))
 
-BACKENDS = ("bs", "cbs", "auto")
+BACKENDS = (*registered_backends(), "auto")
 
 
 def _low32(ks):
@@ -203,7 +204,7 @@ def test_differential_random_walk(backend):
     always-on companion (it runs even where hypothesis is absent)."""
     # fixed per-backend seeds (str hash() is process-salted: irreproducible)
     d = _walk(backend, steps=60,
-              seed={"bs": 11, "cbs": 22, "auto": 33}[backend])
+              seed={"bs": 11, "cbs": 22, "auto": 33, "lrn": 44}[backend])
     # the dense pool at n=8 must have forced real structural maintenance
     assert int(d.idx.tree.num_leaves) > 5
 

@@ -23,9 +23,10 @@ from repro.core import (
     OP_LOOKUP,
     VersionedIndex,
     group_commit_update,
+    registered_backends,
 )
 
-BACKENDS = ("bs", "cbs", "auto")
+BACKENDS = (*registered_backends(), "auto")
 
 
 def _build(backend, *, size=300, n=16, seed=7):
@@ -305,6 +306,118 @@ def test_concurrent_submitters_coalesce():
             f, _ = s.value.lookup(
                 np.arange(base, base + 4, dtype=np.uint64))
             assert f.all()
+
+
+def test_unpin_without_pin_raises_and_never_underflows():
+    """Regression (bugfix PR): a rogue double-unpin used to silently
+    decrement the refcount below zero; a later pin of the same version
+    then sat at refs <= 0 where the next commit retired its buffers out
+    from under the live reader.  Now the bad unpin raises and refcounts
+    never go negative."""
+    vi = VersionedIndex(Index.build(np.arange(1, 50, dtype=np.uint64),
+                                    spec=IndexSpec(n=8, backend="bs")))
+    v, _ = vi.pin()
+    vi.unpin(v)
+    with pytest.raises(RuntimeError, match="without a matching pin"):
+        vi.unpin(v)  # double unpin of the still-current version
+    with pytest.raises(RuntimeError, match="without a matching pin"):
+        vi.unpin(v + 99)  # never-pinned version
+    # the refcount stayed clamped: a fresh pin is protected from commits
+    v2, val = vi.pin()
+    assert vi._pinned[v2].refs == 1
+    assert vi.commit(v2, val)
+    assert v2 in vi._pinned, "pinned snapshot retired under a live reader"
+    vi.unpin(v2)
+    assert all(s.refs >= 0 for s in vi._pinned.values())
+
+
+def test_unpin_refcounts_stay_sane_under_threads():
+    """Threaded regression for the same bug: readers pin/unpin while a
+    writer commits and a rogue thread double-unpins.  Refcount
+    conservation: every extra unpin must raise somewhere — in the rogue,
+    or (if it stole a ref a reader still held) in that reader's own
+    balanced unpin.  Pre-fix nothing raised and refcounts went
+    negative."""
+    vi = VersionedIndex(Index.build(np.arange(1, 200, dtype=np.uint64),
+                                    spec=IndexSpec(n=8, backend="bs")))
+    stop = threading.Event()
+    raises = [0]
+    extra_unpins = [0]
+
+    def reader():
+        while not stop.is_set():
+            v, val = vi.pin()
+            val.lookup(np.array([5], np.uint64))
+            try:
+                vi.unpin(v)
+            except RuntimeError:  # a rogue unpin stole this ref
+                raises[0] += 1
+
+    def rogue():
+        while not stop.is_set():
+            v, _ = vi.pin()
+            vi.unpin(v)
+            extra_unpins[0] += 1
+            try:
+                vi.unpin(v)
+            except RuntimeError:
+                raises[0] += 1
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=reader, daemon=True)
+               for _ in range(3)]
+    threads.append(threading.Thread(target=rogue, daemon=True))
+    for t in threads:
+        t.start()
+    for i in range(30):
+        try:
+            vi.update(lambda ix: ix.insert(
+                np.array([10_000 + i], np.uint64))[0])
+        except RuntimeError as e:  # rogue stole the writer's own pin
+            if "without a matching pin" not in str(e):
+                raise
+            raises[0] += 1
+        time.sleep(0.002)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    assert extra_unpins[0] > 0
+    assert raises[0] > 0, \
+        "every rogue extra unpin must raise (here or as a stolen ref)"
+    with vi._lock:
+        assert all(s.refs >= 0 for s in vi._pinned.values())
+        # only live pins may remain; everything else was retired
+        assert all(s.refs > 0 or s is vi._current
+                   for s in vi._pinned.values())
+
+
+def test_submit_after_close_raises_and_close_drains_pending():
+    """Regression (bugfix PR): submit() on a closed writer used to
+    enqueue a ticket nothing would ever drain — callers hung forever on
+    result().  Now close() drains what was queued and later submits
+    raise; start() re-opens the writer."""
+    ix, keys = _build("bs")
+    vi = VersionedIndex(ix)
+    w = GroupCommitWriter(vi, start=False)
+    t1 = w.submit(np.array([OP_INSERT], np.int32),
+                  np.array([123_456], np.uint64))
+    w.close()
+    assert t1.done() and t1.result(timeout=5).version == 1, \
+        "close() must drain queued groups, not strand their tickets"
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(np.array([OP_INSERT], np.int32),
+                 np.array([123_457], np.uint64))
+    # restart re-opens submission
+    w.start()
+    try:
+        t2 = w.submit(np.array([OP_INSERT], np.int32),
+                      np.array([123_457], np.uint64))
+        assert t2.result(timeout=30).version == 2
+    finally:
+        w.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(np.array([OP_LOOKUP], np.int32), keys[:1])
 
 
 def test_wait_for_version():

@@ -1,10 +1,11 @@
 """Backend conformance suite for the unified ``Index`` facade.
 
 One battery of build / lookup / insert / delete / range / count cases
-runs identically over ``backend in ("bs", "cbs", "auto")``, cross-checked
-against the scalar ``ReferenceBSTree`` oracle.  Capability differences
-(values vs keys-only) are exercised through ``Index.supports_values``,
-never through divergent call shapes.
+runs identically over every backend in the registry (plus ``"auto"``),
+cross-checked against the scalar ``ReferenceBSTree`` oracle — a backend
+registered tomorrow is conformance-tested with zero edits here.
+Capability differences (values vs keys-only) are exercised through
+``Index.supports_values``, never through divergent call shapes.
 """
 import numpy as np
 import pytest
@@ -15,12 +16,14 @@ from repro.core import (
     IndexSpec,
     ReferenceBSTree,
     decide,
+    get_backend,
+    registered_backends,
 )
 from repro.core import bstree as B
 from repro.core import compress as C
 from conftest import rand_keys
 
-BACKENDS = ("bs", "cbs", "auto")
+BACKENDS = (*registered_backends(), "auto")
 N = 16
 
 
@@ -46,7 +49,8 @@ def loaded(rng, backend, request):
     ``Index.build_streamed`` (which must be indistinguishable)."""
     keys = clustered(rng)
     vals = np.arange(len(keys), dtype=np.uint32)
-    use_vals = backend == "bs"  # keys-only backends build without vals
+    # keys-only backends build without vals
+    use_vals = backend != "auto" and get_backend(backend).supports_values
     spec = IndexSpec(n=N, backend=backend)
     if request.param == "streamed":
         kc = np.array_split(keys, 9)
@@ -66,7 +70,7 @@ def test_build_resolves_backend(loaded, backend, rng):
         assert idx.backend == want
     else:
         assert idx.backend == backend
-    assert idx.supports_values == (idx.backend == "bs")
+    assert idx.supports_values == get_backend(idx.backend).supports_values
     assert len(idx) == len(keys)
     idx.check_invariants()
 
@@ -161,7 +165,7 @@ def test_build_from_unsorted_with_duplicates(rng, backend):
     keys = clustered(rng, n_clusters=40, per=20)
     shuffled = np.concatenate([keys, keys[::3]])
     rng.shuffle(shuffled)
-    if backend == "bs":
+    if backend != "auto" and get_backend(backend).supports_values:
         # duplicate keys keep the last value in batch order
         vals = np.arange(len(shuffled), dtype=np.uint32)
         idx = Index.build(shuffled, vals,
@@ -247,6 +251,64 @@ def test_backends_advertise_fused_ops_capability(rng, be):
     idx = Index.build(clustered(rng, n_clusters=20, per=10),
                       spec=IndexSpec(n=N, backend=be))
     assert idx.impl.supports_fused_ops is True
+
+
+def test_record_position_two_plane_contract():
+    """Regression (bugfix PR): the keys-only record position is
+    ``leaf * capacity + rank`` as a true u64 — the old single-plane
+    uint32 ``leaf * cap + rank`` silently wrapped once the product
+    crossed 2^32 (≈67M keys at n=16), aliasing distinct records."""
+    from repro.core.index import _record_position
+
+    cap = 64  # 4 * n at the conformance width
+    leaves = np.array([0, 1, 2**26 - 1, 2**26, 2**26 + 3, 2**31 - 1],
+                      dtype=np.int32)
+    ranks = np.array([0, 3, 63, 0, 17, 63], dtype=np.int32)
+    pos_hi, pos_lo = _record_position(leaves, ranks, cap)
+    got = (np.asarray(pos_hi).astype(np.uint64) << np.uint64(32)) \
+        | np.asarray(pos_lo).astype(np.uint64)
+    want = leaves.astype(np.uint64) * np.uint64(cap) \
+        + ranks.astype(np.uint64)
+    np.testing.assert_array_equal(got, want)
+    # the 2^32 boundary case is the one the uint32 plane wrapped to 0
+    assert int(want[3]) == 2**32 and int(got[3]) == 2**32
+
+
+def test_cbs_facade_position_is_u64_leaf_cap_rank(rng):
+    """The cbs facade lookup returns uint64 record positions that match
+    the low-level ``leaf * 4n + rank`` contract (dtype was uint32
+    pre-fix)."""
+    keys = clustered(rng, n_clusters=30, per=20)
+    idx = Index.build(keys, spec=IndexSpec(n=N, backend="cbs"))
+    found, pos = idx.lookup(keys[::5])
+    assert pos.dtype == np.uint64
+    assert found.all()
+    f2, leaf, rank = C.cbs_lookup_u64(idx.tree, keys[::5])
+    want = leaf.astype(np.uint64) * np.uint64(4 * N) \
+        + rank.astype(np.uint64)
+    np.testing.assert_array_equal(pos, want)
+
+
+def test_auto_read_heavy_picks_learned(rng):
+    """§6 decision extension: a read-heavy workload over a learnable
+    (near-linear CDF) distribution resolves ``auto`` to the learned
+    backend; clustered keys and the default mixed workload do not."""
+    linear = np.arange(1, 5001, dtype=np.uint64) * np.uint64(7919)
+    idx = Index.build(linear, spec=IndexSpec(
+        n=N, backend="auto", workload="read_heavy"))
+    assert idx.backend == "lrn"
+    found, _ = idx.lookup(linear[::9])
+    assert found.all()
+    # multi-modal distribution: falls back to the structural decision
+    from repro.data.keys import gen_keys
+
+    keys = gen_keys("genome", 20000)
+    idx2 = Index.build(keys, spec=IndexSpec(
+        n=N, backend="auto", workload="read_heavy"))
+    assert idx2.backend in ("bs", "cbs")
+    # default workload never picks lrn (existing behaviour preserved)
+    idx3 = Index.build(linear, spec=IndexSpec(n=N, backend="auto"))
+    assert idx3.backend in ("bs", "cbs")
 
 
 def test_apply_result_dict_view_is_deprecated(rng):

@@ -1,0 +1,182 @@
+"""Learned FITing-tree backend (``lrn``): fit soundness, the one-dispatch
+lookup, kernel/jnp parity, and the refit-on-structural-change policy.
+
+The conformance battery and differential fuzzer in test_index_api.py /
+test_fuzz_ops.py already run the full op surface over ``lrn`` through the
+registry; this file tests the model itself.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.core.learned as L
+from repro.core import Index, IndexSpec, bulk_load, get_backend, split_u64
+from repro.data.keys import gen_keys
+from repro.kernels import ops as kops
+from repro.kernels import predict_probe as PP
+
+N = 16
+
+
+def _fit(dist, count=4000, n=N, eps=8, seed=0):
+    keys = gen_keys(dist, count, seed=seed)
+    base = bulk_load(keys, n=n)
+    return keys, L.fit_tree(base, eps=eps)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "books", "fb", "genome"])
+def test_fit_prediction_within_eps_and_probe_exact(dist):
+    """The fit contract: for EVERY stored key the clipped prediction
+    lands within the achieved eps of the true fence rank, and the probe
+    therefore recovers the exact rank ``count(fences <= q)``."""
+    keys, t = _fit(dist)
+    nf = int(t.num_fences)
+    fences = (np.asarray(t.fence_hi[:nf]).astype(np.uint64) << np.uint64(32)) \
+        | np.asarray(t.fence_lo[:nf]).astype(np.uint64)
+    qh, ql = map(np.asarray, split_u64(keys))
+    c = np.asarray(PP.predict_clipped_jnp(
+        t.seg_key_hi, t.seg_key_lo, t.seg_slope, t.seg_bias,
+        t.num_fences, qh, ql))
+    want = np.searchsorted(fences, keys, side="right")
+    assert np.abs(c.astype(np.int64) - want).max() <= t.eps
+    j = np.asarray(PP.predict_probe_jnp(
+        t.seg_key_hi, t.seg_key_lo, t.seg_slope, t.seg_bias,
+        t.fence_hi, t.fence_lo, t.num_fences, qh, ql, eps=t.eps))
+    np.testing.assert_array_equal(j, want)
+
+
+def test_lookup_is_one_dispatch():
+    """Acceptance: repeated mixed hit/miss lookup batches reuse ONE
+    compiled program — the whole read path is a single jitted dispatch."""
+    keys, t = _fit("uniform", count=3000)
+    rng = np.random.default_rng(0)
+    qh, ql = map(np.asarray, split_u64(np.concatenate(
+        [keys[::3], rng.integers(0, 2**62, 1000, dtype=np.uint64)])[:2048]))
+    before = L.lrn_lookup._cache_size()
+    L.lrn_lookup(t, qh, ql)
+    L.lrn_lookup(t, qh[:2048], ql[:2048])
+    assert L.lrn_lookup._cache_size() - before <= 1
+
+
+@pytest.mark.parametrize("dist", ["uniform", "fb"])
+def test_kernel_interpret_parity_is_bit_exact(dist):
+    """The Pallas kernel (interpret mode) and the jnp reference run the
+    same op sequence — ranks must match bit-exactly, including MAXKEY
+    padding, window clamping at both array ends, and miss queries."""
+    keys, t = _fit(dist, count=1500, eps=4)
+    rng = np.random.default_rng(1)
+    qs = np.unique(np.concatenate([
+        keys[::2], keys[::7] + np.uint64(1), np.zeros(1, np.uint64),
+        np.asarray([2**64 - 2], np.uint64),
+        rng.integers(0, 2**63, 700, dtype=np.uint64)]))
+    qh, ql = map(np.asarray, split_u64(qs))
+    args = (t.seg_key_hi, t.seg_key_lo, t.seg_slope, t.seg_bias,
+            t.fence_hi, t.fence_lo, t.num_fences, qh, ql)
+    ref = np.asarray(PP.predict_probe_jnp(*args, eps=t.eps))
+    got = np.asarray(PP.predict_probe(*args, eps=t.eps, block_queries=64,
+                                      interpret=True))
+    np.testing.assert_array_equal(got, ref)
+    via_ops = np.asarray(kops.predict_probe_rank(
+        *args, eps=t.eps, use_kernel=True, interpret=True))
+    np.testing.assert_array_equal(via_ops, ref)
+
+
+def test_inframe_write_keeps_model_refit_on_structural_change():
+    """In-frame upserts never move separators, so the model arrays are
+    reused verbatim; a split (structural change) triggers a refit whose
+    fences track the new separators (``check`` verifies exactness)."""
+    keys = np.arange(1, 2001, dtype=np.uint64) * np.uint64(1000)
+    ix = Index.build(keys, spec=IndexSpec(n=N, backend="lrn"))
+    be = get_backend("lrn")
+
+    # overwrite existing keys: same structure, identical model tables
+    ix2, _ = ix.insert(keys[:32], np.arange(32, dtype=np.uint32))
+    assert ix2.tree.fence_hi is ix.tree.fence_hi
+    assert ix2.tree.seg_slope is ix.tree.seg_slope
+    be.check(ix2.tree)
+
+    # dense novel keys force splits: separators move, model refits
+    dense = keys[5] + np.arange(1, 400, dtype=np.uint64)
+    dense = dense[~np.isin(dense, keys)]
+    ix3, st = ix2.insert(dense)
+    assert st["inserted"] == len(dense)
+    assert int(ix3.tree.num_leaves) > int(ix2.tree.num_leaves)
+    assert int(ix3.tree.num_fences) > int(ix2.tree.num_fences)
+    be.check(ix3.tree)
+    f, _ = ix3.lookup(np.concatenate([dense, keys[::13]]))
+    assert f.all()
+
+
+def test_check_detects_stale_model():
+    keys = np.arange(1, 3001, dtype=np.uint64) * np.uint64(977)
+    ix = Index.build(keys, spec=IndexSpec(n=N, backend="lrn"))
+    be = get_backend("lrn")
+    be.check(ix.tree)
+    bad = dataclasses.replace(
+        ix.tree, fence_lo=ix.tree.fence_lo.at[0].add(1))
+    with pytest.raises(AssertionError, match="stale model"):
+        be.check(bad)
+
+
+def test_single_leaf_and_empty_trees():
+    """S=0 edge: no separators — one trivial segment routes everything
+    to the single chain leaf, hits and misses both resolve."""
+    for keys in (np.asarray([7, 9, 11], np.uint64),
+                 np.zeros(0, np.uint64)):
+        ix = Index.build(keys, spec=IndexSpec(n=N, backend="lrn"))
+        assert int(ix.tree.num_fences) == 0
+        get_backend("lrn").check(ix.tree)
+        f, _ = ix.lookup(np.asarray([7, 8, 2**60], np.uint64))
+        want = np.isin(np.asarray([7, 8, 2**60], np.uint64), keys)
+        np.testing.assert_array_equal(f, want)
+
+
+def test_learnable_probe():
+    lin = np.arange(1, 20001, dtype=np.uint64) * np.uint64(3163)
+    assert L.learnable(lin, N)
+    assert L.learnable(gen_keys("uniform", 20000), N)
+    assert L.learnable(gen_keys("books", 20000), N)
+    # multi-modal CDFs fragment the cone fit per mode -> not learnable
+    assert not L.learnable(gen_keys("osm", 20000), N)
+    assert not L.learnable(gen_keys("genome", 20000), N)
+
+
+def test_retrain_threshold_compacts_on_degraded_fit(monkeypatch):
+    """When a refit's achieved eps blows past 4x the target, the backend
+    force-compacts the base and refits once (the per-segment retrain
+    threshold feeding compact())."""
+    keys = np.arange(1, 3001, dtype=np.uint64) * np.uint64(1009)
+    ix = Index.build(keys, spec=IndexSpec(n=N, backend="lrn", lrn_eps=1))
+    compacts = {"n": 0}
+    real = L._bs.compact
+
+    def counting(*a, **kw):
+        compacts["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(L._bs, "compact", counting)
+    # scrambled separator spacing after heavy skewed splits degrades the
+    # eps=1 fit far past 4x -> the refit path must compact + refit
+    rng = np.random.default_rng(3)
+    burst = np.unique(rng.integers(keys[0], keys[40], 1500,
+                                   dtype=np.uint64))
+    burst = burst[~np.isin(burst, keys)]
+    ix2, _ = ix.insert(burst)
+    assert compacts["n"] >= 1, "degraded fit never hit the retrain path"
+    get_backend("lrn").check(ix2.tree)
+    f, _ = ix2.lookup(burst[::5])
+    assert f.all()
+
+
+def test_memory_and_stats_surface():
+    keys = np.arange(1, 5001, dtype=np.uint64) * np.uint64(7919)
+    ix = Index.build(keys, spec=IndexSpec(n=N, backend="lrn"))
+    s = ix.stats()
+    assert s["backend"] == "lrn"
+    assert s["num_keys"] == len(keys)
+    assert ix.memory_bytes() > ix.tree.base.memory_bytes()
+    # model region must respect the kernel's VMEM budget at bench sizes
+    from repro.kernels import gather_succ
+    assert PP.model_region_bytes(ix.tree.fence_hi, ix.tree.seg_key_hi) \
+        <= gather_succ.VMEM_BUDGET
