@@ -9,6 +9,9 @@ coalescing through the group-commit writer) and wlM_engine_startup
 (cold/warm construction->first-step, informational ``gate: "info"``).
 wlN_learned_lookup pits the learned ``lrn`` backend against bs/cbs on
 the learnable read-only distributions (books/fb/uniform).
+wlO_rebalance streams a Zipf-skewed insert load into a 4-shard tree
+with and without device-resident shard rebalancing
+(``rebalance_sharded``, docs/SHARDING.md).
 
 One backend-agnostic code path through the ``Index`` facade — pick the
 tree with ``--backend {bs,cbs,lrn,auto,all}`` instead of duplicated
@@ -394,6 +397,40 @@ def bench_engine_startup(rows: list) -> None:
           workload="M_startup", gate="info")
 
 
+def bench_rebalance(build_n: int, rows: list) -> None:
+    """Workload O: device-resident shard rebalancing under a skewed
+    stream.  A Zipf-like insert stream (``u**5`` — most keys land in one
+    shard's fence range) is fed to a 4-shard tree twice: once plain,
+    once with ``insert_sharded(..., rebalance=policy)`` repartitioning
+    whenever the max/min key-count ratio trips 1.5.  Both rows time the
+    full stream end to end, so ``skew_on`` carries the rebalance cost;
+    its derived field records the post-stream ratio — the ``off`` row
+    drifts toward ``num_shards`` while ``on`` must hold <= 2.0 (the
+    acceptance bar; standalone runs use --build 1000000 for the paper's
+    1M-key scale).  Splits/merges stay on device — see docs/SHARDING.md
+    for the host-transfer budget."""
+    from repro.core import distributed as D
+
+    rng = np.random.default_rng(11)
+    base = np.unique(gen_keys("uniform", max(build_n // 2, 1024), seed=5))
+    u = rng.random(build_n)
+    stream = np.unique((u ** 5 * 2 ** 52).astype(np.uint64) + 1)
+    chunks = np.array_split(stream, 8)
+    policy = D.RebalancePolicy(max_ratio=1.5)
+    for mode, rb in (("off", None), ("on", policy)):
+        st = D.build_sharded(base, num_shards=4, n=128, backend="bs")
+        t0 = time.perf_counter()
+        for ch in chunks:
+            st, _ = D.insert_sharded(st, ch, rebalance=rb)
+        counts = D.shard_key_counts(st)  # device reduce -> host sync
+        dt = (time.perf_counter() - t0) * 1e6
+        ratio = counts.max() / max(int(counts.min()), 1)
+        _emit(rows, f"wlO_rebalance/bs/skew_{mode}", dt / len(stream),
+              f"{len(stream)/dt:.2f}Mops_ratio{ratio:.2f}",
+              backend="bs", resolved="bs", dist="skew",
+              workload="O_rebalance")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", default="all",
@@ -443,6 +480,7 @@ def main(argv=None) -> None:
         bench_engine_step(rows)
         bench_group_commit(rows)
         bench_engine_startup(rows)
+        bench_rebalance(args.build, rows)
         for r in rows:
             cur = merged.get(r["name"])
             if cur is None or r["us_per_call"] < cur["us_per_call"]:

@@ -188,6 +188,14 @@ class StreamBuilder:
     ``finalize()`` — the fit needs only the separators, never the key
     stream).  ``"auto"`` must be resolved by the caller
     (``Index.build_streamed`` samples the first chunk).
+
+    Consumers beyond ``Index.build_streamed``: the streamed
+    ``build_sharded`` bootstrap (one builder per shard), key-stream
+    checkpoint recovery (``restore_index_streamed``), and the shard
+    rebalancer's *repack* action
+    (:func:`repro.core.distributed.rebalance_sharded` streams a shard's
+    new sorted rank segments through a builder, docs/SHARDING.md) — all
+    rely on the O(chunk) host footprint and the bit-identity guarantee.
     """
 
     def __init__(self, spec=None, *, backend: Optional[str] = None,

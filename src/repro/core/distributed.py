@@ -48,28 +48,26 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .index import (
+    OP_DELETE,
+    OP_INSERT,
     Index,
     IndexSpec,
     backend_for_tree,
     get_backend,
     resolve_backend,
 )
-from .layout import DEFAULT_ALPHA, MAXKEY, join_u64, split_u64
+from .layout import (
+    DEFAULT_ALPHA,
+    MAXKEY,
+    MAXKEY_HI,
+    MAXKEY_LO,
+    join_u64,
+    split_u64,
+    used_mask,
+)
 from .succ import succ_gt
 
 AxisName = Union[str, tuple[str, ...]]
-
-
-def _reject_lrn(backend: str) -> None:
-    """The learned backend cannot stack: per-shard fence/segment tables
-    have shard-specific padded sizes and static error bounds, which the
-    equal-shape ``_stack_trees`` container cannot hold.  Build per-shard
-    ``Index`` objects instead (or shard the base 'bs' trees)."""
-    if backend == "lrn":
-        raise NotImplementedError(
-            "build_sharded does not support the learned 'lrn' backend "
-            "(per-shard model tables are shard-shaped); use backend='bs' "
-            "or standalone Index objects per shard")
 
 
 @jax.tree_util.register_dataclass
@@ -100,8 +98,12 @@ class ShardedBSTree:
 
     def _spec(self) -> IndexSpec:
         """The IndexSpec the shards were built with (for facade calls)."""
+        kw = {}
+        if self.backend == "lrn":
+            # the shared (maximised) fit budget survives re-stacks
+            kw["lrn_eps"] = int(self.trees.target_eps)
         return IndexSpec(n=self.trees.node_width, alpha=self.alpha,
-                         backend=self.backend, slack=self.slack)
+                         backend=self.backend, slack=self.slack, **kw)
 
     @property
     def supports_values(self) -> bool:
@@ -119,6 +121,13 @@ def _lift_height(tree, target_height: int, *, slack: float = 1.5):
     host (only the root/num_inner scalars sync)."""
     if tree.height >= target_height:
         return tree
+    from .learned import LearnedTreeArrays
+
+    if isinstance(tree, LearnedTreeArrays):
+        # lift rows are all-MAXKEY single-child levels: no separator
+        # moves, so the fitted fence/segment model stays exact verbatim
+        return dataclasses.replace(
+            tree, base=_lift_height(tree.base, target_height, slack=slack))
     inner_hi, inner_lo = tree.inner_hi, tree.inner_lo
     inner_child = tree.inner_child
     root = int(tree.root)
@@ -171,7 +180,11 @@ def _stack_trees(parts: list, *, slack: float = 1.5):
     per-shard maintenance (which itself runs on device) never gathers the
     shards to the host — the fix that takes the host gather out of
     ``insert_sharded`` / ``delete_sharded`` / ``compact_sharded``."""
+    from .learned import LearnedTreeArrays
+
     cls = type(parts[0])
+    if cls is LearnedTreeArrays:
+        return _stack_lrn(parts, slack=slack)
     target_h = max(p.height for p in parts)
     parts = [_lift_height(p, target_h, slack=slack) for p in parts]
     kw = {}
@@ -190,6 +203,49 @@ def _stack_trees(parts: list, *, slack: float = 1.5):
             padded.append(a)
         kw[f.name] = jnp.stack(padded)
     return cls(**kw, height=target_h, node_width=parts[0].node_width)
+
+
+#: fill for capacity-padding the learned model tables — fences and
+#: segment keys pad with MAXKEY planes (past ``num_fences``, never
+#: probed as a hit), chain/slope/bias pad with zeros (the probe index
+#: ``j`` is clipped to ``num_fences``, so pad entries are unreachable)
+_LRN_PAD = {
+    "fence_hi": 0xFFFFFFFF, "fence_lo": 0xFFFFFFFF, "chain_leaf": 0,
+    "seg_key_hi": 0xFFFFFFFF, "seg_key_lo": 0xFFFFFFFF,
+    "seg_slope": 0.0, "seg_bias": 0.0,
+}
+
+
+def _stack_lrn(parts: list, *, slack: float = 1.5):
+    """Stack per-shard :class:`~repro.core.learned.LearnedTreeArrays`.
+
+    The base BS trees stack through the generic path; the per-shard model
+    tables (shard-shaped pow2 paddings, per-shard static error bounds)
+    are equalised first: every table pads to the widest shard's size with
+    its sentinel fill, and ``eps``/``target_eps`` take the max over
+    shards — a wider probe window strictly contains each shard's own, so
+    every shard's lookups stay exact under the shared static bound."""
+    from .learned import LearnedTreeArrays
+
+    eps = max(p.eps for p in parts)
+    target_eps = max(p.target_eps for p in parts)
+    base = _stack_trees([p.base for p in parts], slack=slack)
+    kw = {}
+    for name, fill in _LRN_PAD.items():
+        arrs = [getattr(p, name) for p in parts]
+        cap = max(a.shape[0] for a in arrs)
+        padded = []
+        for a in arrs:
+            if a.shape[0] < cap:
+                a = jnp.concatenate(
+                    [a, jnp.full((cap - a.shape[0],), fill, a.dtype)])
+            padded.append(a)
+        kw[name] = jnp.stack(padded)
+    return LearnedTreeArrays(
+        base=base,
+        num_fences=jnp.stack([jnp.asarray(p.num_fences, jnp.int32)
+                              for p in parts]),
+        eps=eps, target_eps=target_eps, **kw)
 
 
 def _shard_tree(st: ShardedBSTree, s: int):
@@ -240,7 +296,6 @@ def build_sharded(
         raise ValueError("build_sharded needs keys (or key_source=)")
     keys = np.asarray(keys, dtype=np.uint64)
     backend = resolve_backend(backend, keys, n, has_values=vals is not None)
-    _reject_lrn(backend)
     impl = get_backend(backend)
     if vals is not None and not impl.supports_values:
         raise ValueError(f"backend {backend!r} is keys-only; drop vals")
@@ -292,7 +347,6 @@ def _build_sharded_streamed(key_source, total_keys: int, num_shards: int,
             continue
         if spec is None:
             name = resolve_backend(name, chunk, n, has_values=False)
-            _reject_lrn(name)
             spec = IndexSpec(n=n, alpha=alpha, backend=name, slack=slack)
         start, end = off, off + len(chunk)
         s = max(0, min(num_shards - 1,
@@ -314,7 +368,6 @@ def _build_sharded_streamed(key_source, total_keys: int, num_shards: int,
     if spec is None:  # empty stream
         name = resolve_backend(name, np.zeros(0, np.uint64), n,
                                has_values=False)
-        _reject_lrn(name)
     parts = [
         (b.finalize() if b is not None
          else StreamBuilder(backend=name, n=n, alpha=alpha,
@@ -457,8 +510,10 @@ def make_sharded_lookup(
     cache: dict = {}
 
     def lookup(st: ShardedBSTree, q_hi, q_lo):
-        key = (st.backend, st.trees.height, st.trees.node_width,
-               st.num_shards)
+        # the full treedef, not just (height, width, shards): static
+        # metadata like the lrn probe window changes across rebalances
+        # and the cached shard_map's in_specs must match it exactly
+        key = (st.backend, jax.tree.structure(st.trees))
         if key not in cache:
             tree_specs = jax.tree.map(lambda _: P(model_axes), st.trees)
             # found + payload planes + overflow; keys-only backends carry
@@ -491,11 +546,18 @@ def _route(st: ShardedBSTree, keys_u64: np.ndarray) -> np.ndarray:
 
 
 def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray,
-                   vals: Optional[np.ndarray] = None):
+                   vals: Optional[np.ndarray] = None, *,
+                   rebalance=None):
     """Route new keys by fence and apply the local bulk insert per shard
     through the ``Index`` facade.  Returns (ShardedBSTree, total stats)
     with the unified ``{requested, inserted, present, deferred, rounds}``
-    schema.  Host path — see module docstring."""
+    schema.  Host path — see module docstring.
+
+    ``rebalance`` opts into a post-insert :func:`rebalance_sharded`
+    pass: ``True`` uses the default :class:`RebalancePolicy`, or pass a
+    policy instance.  The pass only acts when the policy threshold
+    trips; its ``rebalances`` / ``keys_migrated`` counters merge into
+    ``stats["maintenance"]``."""
     from .maintenance import merge_counters, new_counters
 
     keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
@@ -517,7 +579,13 @@ def insert_sharded(st: ShardedBSTree, keys_u64: np.ndarray,
         for k in ("inserted", "present", "deferred", "rounds"):
             stats[k] += s_stats[k]
         merge_counters(stats["maintenance"], s_stats["maintenance"])
-    return dataclasses.replace(st, trees=_stack_trees(parts, slack=st.slack)), stats
+    st = dataclasses.replace(st, trees=_stack_trees(parts, slack=st.slack))
+    if rebalance is not None and rebalance is not False:
+        policy = (rebalance if isinstance(rebalance, RebalancePolicy)
+                  else None)
+        st, rb = rebalance_sharded(st, policy)
+        merge_counters(stats["maintenance"], rb["maintenance"])
+    return st, stats
 
 
 def delete_sharded(st: ShardedBSTree, keys_u64: np.ndarray):
@@ -584,3 +652,306 @@ def compact_sharded(st: ShardedBSTree, *, min_occupancy: float = 0.5,
             total[k] = total.get(k, 0) + c[k]
         total["compacted"] += int(c["compacted"])
     return dataclasses.replace(st, trees=_stack_trees(parts, slack=st.slack)), total
+
+
+# ---------------------------------------------------------------------------
+# Device-resident shard rebalancing (policy-driven split / merge / migrate)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _bs_counts_stacked(leaf_hi, leaf_lo, num_leaves):
+    """Per-shard used-key counts from stacked (S, L, N) leaf planes — one
+    jitted reduce over the gap-invariant bitmap; only the (S,) totals
+    sync to host.  Rows past each shard's ``num_leaves`` are capacity
+    padding (all-MAXKEY anyway) and masked out explicitly."""
+    row_ok = jnp.arange(leaf_hi.shape[1])[None, :] < num_leaves[:, None]
+    um = used_mask(leaf_hi, leaf_lo) & row_ok[..., None]
+    return jnp.sum(um.astype(jnp.int32), axis=(1, 2))
+
+
+@jax.jit
+def _cbs_counts_stacked(words, tag, k0_hi, k0_lo, num_leaves):
+    """CBS analogue: the gate-only FOR decode (``_used_counts`` — XLA
+    drops the key planes) per leaf block, masked to allocated rows."""
+    from .compress import _used_counts
+
+    s, nl = tag.shape
+    _, cnt = _used_counts(words.reshape(s * nl, -1), tag.reshape(-1),
+                          k0_hi.reshape(-1), k0_lo.reshape(-1))
+    row_ok = jnp.arange(nl)[None, :] < num_leaves[:, None]
+    return jnp.sum(jnp.where(row_ok, cnt.reshape(s, nl), 0), axis=1)
+
+
+def shard_key_counts(st: ShardedBSTree) -> np.ndarray:
+    """Per-shard logical key counts, (S,) int64.
+
+    One jitted device reduce plus one small host sync — the occupancy
+    signal :func:`rebalance_sharded` acts on; key planes stay on device."""
+    t = st.trees
+    if st.backend == "cbs":
+        cnt = _cbs_counts_stacked(t.leaf_words, t.leaf_tag, t.leaf_k0_hi,
+                                  t.leaf_k0_lo, t.num_leaves)
+    else:
+        base = t.base if st.backend == "lrn" else t
+        cnt = _bs_counts_stacked(base.leaf_hi, base.leaf_lo,
+                                 base.num_leaves)
+    return np.asarray(cnt, np.int64)
+
+
+@jax.jit
+def _bs_sorted_used(leaf_hi, leaf_lo, leaf_val, num_leaves):
+    """Flatten one shard's used keys to sorted (hi, lo, val) planes on
+    device (unused slots — gap copies and capacity padding — map to
+    MAXKEY and sink to the tail) plus the used count."""
+    row_ok = jnp.arange(leaf_hi.shape[0])[:, None] < num_leaves
+    um = used_mask(leaf_hi, leaf_lo) & row_ok
+    hi = jnp.where(um, leaf_hi, MAXKEY_HI).reshape(-1)
+    lo = jnp.where(um, leaf_lo, MAXKEY_LO).reshape(-1)
+    order = jnp.lexsort((lo, hi))
+    return (hi[order], lo[order], leaf_val.reshape(-1)[order],
+            jnp.sum(um.astype(jnp.int32)))
+
+
+@jax.jit
+def _cbs_sorted_used(words, tag, k0_hi, k0_lo, num_leaves):
+    """CBS analogue of :func:`_bs_sorted_used`: FOR blocks decode to
+    absolute planes on device (``_absolute_planes``), then the same
+    mask-and-sort.  Keys-only — CBS stores no value plane."""
+    from .compress import _absolute_planes
+
+    a_hi, a_lo, used, _ = _absolute_planes(words, tag, k0_hi, k0_lo)
+    row_ok = jnp.arange(words.shape[0])[:, None] < num_leaves
+    um = used & row_ok
+    hi = jnp.where(um, a_hi, MAXKEY_HI).reshape(-1)
+    lo = jnp.where(um, a_lo, MAXKEY_LO).reshape(-1)
+    order = jnp.lexsort((lo, hi))
+    return hi[order], lo[order], jnp.sum(um.astype(jnp.int32))
+
+
+class _ShardExtracts:
+    """Lazy per-shard sorted-key extraction over one (immutable) stacked
+    tree: device planes + one count sync per touched shard, memoised so
+    fence planning and action execution share a single sort per shard.
+    Only explicitly sliced rank windows ever cross to the host — O(moved
+    keys), the same budget as the streamed build path."""
+
+    def __init__(self, st: ShardedBSTree):
+        self.st = st
+        self._cache: dict = {}
+
+    def planes(self, s: int):
+        """(hi, lo, val | None, count): sorted used keys of shard ``s``
+        as device arrays (MAXKEY tail); ``count`` is a host int."""
+        if s not in self._cache:
+            tree = _shard_tree(self.st, s)
+            if self.st.backend == "cbs":
+                hi, lo, cnt = _cbs_sorted_used(
+                    tree.leaf_words, tree.leaf_tag, tree.leaf_k0_hi,
+                    tree.leaf_k0_lo, tree.num_leaves)
+                val = None
+            else:
+                base = tree.base if self.st.backend == "lrn" else tree
+                hi, lo, val, cnt = _bs_sorted_used(
+                    base.leaf_hi, base.leaf_lo, base.leaf_val,
+                    base.num_leaves)
+            self._cache[s] = (hi, lo, val, int(cnt))
+        return self._cache[s]
+
+    def keys_at(self, s: int, a: int, b: int):
+        """Host (keys u64, vals u32 | None) of shard ``s`` at local ranks
+        [a, b) — sliced on device, so the transfer is O(b - a)."""
+        hi, lo, val, _ = self.planes(s)
+        k = join_u64(np.asarray(hi[a:b]), np.asarray(lo[a:b]))
+        v = np.asarray(val[a:b]) if val is not None else None
+        return k, v
+
+    def key_at(self, s: int, r: int) -> int:
+        """The u64 key at local rank ``r`` (a two-u32 scalar sync)."""
+        hi, lo, _, _ = self.planes(s)
+        return int(join_u64(np.asarray(hi[r:r + 1]),
+                            np.asarray(lo[r:r + 1]))[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalancePolicy:
+    """Knobs of :func:`rebalance_sharded` (docs/SHARDING.md has the
+    operational guide)."""
+
+    #: trigger threshold: rebalance when the max/min per-shard key-count
+    #: ratio exceeds this (min clamped to 1 for empty shards)
+    max_ratio: float = 1.5
+    #: action pick per shard: when (moved in + moved out) relative to
+    #: the larger of the shard's old/new size — a churn fraction in
+    #: [0, 2] — is at most this, boundary keys *migrate* through one
+    #: fused apply_ops dispatch (delete-on-donor + insert-on-receiver);
+    #: above it the shard *repacks* from sorted device extracts through
+    #: a per-shard StreamBuilder (the split/merge path; 2.0 = always
+    #: migrate)
+    migrate_frac: float = 0.25
+    #: skip below this many total keys (tiny partitions cannot hold the
+    #: strictly-increasing fence invariant worth the dispatches)
+    min_keys: int = 256
+
+
+def _rebalance_stats(counts: np.ndarray) -> dict:
+    from .maintenance import new_counters
+
+    mn = max(int(counts.min()), 1) if len(counts) else 1
+    mx = int(counts.max()) if len(counts) else 0
+    ratio = round(mx / mn, 4)
+    return {
+        "rebalances": 0, "keys_migrated": 0,
+        "shards_migrated": 0, "shards_rebuilt": 0,
+        "ratio_before": ratio, "ratio_after": ratio,
+        "maintenance": new_counters(),
+    }
+
+
+def rebalance_sharded(st: ShardedBSTree,
+                      policy: Optional[RebalancePolicy] = None, *,
+                      force: bool = False):
+    """Even out a skewed key partition — device-resident.
+
+    Reads the per-shard occupancy counters (:func:`shard_key_counts`,
+    one jitted reduce), and when the max/min ratio exceeds
+    ``policy.max_ratio`` (or ``force``), re-partitions to equal-count
+    target fences found by device rank-select over per-shard sorted
+    extracts.  Each shard then takes the cheapest action:
+
+    * **keep** — membership unchanged, the stacked slice is reused;
+    * **migrate** — boundary churn within ``policy.migrate_frac``: the
+      moved-out ranks delete and the moved-in ranks insert as ONE fused
+      ``apply_ops`` dispatch on that shard (the delete-on-donor /
+      insert-on-receiver pair, amortised per shard);
+    * **repack** — larger membership changes stream the shard's new
+      sorted rank segments through a :class:`~repro.core.build.\
+StreamBuilder` (the split path; donors shrink implicitly).
+
+    The re-stack (``_stack_trees`` + ``_lift_height``) then equalises
+    heights/capacities on device — the merge machinery.  Full trees
+    never cross to the host: transfers are O(moved keys) sliced key
+    planes plus scalar counters (the monkeypatch bans in
+    tests/test_rebalance.py hold this).
+
+    Returns ``(ShardedBSTree, stats)`` with ``rebalances`` /
+    ``keys_migrated`` / ``shards_migrated`` / ``shards_rebuilt`` /
+    ``ratio_before`` / ``ratio_after`` and merged ``maintenance``
+    counters."""
+    from .build import StreamBuilder
+    from .maintenance import merge_counters
+
+    policy = policy if policy is not None else RebalancePolicy()
+    counts = shard_key_counts(st)
+    stats = _rebalance_stats(counts)
+    num = st.num_shards
+    total = int(counts.sum())
+    if num < 2 or total < max(int(policy.min_keys), num):
+        return st, stats
+    if not force and stats["ratio_before"] <= policy.max_ratio:
+        return st, stats
+
+    # --- plan: equal-count target fences via device rank-select --------
+    prefix = np.zeros(num + 1, np.int64)
+    prefix[1:] = np.cumsum(counts)
+    bounds = [total * j // num for j in range(num + 1)]
+    ex = _ShardExtracts(st)
+
+    def rank_owner(r: int) -> tuple[int, int]:
+        s = min(int(np.searchsorted(prefix, r, side="right")) - 1, num - 1)
+        return s, int(r - prefix[s])
+
+    fences = join_u64(np.asarray(st.fence_hi),
+                      np.asarray(st.fence_lo)).copy()
+    for j in range(1, num):
+        s, r = rank_owner(bounds[j])
+        fences[j] = ex.key_at(s, r)
+    assert (fences[:-1] < fences[1:]).all(), (
+        "rebalance fence plan not strictly increasing", fences)
+
+    def segments(j: int) -> list:
+        """New shard ``j``'s membership — global ranks [bounds[j],
+        bounds[j+1]) — as (old shard, local rank a, local rank b)."""
+        segs = []
+        a = bounds[j]
+        while a < bounds[j + 1]:
+            s, r = rank_owner(a)
+            b = min(bounds[j + 1], int(prefix[s + 1]))
+            segs.append((s, r, r + (b - a)))
+            a = b
+        return segs
+
+    # keys whose global rank keeps them on their current shard
+    stay = [max(0, min(int(prefix[s + 1]), bounds[s + 1])
+                - max(int(prefix[s]), bounds[s])) for s in range(num)]
+
+    # --- execute: keep / migrate / repack per shard ---------------------
+    spec = st._spec()
+    has_vals = get_backend(st.backend).supports_values
+    parts: list = [None] * num
+    for j in range(num):
+        segs = segments(j)
+        new_cnt = bounds[j + 1] - bounds[j]
+        moved_in = new_cnt - stay[j]
+        moved_out = int(counts[j]) - stay[j]
+        stats["keys_migrated"] += moved_in
+        if moved_in == 0 and moved_out == 0:
+            parts[j] = _shard_tree(st, j)
+            continue
+        churn = (moved_in + moved_out) / max(int(counts[j]), new_cnt, 1)
+        if churn <= policy.migrate_frac:
+            # migrate: this shard's half of the apply_ops pairs — its
+            # donor deletes and receiver inserts, ONE fused dispatch
+            a0 = min(max(bounds[j] - int(prefix[j]), 0), int(counts[j]))
+            b0 = min(max(bounds[j + 1] - int(prefix[j]), 0),
+                     int(counts[j]))
+            del_lo, _ = ex.keys_at(j, 0, a0)
+            del_hi, _ = ex.keys_at(j, b0, int(counts[j]))
+            ins_k, ins_v = [], []
+            for s, a, b in segs:
+                if s == j:
+                    continue
+                k, v = ex.keys_at(s, a, b)
+                ins_k.append(k)
+                ins_v.append(v)
+            dels = np.concatenate([del_lo, del_hi])
+            ins = (np.concatenate(ins_k) if ins_k
+                   else np.zeros(0, np.uint64))
+            ops = np.concatenate(
+                [np.full(len(dels), OP_DELETE, np.int32),
+                 np.full(len(ins), OP_INSERT, np.int32)])
+            keys = np.concatenate([dels, ins])
+            vals = None
+            if has_vals:
+                vals = np.concatenate(
+                    [np.zeros(len(dels), np.uint32)]
+                    + [v for v in ins_v if v is not None]
+                    + [np.zeros(0, np.uint32)])
+            idx = Index(tree=_shard_tree(st, j), backend=st.backend,
+                        spec=spec)
+            idx, res = idx.apply_ops(ops, keys, vals)
+            merge_counters(stats["maintenance"],
+                           res.stats["maintenance"])
+            parts[j] = idx.tree
+            stats["shards_migrated"] += 1
+        else:
+            # repack: stream the new membership's sorted rank segments
+            # (each an O(segment) device slice) through a StreamBuilder
+            builder = StreamBuilder(spec)
+            for s, a, b in segs:
+                k, v = ex.keys_at(s, a, b)
+                builder.feed(k, v if has_vals else None)
+            parts[j] = builder.finalize()
+            stats["shards_rebuilt"] += 1
+
+    fhi, flo = split_u64(fences)
+    st = dataclasses.replace(
+        st, trees=_stack_trees(parts, slack=st.slack),
+        fence_hi=jnp.asarray(fhi), fence_lo=jnp.asarray(flo))
+    stats["rebalances"] = 1
+    stats["maintenance"]["rebalances"] += 1
+    stats["maintenance"]["keys_migrated"] += stats["keys_migrated"]
+    new_counts = np.diff(bounds)
+    stats["ratio_after"] = round(
+        int(new_counts.max()) / max(int(new_counts.min()), 1), 4)
+    return st, stats

@@ -94,6 +94,9 @@ APPLY_STATS_KEYS = frozenset(
 #: structural work, ``host_reencode_leaves`` / ``inner_rows_gathered`` /
 #: ``leaf_rows_gathered`` the (exceptional) host touches; on the normal
 #: insert/delete/compact path ``host_reencode_leaves`` is always 0.
+#: The sharded layer folds its own passes into the same dict:
+#: ``rebalances`` / ``keys_migrated`` count
+#: :func:`repro.core.distributed.rebalance_sharded` work (docs/SHARDING.md).
 INSERT_STATS_KEYS = frozenset(
     {"requested", "inserted", "present", "deferred", "rounds", "maintenance"}
 )

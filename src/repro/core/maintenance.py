@@ -110,6 +110,8 @@ def new_counters() -> dict:
         "inner_device_merges": 0,  # parent rows merged by the jitted pass
         "for_reencode_leaves": 0,  # leaf blocks FOR re-encoded on device
         "host_reencode_leaves": 0,  # leaf blocks re-encoded via host decode
+        "rebalances": 0,           # sharded rebalance passes that acted
+        "keys_migrated": 0,        # keys moved across shard fences
     }
 
 

@@ -25,7 +25,8 @@ Serving core (PR: group-commit redesign):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import threading
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +77,15 @@ class EngineConfig:
     #: hard cap on decode_step compiled-program count (None = no check);
     #: the slot batch is fixed-shape, so steady state is exactly 1
     max_step_compiles: Optional[int] = None
+    #: background maintenance hook (e.g. a sharded-index
+    #: ``rebalance_sharded`` pass, docs/SHARDING.md): invoked off the hot
+    #: path on a daemon thread every ``maintenance_interval`` engine
+    #: steps, with at most one invocation outstanding — a slow pass
+    #: skips ticks instead of queueing.  The return value lands in
+    #: ``ServeEngine.last_maintenance``.
+    maintenance_hook: Optional[Callable[[], object]] = None
+    #: engine steps between maintenance_hook launches (0 = disabled)
+    maintenance_interval: int = 0
 
 
 class ServeEngine:
@@ -100,6 +110,12 @@ class ServeEngine:
         # fused Index.apply_ops dispatch at the next flush point (step /
         # complete), instead of one dispatch per lifecycle event
         self._pending: list[tuple[int, int, int]] = []
+        # background maintenance (cfg.maintenance_hook): launch
+        # bookkeeping only — the hook itself runs on a daemon thread
+        self._steps_since_maint = 0
+        self._maint_thread: Optional[threading.Thread] = None
+        self.maintenance_runs = 0
+        self.last_maintenance: object = None
         self.key = jax.random.key(ecfg.seed)
         self._step = jax.jit(
             lambda p, t, c, pos: decode_step(cfg, p, t, c, pos),
@@ -158,7 +174,11 @@ class ServeEngine:
         return self.outputs.pop(request_id)
 
     def close(self) -> None:
-        """Drain and stop the index writer thread."""
+        """Drain and stop the index writer thread (and wait out any
+        in-flight background maintenance run)."""
+        t = self._maint_thread
+        if t is not None and t.is_alive():
+            t.join()
         self.index.close()
 
     def __enter__(self) -> "ServeEngine":
@@ -184,6 +204,30 @@ class ServeEngine:
                 f"> max_step_compiles={limit} — shape churn in the serving "
                 "loop (the slot batch should be fixed-shape)")
 
+    # -- background maintenance -----------------------------------------
+    def _maybe_maintenance(self) -> None:
+        """Every ``maintenance_interval`` steps, launch the configured
+        hook on a daemon thread.  Hot-path cost is a counter and (rarely)
+        a thread spawn; a still-running pass makes the tick a no-op so
+        at most one invocation is ever outstanding."""
+        hook = self.ecfg.maintenance_hook
+        if hook is None or self.ecfg.maintenance_interval <= 0:
+            return
+        self._steps_since_maint += 1
+        if self._steps_since_maint < self.ecfg.maintenance_interval:
+            return
+        if self._maint_thread is not None and self._maint_thread.is_alive():
+            return  # skip the tick — never queue behind a slow pass
+        self._steps_since_maint = 0
+
+        def run():
+            self.last_maintenance = hook()
+            self.maintenance_runs += 1
+
+        self._maint_thread = threading.Thread(
+            target=run, name="engine-maintenance", daemon=True)
+        self._maint_thread.start()
+
     # -- decoding --------------------------------------------------------
     def step(self) -> dict:
         """One decode step over the whole slot batch (inactive masked).
@@ -194,6 +238,7 @@ class ServeEngine:
         step synchronises on the ticket before touching results."""
         use_async = self.ecfg.async_commit and self.index.writer is not None
         ticket = self._flush(wait=not use_async)
+        self._maybe_maintenance()
         if not self.active.any():
             if isinstance(ticket, CommitTicket):
                 ticket.result()

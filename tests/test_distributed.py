@@ -180,3 +180,52 @@ def test_sharded_maintenance_slack_counters_and_alpha():
         assert abs(occ - st.alpha) < 0.2, (s, occ, st.alpha)
     print('SHARDED SLACK+ALPHA OK')
     """)
+
+
+def test_sharded_lrn_mesh_lookup_and_rebalance():
+    """The learned backend on the mesh path: ``build_sharded`` stacks
+    per-shard FITing fits (probe windows lifted to the fleet max), the
+    SPMD lookup dispatches through the registry, and a rebalanced tree
+    re-placed on the mesh keeps serving exactly."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core import distributed as D
+    from repro.core.layout import split_u64
+
+    rng = np.random.default_rng(13)
+    keys = np.sort(np.unique(rng.integers(1, 2**62, 24000, dtype=np.uint64))[:20000])
+    vals = np.arange(len(keys), dtype=np.uint32)
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    st = D.build_sharded(keys, 4, vals=vals, n=16, backend='lrn')
+    lookup = D.make_sharded_lookup(mesh, capacity_factor=4.0)
+    sh = NamedSharding(mesh, P(('data', 'model')))
+
+    def check(st, qs):
+        stm = D.place_on_mesh(st, mesh, 'model')
+        qh, ql = split_u64(qs)
+        found, got, overflow = map(np.asarray, lookup(
+            stm, jax.device_put(jnp.asarray(qh), sh),
+            jax.device_put(jnp.asarray(ql), sh)))
+        present = np.isin(qs, keys)
+        ok = ~overflow
+        assert ok.mean() > 0.9, f'overflow too high: {1 - ok.mean():.2%}'
+        assert (found[ok] == present[ok]).all()
+        idx = np.clip(np.searchsorted(keys, qs), 0, len(keys) - 1)
+        sel = ok & present
+        assert (np.asarray(got)[sel] == vals[idx][sel]).all()
+
+    qs = np.concatenate([keys[::5], rng.integers(1, 2**62, 4096, dtype=np.uint64)])[:4096]
+    check(st, qs)
+
+    # skew one shard, rebalance, and serve the same queries again
+    fences = np.asarray(st.fence_hi, np.uint64) << np.uint64(32)
+    hot = np.unique(rng.integers(1, int(fences[1]), 30000, dtype=np.uint64))
+    hot = hot[~np.isin(hot, keys)]
+    st2, _ = D.insert_sharded(st, hot, np.zeros(len(hot), np.uint32))
+    st2, stats = D.rebalance_sharded(st2)
+    assert stats['rebalances'] == 1, stats
+    assert stats['ratio_after'] <= 2.0, stats
+    check(st2, qs)
+    print('SHARDED LRN OK')
+    """)

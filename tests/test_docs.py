@@ -1,0 +1,66 @@
+"""Docs lane: the markdown link checker gates README + docs/.
+
+``tools/check_docs_links.py`` is stdlib-only and offline (external URLs
+are never fetched), so this runs in the tier-1 suite and in the CI docs
+lint lane with zero extra deps."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from check_docs_links import check_file, github_slug, main  # noqa: E402
+
+
+def test_repo_docs_are_link_clean():
+    """The shipped doc set (README, ARCHITECTURE, SHARDING) has no
+    broken relative links or dangling anchors — the acceptance bar."""
+    assert main(["check_docs_links", str(ROOT)]) == 0
+
+
+def test_docs_set_is_complete():
+    for f in ("README.md", "docs/ARCHITECTURE.md", "docs/SHARDING.md"):
+        assert (ROOT / f).exists(), f
+
+
+def test_checker_flags_broken_links(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "# Title\n\n## Real section\n"
+        "[ok](docs/a.md) [bad](docs/missing.md)\n"
+        "[ok-anchor](#real-section) [bad-anchor](#nope)\n"
+        "[ok-x-file](docs/a.md#sub-part) [bad-x-file](docs/a.md#absent)\n"
+        "```\n[in a fence, ignored](docs/nonexistent.md)\n```\n"
+        "[external, never fetched](https://example.invalid/x)\n")
+    (tmp_path / "docs" / "a.md").write_text("# A\n\n## Sub part\n")
+    errors = check_file(tmp_path / "README.md", tmp_path)
+    assert len(errors) == 3
+    joined = "\n".join(errors)
+    assert "missing.md" in joined
+    assert "#nope" in joined and "#absent" in joined
+    assert "nonexistent" not in joined and "example.invalid" not in joined
+    assert main(["check_docs_links", str(tmp_path)]) == 1
+
+
+@pytest.mark.parametrize("heading,slug", [
+    ("Host transfer budget", "host-transfer-budget"),
+    ("The public API: one `Index`, pluggable backends",
+     "the-public-api-one-index-pluggable-backends"),
+    ("Rebalancing: `rebalance_sharded(st, policy)`",
+     "rebalancing-rebalance_shardedst-policy"),
+])
+def test_github_slugification(heading, slug):
+    assert github_slug(heading) == slug
+
+
+def test_checker_cli_entrypoint():
+    """The CI lane invokes the script as a subprocess — keep that
+    contract (exit 0 on the real repo, summary line on stdout)."""
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs_links.py"),
+         str(ROOT)], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout

@@ -32,6 +32,8 @@ from repro.core import (
     ReferenceBSTree,
     registered_backends,
 )
+from repro.core import distributed as D
+from repro.core.layout import join_u64
 
 try:
     import hypothesis  # noqa: F401
@@ -210,6 +212,103 @@ def test_differential_random_walk(backend):
 
 
 # ---------------------------------------------------------------------------
+# Sharded differential walk (insert / delete / rebalance interleaved)
+# ---------------------------------------------------------------------------
+
+#: a permissive policy so short fuzz walks actually trip the rebalance
+FUZZ_POLICY = D.RebalancePolicy(max_ratio=1.2, migrate_frac=0.5,
+                                min_keys=8)
+
+
+class ShardedDifferential:
+    """4-shard index + model dict, mutated in lockstep.  ``rebalance``
+    interleaves anywhere in the walk; ``check`` proves conservation (the
+    shard-order key concatenation IS the sorted model) and that every
+    key routes to the shard that actually holds it."""
+
+    SHARDS = 4
+
+    def __init__(self, backend: str, seed_keys):
+        seed_keys = np.unique(np.asarray(seed_keys, np.uint64))
+        self.st = D.build_sharded(seed_keys, self.SHARDS, n=N,
+                                  backend=backend, slack=1.25)
+        self.model = {int(k): int(k) & 0xFFFFFFFF for k in seed_keys}
+
+    def insert(self, ks):
+        ks = _pad(ks)
+        self.st, stats = D.insert_sharded(self.st, ks)
+        for k in np.unique(ks):
+            self.model[int(k)] = int(k) & 0xFFFFFFFF
+        assert (stats["inserted"] + stats["present"]
+                <= stats["requested"]), stats
+
+    def delete(self, ks):
+        ks = _pad(ks)
+        self.st, deleted = D.delete_sharded(self.st, ks)
+        want = sum(self.model.pop(int(k), None) is not None
+                   for k in np.unique(ks))
+        assert deleted == want, (deleted, want)
+
+    def rebalance(self, force: bool):
+        self.st, stats = D.rebalance_sharded(self.st, FUZZ_POLICY,
+                                             force=force)
+        assert stats["ratio_after"] <= max(stats["ratio_before"], 1.0)
+
+    def check(self):
+        ks = []
+        fences = join_u64(np.asarray(self.st.fence_hi),
+                          np.asarray(self.st.fence_lo))
+        for s in range(self.SHARDS):
+            idx = Index(tree=D._shard_tree(self.st, s),
+                        backend=self.st.backend, spec=self.st._spec())
+            sk, _ = idx.items()
+            sk = np.asarray(sk, np.uint64)
+            # every key sits inside its shard's fence range
+            assert (sk >= fences[s]).all(), s
+            if s + 1 < self.SHARDS and len(sk):
+                assert (sk < fences[s + 1]).all(), s
+            idx.check_invariants()
+            ks.append(sk)
+        ks = np.concatenate(ks)
+        assert ks.tolist() == sorted(self.model), (
+            "sharded key set diverged from the model")
+        assert int(D.shard_key_counts(self.st).sum()) == len(self.model)
+
+
+def _sharded_walk(backend: str, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    d = ShardedDifferential(backend, rng.choice(POOL, 40, replace=False))
+    for step in range(steps):
+        op = int(rng.integers(0, 8))
+        if op < 4:
+            # skewed inserts: a narrow hot slice of the pool, so shard
+            # imbalance (the rebalance trigger) actually develops
+            base = int(rng.integers(0, len(POOL) - 80))
+            d.insert(rng.choice(POOL[base:base + 80],
+                                int(rng.integers(1, BATCH + 1)),
+                                replace=False))
+        elif op < 6:
+            d.delete(rng.choice(POOL, int(rng.integers(1, BATCH + 1)),
+                                replace=False))
+        else:
+            d.rebalance(force=bool(op % 2))
+        d.check()
+    return d
+
+
+def test_sharded_smoke_walk():
+    """Fast-lane smoke: a short sharded walk with rebalances in it."""
+    _sharded_walk("bs", steps=10, seed=3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ("bs", "cbs", "lrn"))
+def test_sharded_random_walk(backend):
+    _sharded_walk(backend, steps=40,
+                  seed={"bs": 55, "cbs": 66, "lrn": 77}[backend])
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis stateful battery (shrinking-friendly)
 # ---------------------------------------------------------------------------
 
@@ -280,3 +379,39 @@ if HAS_HYPOTHESIS:
         machine = type(f"IndexMachine_{backend}", (IndexMachine,),
                        {"backend": backend})
         run_state_machine_as_test(machine, settings=FUZZ_SETTINGS)
+
+    class ShardedMachine(RuleBasedStateMachine):
+        """Sharded walk with the ``rebalance`` rule interleaved — the
+        repartition must commute with any insert/delete order."""
+
+        backend: str = "bs"
+
+        def __init__(self):
+            super().__init__()
+            self.d = ShardedDifferential(
+                self.backend, POOL[[0, 10, 40, 200, 600, 900]])
+
+        @rule(ks=KEYS)
+        def insert(self, ks):
+            self.d.insert(np.asarray(ks, np.uint64))
+
+        @rule(ks=KEYS)
+        def delete(self, ks):
+            self.d.delete(np.asarray(ks, np.uint64))
+
+        @rule(force=st.booleans())
+        def rebalance(self, force):
+            self.d.rebalance(force)
+
+        @invariant()
+        def matches_model(self):
+            self.d.check()
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("backend", ("bs", "cbs", "lrn"))
+    def test_sharded_state_machine(backend):
+        machine = type(f"ShardedMachine_{backend}", (ShardedMachine,),
+                       {"backend": backend})
+        run_state_machine_as_test(
+            machine,
+            settings=settings(FUZZ_SETTINGS, max_examples=60))

@@ -181,3 +181,52 @@ def test_persistent_compilation_cache(tmp_path):
     finally:
         jax.config.update("jax_compilation_cache_dir", old_dir)
         comp._cache_dir = old_state
+
+
+def test_engine_background_maintenance_hook():
+    """EngineConfig.maintenance_hook fires every maintenance_interval
+    steps on a daemon thread, with at most one run outstanding; the
+    result of the latest pass lands in ``last_maintenance``."""
+    import threading
+
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    params = init_lm(cfg, jax.random.key(2))
+    calls = []
+    gate = threading.Event()
+
+    def hook():
+        calls.append(1)
+        gate.wait(timeout=30)
+        return {"pass": len(calls)}
+
+    ecfg = EngineConfig(slots=2, ctx=16, page_size=4,
+                        maintenance_hook=hook, maintenance_interval=2)
+    with ServeEngine(cfg, params, ecfg) as eng:
+        assert eng.admit(31, prompt_token=4)
+        eng.step()
+        assert eng.maintenance_runs == 0  # below interval: no launch
+        eng.step()  # tick 2: hook launches (and blocks on the gate)
+        for _ in range(4):
+            eng.step()  # in-flight pass: ticks are skipped, not queued
+        assert len(calls) == 1
+        gate.set()
+        eng._maint_thread.join(timeout=30)
+        assert eng.maintenance_runs == 1
+        assert eng.last_maintenance == {"pass": 1}
+        eng.step()
+        eng.step()  # interval elapsed again -> second launch
+        eng._maint_thread.join(timeout=30)
+        assert eng.maintenance_runs == 2
+        assert len(eng.complete(31)) == 8
+
+
+def test_engine_maintenance_disabled_by_default():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    params = init_lm(cfg, jax.random.key(3))
+    with ServeEngine(cfg, params,
+                     EngineConfig(slots=2, ctx=16, page_size=4)) as eng:
+        assert eng.admit(41, prompt_token=1)
+        for _ in range(3):
+            eng.step()
+        assert eng.maintenance_runs == 0 and eng._maint_thread is None
+        assert len(eng.complete(41)) == 3

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs lint lane — stdlib only.
+
+Scans README.md plus every ``docs/*.md`` for inline links/images and
+verifies, repo-locally and offline:
+
+* relative file targets exist (``docs/SHARDING.md``, ``../README.md``);
+* fragment targets (``FILE.md#section`` or in-page ``#section``)
+  resolve to a real heading under GitHub's anchor slugification;
+* no link target is empty.
+
+External ``http(s):``/``mailto:`` targets are *not* fetched — CI must
+not flake on the network — only recorded.  Exit code 1 with one line
+per broken link, 0 when clean.
+
+    python tools/check_docs_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline [text](target) and ![alt](target); stops at the first ')' —
+# the docs don't use nested-paren URLs
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+
+
+def _strip_fences(text: str) -> list[str]:
+    """Lines outside fenced code blocks (links in code are examples)."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            fenced = not fenced
+            continue
+        out.append("" if fenced else line)
+    return out
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: inline code/formatting dropped, lowercase,
+    spaces to hyphens, everything else non-alphanumeric removed."""
+    # formatting markers drop; underscores are word chars and survive
+    h = re.sub(r"[`*]", "", heading.strip().lower())
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)  # linked headings
+    h = h.replace(" ", "-")
+    return re.sub(r"[^\w-]", "", h)
+
+
+def _anchors(md: Path) -> set:
+    return {github_slug(m.group(1))
+            for line in _strip_fences(md.read_text())
+            if (m := _HEADING.match(line))}
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors = []
+    for line in _strip_fences(md.read_text()):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            where = f"{md.relative_to(root)}: ({target})"
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue  # external: recorded, never fetched in CI
+            if not target.strip("#"):
+                errors.append(f"{where} empty link target")
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if not dest.exists():
+                errors.append(f"{where} missing file {path_part}")
+                continue
+            if frag:
+                if dest.suffix != ".md":
+                    errors.append(f"{where} fragment on non-markdown file")
+                elif frag not in _anchors(dest):
+                    errors.append(f"{where} no heading for #{frag} "
+                                  f"in {dest.name}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1] if len(argv) > 1 else ".").resolve()
+    files = sorted([root / "README.md", *(root / "docs").glob("*.md")])
+    missing = [f for f in files if not f.exists()]
+    errors = [f"missing doc file: {f}" for f in missing]
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md, root))
+    for e in errors:
+        print(f"BROKEN {e}", file=sys.stderr)
+    n = len(files) - len(missing)
+    print(f"checked {n} markdown file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
